@@ -1,0 +1,73 @@
+"""§Perf — engine hillclimb iterations (the paper's own technique).
+
+Each entry is one hypothesis -> change -> measure cycle on the stats
+collector (see EXPERIMENTS.md §Perf for the narrative):
+
+  P1 probe_rounds 16 -> 8   (hash probe gathers dominate the update pass)
+  P2 micro-batch size sweep (amortize fixed dispatch/sort overheads)
+  P3 session window 5 -> 3  (pair volume ~ W; quality/coverage tradeoff)
+  P4 fused kernels          (decay sweep + scoring fusions; structural on
+                             TPU, measured in interpret mode here)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineConfig, init_state, ingest_queries
+from repro.core.hashing import split_fp
+from repro.data.stream import StreamConfig, SyntheticStream
+from .common import Row, time_fn
+
+
+def _measure(ecfg: EngineConfig, batch: int, seed=0) -> float:
+    stream = SyntheticStream(StreamConfig(vocab_size=4096,
+                                          queries_per_tick=batch,
+                                          tweets_per_tick=0), seed=seed)
+    state = init_state(ecfg)
+    for t in range(3):   # warm the tables
+        ev, _ = stream.gen_tick(t)
+        sh, sl = split_fp(ev.sess_fp)
+        qh, ql = split_fp(ev.q_fp)
+        state = ingest_queries(state, jnp.asarray(sh), jnp.asarray(sl),
+                               jnp.asarray(qh), jnp.asarray(ql),
+                               jnp.asarray(ev.src, jnp.int32),
+                               jnp.asarray(ev.valid), cfg=ecfg)
+    ev, _ = stream.gen_tick(5)
+    sh, sl = split_fp(ev.sess_fp)
+    qh, ql = split_fp(ev.q_fp)
+    args = (jnp.asarray(sh), jnp.asarray(sl), jnp.asarray(qh),
+            jnp.asarray(ql), jnp.asarray(ev.src, jnp.int32),
+            jnp.asarray(ev.valid))
+    return time_fn(lambda s: ingest_queries(s, *args, cfg=ecfg), state)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    base = EngineConfig(query_capacity=1 << 15, cooc_capacity=1 << 17,
+                        session_capacity=1 << 14)
+
+    # P1: probe rounds
+    t16 = _measure(base, 4096)
+    t8 = _measure(dataclasses.replace(base, probe_rounds=8), 4096)
+    st8 = init_state(dataclasses.replace(base, probe_rounds=8))
+    rows.append(("perf_P1_probe16", t16, f"{4096/(t16/1e6):,.0f} ev/s baseline"))
+    rows.append(("perf_P1_probe8", t8,
+                 f"{4096/(t8/1e6):,.0f} ev/s; x{t16/max(t8,1e-9):.2f} "
+                 f"(drops must stay 0 at <=50% load)"))
+
+    # P2: micro-batch size (fixed total events)
+    for b in (1024, 4096, 16384):
+        t = _measure(base, b)
+        rows.append((f"perf_P2_batch{b}", t,
+                     f"{b/(t/1e6):,.0f} ev/s ({t/b:.1f} us/event)"))
+
+    # P3: session window
+    for w in (5, 3):
+        t = _measure(dataclasses.replace(base, session_window=w), 4096)
+        rows.append((f"perf_P3_window{w}", t,
+                     f"{4096/(t/1e6):,.0f} ev/s (pairs/event ~ {w})"))
+    return rows

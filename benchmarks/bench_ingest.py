@@ -1,0 +1,62 @@
+"""C4 (§4.2-4.4): stats-collector ingest throughput.
+
+The paper's bottleneck analysis: "each instance must consume the entire
+firehose and query hose ... CPU is not a limiting resource". We measure
+device events/sec for the query path and tweet path at the production
+micro-batch size, plus the decay/prune cycle (fused Pallas vs 3-pass jnp).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineConfig, SearchAssistanceEngine, \
+    ingest_queries, ingest_tweets, decay_cycle, init_state
+from repro.core.hashing import split_fp
+from repro.data.stream import StreamConfig, SyntheticStream
+from .common import Row, time_fn
+
+
+def run() -> List[Row]:
+    cfg = EngineConfig(query_capacity=1 << 15, cooc_capacity=1 << 17,
+                       session_capacity=1 << 14)
+    scfg = StreamConfig(vocab_size=4096, queries_per_tick=4096,
+                        tweets_per_tick=256, tweet_grams=8)
+    stream = SyntheticStream(scfg, seed=0)
+    state = init_state(cfg)
+    ev, tw = stream.gen_tick(0)
+    s_hi, s_lo = split_fp(ev.sess_fp)
+    q_hi, q_lo = split_fp(ev.q_fp)
+    g_hi, g_lo = split_fp(tw.grams)
+    args_q = (jnp.asarray(s_hi), jnp.asarray(s_lo), jnp.asarray(q_hi),
+              jnp.asarray(q_lo), jnp.asarray(ev.src, jnp.int32),
+              jnp.asarray(ev.valid))
+    # warm the state so tables aren't empty
+    for t in range(3):
+        e2, t2 = stream.gen_tick(t + 1)
+        sh, sl = split_fp(e2.sess_fp)
+        qh, ql = split_fp(e2.q_fp)
+        state = ingest_queries(state, jnp.asarray(sh), jnp.asarray(sl),
+                               jnp.asarray(qh), jnp.asarray(ql),
+                               jnp.asarray(e2.src, jnp.int32),
+                               jnp.asarray(e2.valid), cfg=cfg)
+
+    t_q = time_fn(lambda s: ingest_queries(s, *args_q, cfg=cfg), state)
+    t_t = time_fn(lambda s: ingest_tweets(s, jnp.asarray(g_hi),
+                                          jnp.asarray(g_lo),
+                                          jnp.asarray(tw.valid), cfg=cfg), state)
+    t_d_jnp = time_fn(lambda s: decay_cycle(s, jnp.int32(6), cfg=cfg)[0], state)
+    cfg_k = dataclasses.replace(cfg, use_kernel=True)
+    t_d_ker = time_fn(lambda s: decay_cycle(s, jnp.int32(6), cfg=cfg_k)[0], state)
+
+    B, T = scfg.queries_per_tick, scfg.tweets_per_tick
+    return [
+        ("ingest_query_path", t_q, f"{B / (t_q / 1e6):,.0f} events/s/device"),
+        ("ingest_tweet_path", t_t, f"{T / (t_t / 1e6):,.0f} tweets/s/device"),
+        ("decay_prune_jnp", t_d_jnp, "3-pass jnp sweep"),
+        ("decay_prune_pallas", t_d_ker,
+         f"fused kernel (interpret); speedup x{t_d_jnp / max(t_d_ker, 1e-9):.2f}"),
+    ]

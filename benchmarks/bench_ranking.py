@@ -1,0 +1,66 @@
+"""C4 (§4.3 "Ranking cycles"): full ranking-cycle cost vs store size, and
+the fused association-scoring kernel vs the jnp path."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ranking, stores
+from repro.core.hashing import split_fp
+from repro.core.ranking import RankConfig
+from .common import Row, time_fn
+
+
+def _filled_stores(n_pairs: int, n_queries: int, seed=0):
+    rng = np.random.default_rng(seed)
+    q = stores.make_table(max(n_queries * 4, 1024), {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32})
+    qf = (rng.integers(1, 2**63, n_queries).astype(np.uint64)) | 1
+    qh, ql = split_fp(qf)
+    q = stores.insert_accumulate(
+        q, jnp.asarray(qh), jnp.asarray(ql),
+        {"weight": jnp.asarray(rng.random(n_queries, np.float32) * 50 + 1),
+         "count": jnp.asarray(np.floor(rng.random(n_queries) * 100 + 1).astype(np.float32)),
+         "last_tick": jnp.zeros(n_queries, jnp.int32)},
+        jnp.ones(n_queries, bool),
+        modes=(("weight", "add"), ("count", "add"), ("last_tick", "set")))
+    c = stores.make_table(max(n_pairs * 4, 1024), {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
+        "src_hi": jnp.uint32, "src_lo": jnp.uint32,
+        "dst_hi": jnp.uint32, "dst_lo": jnp.uint32})
+    a = qf[rng.integers(0, n_queries, n_pairs)]
+    b = qf[rng.integers(0, n_queries, n_pairs)]
+    from repro.core.hashing import combine_fp_np
+    ah, al = split_fp(a)
+    bh, bl = split_fp(b)
+    ph, pl = combine_fp_np(ah, al, bh, bl)
+    c = stores.insert_accumulate(
+        c, jnp.asarray(ph), jnp.asarray(pl),
+        {"weight": jnp.asarray(rng.random(n_pairs, np.float32) * 5 + 0.5),
+         "count": jnp.asarray(np.floor(rng.random(n_pairs) * 20 + 1).astype(np.float32)),
+         "last_tick": jnp.zeros(n_pairs, jnp.int32),
+         "src_hi": jnp.asarray(ah), "src_lo": jnp.asarray(al),
+         "dst_hi": jnp.asarray(bh), "dst_lo": jnp.asarray(bl)},
+        jnp.ones(n_pairs, bool),
+        modes=(("weight", "add"), ("count", "add"), ("last_tick", "set"),
+               ("src_hi", "set"), ("src_lo", "set"),
+               ("dst_hi", "set"), ("dst_lo", "set")))
+    return q, c
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for n_pairs in (8192, 65536):
+        q, c = _filled_stores(n_pairs, 2048)
+        cfg = RankConfig()
+        t = time_fn(lambda: ranking.ranking_cycle(c, q, cfg))
+        rows.append((f"ranking_cycle_{n_pairs}p", t,
+                     f"{n_pairs / (t / 1e6):,.0f} pairs/s"))
+        cfg_k = dataclasses.replace(cfg, use_kernel=True)
+        t_k = time_fn(lambda: ranking.ranking_cycle(c, q, cfg_k))
+        rows.append((f"ranking_cycle_{n_pairs}p_pallas", t_k,
+                     f"fused scoring; x{t / max(t_k, 1e-9):.2f}"))
+    return rows

@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: timing + result rows."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def fmt_rows(rows: List[Row]) -> str:
+    return "\n".join(f"{n},{t:.1f},{d}" for n, t, d in rows)

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/claim (see DESIGN.md §0).
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run              # all
+  PYTHONPATH=src python -m benchmarks.run churn latency  # subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+BENCHES = ["churn", "ingest", "latency", "ranking", "spelling",
+           "memory_coverage", "engine_perf", "roofline"]
+
+
+def main() -> None:
+    names = sys.argv[1:] or BENCHES
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        mod_name = f"benchmarks.bench_{name}"
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},nan,ERROR: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# bench_{name} took {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

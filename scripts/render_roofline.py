@@ -1,0 +1,30 @@
+"""Render dry-run JSON results as the EXPERIMENTS.md roofline tables."""
+import json
+import sys
+
+
+def render(path: str, mesh: str = "16x16") -> str:
+    with open(path) as f:
+        data = json.load(f)
+    rows = [r for r in data if r.get("mesh") == mesh]
+    out = ["| arch/shape | bound | frac | useful | tC (s) | tM (s) | tX (s) | peak GB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        name = f"{r['arch']}/{r['shape']}"
+        if r["status"] == "skipped":
+            out.append(f"| {name} | — | — | — | — | — | — | skip |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {name} | ERROR | | | | | | |")
+            continue
+        mem = (r.get("memory_per_device") or {}).get("peak_bytes") or 0
+        out.append(
+            f"| {name} | {r['bottleneck']} | {r['roofline_fraction']:.3f} "
+            f"| {r['useful_flops_ratio']:.3f} | {r['t_compute_s']:.2e} "
+            f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+            f"| {mem / 1e9:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1], sys.argv[2] if len(sys.argv) > 2 else "16x16"))

@@ -1,0 +1,80 @@
+"""Background models + serve-time interpolation (paper §4.5).
+
+"The first [mechanism] involves running the same search assistance backend,
+except over data spanning much longer periods of time, but with different
+parameter settings (decay, pruning, etc.)" — we instantiate a second engine
+with a slow decay config and a lower ranking cadence; the frontend
+interpolates its suggestions with the real-time engine's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .decay import DecayConfig
+from .engine import EngineConfig, SearchAssistanceEngine
+from .ranking import RankConfig
+
+
+def background_config(rt_cfg: EngineConfig, *, half_life_mult: float = 24.0,
+                      rank_every_mult: int = 12) -> EngineConfig:
+    """Derive the slow-moving background config from the real-time one."""
+    slow_decay = dataclasses.replace(
+        rt_cfg.decay,
+        half_life_ticks=rt_cfg.decay.half_life_ticks * half_life_mult,
+        prune_threshold=rt_cfg.decay.prune_threshold * 0.5,
+    )
+    return dataclasses.replace(
+        rt_cfg,
+        decay=slow_decay,
+        rank_every=rt_cfg.rank_every * rank_every_mult,
+        decay_every=rt_cfg.decay_every * 4,
+    )
+
+
+def interpolate(
+    rt: Dict[int, List[Tuple[int, float]]],
+    bg: Dict[int, List[Tuple[int, float]]],
+    alpha: float = 0.7,
+    k: int = 8,
+) -> Dict[int, List[Tuple[int, float]]]:
+    """Frontend interpolation of real-time and background suggestion tables.
+
+    score = alpha * rt + (1 - alpha) * bg, union over candidates.
+    """
+    out: Dict[int, List[Tuple[int, float]]] = {}
+    for src in set(rt) | set(bg):
+        merged: Dict[int, float] = {}
+        for dst, s in rt.get(src, []):
+            merged[dst] = merged.get(dst, 0.0) + alpha * s
+        for dst, s in bg.get(src, []):
+            merged[dst] = merged.get(dst, 0.0) + (1.0 - alpha) * s
+        ranked = sorted(merged.items(), key=lambda t: (-t[1], t[0]))[:k]
+        if ranked:
+            out[src] = ranked
+    return out
+
+
+class AssistanceService:
+    """Real-time engine + background engine + interpolating frontend."""
+
+    def __init__(self, rt_cfg: EngineConfig, alpha: float = 0.7,
+                 bg_cfg: Optional[EngineConfig] = None):
+        self.rt = SearchAssistanceEngine(rt_cfg, name="rt")
+        self.bg = SearchAssistanceEngine(bg_cfg or background_config(rt_cfg),
+                                         name="bg")
+        self.alpha = alpha
+        self._cache: Dict[int, List[Tuple[int, float]]] = {}
+
+    def step(self, query_events=None, tweets=None) -> None:
+        r1 = self.rt.step(query_events, tweets)
+        r2 = self.bg.step(query_events, tweets)
+        if r1 is not None or r2 is not None:
+            self.refresh_cache()
+
+    def refresh_cache(self) -> None:
+        self._cache = interpolate(self.rt.suggestions, self.bg.suggestions,
+                                  self.alpha)
+
+    def suggest_fp(self, fp: int, k: int = 8) -> List[Tuple[int, float]]:
+        return self._cache.get(int(fp), [])[:k]

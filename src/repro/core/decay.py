@@ -1,0 +1,109 @@
+"""Temporal decay of accumulated statistics (paper §2.4, §4.3).
+
+The paper decays observed counts over time so that correlation statistics
+gradually forget stale evidence, and prunes entries whose weight falls under
+a threshold to bound the memory footprint (§4.4). Decay function choices
+(exponential / linear / step) are all supported; exponential is the default.
+
+Two execution policies:
+
+  * ``sweep``  — paper-faithful periodic decay cycle: one full pass over the
+    table multiplying every weight lane and clearing pruned slots. This is a
+    purely memory-bound pass and is the target of the fused Pallas kernel in
+    ``kernels/decay_prune.py`` (one HBM read+write instead of three).
+  * ``lazy``   — beyond-paper: store ``last_tick`` per entry and apply
+    ``w * factor(now - last_tick)`` at read time; the sweep then only needs
+    to run for pruning at a much lower cadence. Turns O(capacity) work per
+    cycle into O(touched entries).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .stores import HashTable
+
+EXP, LINEAR, STEP = "exp", "linear", "step"
+
+
+@dataclasses.dataclass(frozen=True)
+class DecayConfig:
+    kind: str = EXP            # exp | linear | step
+    half_life_ticks: float = 36.0   # exp: ticks to halve a weight
+    linear_slope: float = 0.01      # linear: weight lost per tick
+    step_every: int = 72            # step: every N ticks ...
+    step_factor: float = 0.5        # ... multiply by this
+    prune_threshold: float = 0.05   # drop entries below this weight
+    policy: str = "sweep"           # sweep | lazy
+
+    def factor(self, dticks) -> jax.Array:
+        """Multiplicative decay factor for an elapsed number of ticks."""
+        dt = jnp.asarray(dticks, jnp.float32)
+        if self.kind == EXP:
+            return jnp.exp2(-dt / self.half_life_ticks)
+        if self.kind == LINEAR:
+            # linear decay of the *fraction* retained, floored at 0
+            return jnp.maximum(1.0 - self.linear_slope * dt, 0.0)
+        if self.kind == STEP:
+            return self.step_factor ** jnp.floor(dt / self.step_every)
+        raise ValueError(self.kind)
+
+    def factor_py(self, dticks: float) -> float:
+        if self.kind == EXP:
+            return 2.0 ** (-dticks / self.half_life_ticks)
+        if self.kind == LINEAR:
+            return max(1.0 - self.linear_slope * dticks, 0.0)
+        if self.kind == STEP:
+            return self.step_factor ** math.floor(dticks / self.step_every)
+        raise ValueError(self.kind)
+
+
+@partial(jax.jit, static_argnames=("weight_lanes", "cfg", "use_kernel"))
+def sweep_decay_prune(
+    table: HashTable,
+    dticks: jax.Array,
+    *,
+    cfg: DecayConfig,
+    weight_lanes: Tuple[str, ...] = ("weight",),
+    use_kernel: bool = False,
+) -> Tuple[HashTable, jax.Array, jax.Array]:
+    """Paper-faithful decay/prune cycle over the whole table.
+
+    Returns (table, live_count, total_weight-after). ``use_kernel`` routes the
+    fused pass through the Pallas kernel (see kernels/ops.py); the jnp path
+    below is the reference semantics.
+    """
+    if use_kernel:
+        from ..kernels import ops as kops
+        return kops.decay_prune_table(table, dticks, cfg=cfg, weight_lanes=weight_lanes)
+
+    f = cfg.factor(dticks)
+    lanes = dict(table.lanes)
+    primary = weight_lanes[0]
+    decayed = {name: lanes[name] * f for name in weight_lanes}
+    live = table.live_mask
+    keep = live & (decayed[primary] >= cfg.prune_threshold)
+    for name in weight_lanes:
+        lanes[name] = jnp.where(keep, decayed[name], 0.0)
+    # clear every other lane on pruned slots so reuse starts clean
+    for name, lane in lanes.items():
+        if name not in weight_lanes:
+            keep_b = keep.reshape(keep.shape + (1,) * (lane.ndim - 1))
+            lanes[name] = jnp.where(keep_b, lane, jnp.zeros_like(lane))
+    new = table._replace(
+        key_hi=jnp.where(keep, table.key_hi, 0),
+        key_lo=jnp.where(keep, table.key_lo, 0),
+        lanes=lanes,
+    )
+    return new, jnp.sum(keep.astype(jnp.int32)), jnp.sum(lanes[primary])
+
+
+def lazy_decayed(cfg: DecayConfig, weight: jax.Array, last_tick: jax.Array,
+                 now: jax.Array) -> jax.Array:
+    """Read-time decayed view of a weight lane under the lazy policy."""
+    return weight * cfg.factor(jnp.maximum(now - last_tick, 0))

@@ -1,0 +1,269 @@
+"""The search assistance engine (paper §4.2–§4.3).
+
+Each backend instance consists of
+  * the **stats collector** — consumes the query hose and the firehose
+    (here: micro-batched event arrays from ``data/stream.py``),
+  * three **in-memory stores** (``stores.py``),
+  * **rankers** — periodic ranking cycles over the stores (``ranking.py``),
+plus the periodic **decay/prune cycles** and persistence hooks.
+
+The data flow mirrors §4.3 exactly:
+
+Query path (per query event):
+  1. query statistics store: raw count + source-weighted score update,
+  2. sessions store: append to the session's sliding window,
+  3. a cooccurrence is formed with each previous query in the session.
+
+Tweet path (per tweet): n-grams that are "query-like" (observed often enough
+as standalone queries) are processed like the query path, with the tweet
+itself as the session (all ordered pairs among its query-like n-grams).
+
+Decay/prune cycles and ranking cycles run at configurable tick cadences.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ranking, stores
+from .decay import DecayConfig, sweep_decay_prune
+from .hashing import combine_fp_device, split_fp
+from .ranking import RankConfig, SuggestionTable
+from .stores import HashTable, SessionTable
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    # store capacities (powers of two)
+    query_capacity: int = 1 << 16
+    cooc_capacity: int = 1 << 18
+    session_capacity: int = 1 << 15
+    session_window: int = 5
+    probe_rounds: int = 16
+    # source weighting (paper §4.2: typed > related click > hashtag click)
+    source_weights: Tuple[float, ...] = (1.0, 0.5, 0.7)
+    tweet_weight: float = 0.25
+    min_querylike_count: float = 3.0   # tweet n-gram must be a real query
+    max_tweet_grams: int = 16
+    # cycles (in ticks; a tick is one micro-batch ~ cfg.tick_seconds of data)
+    decay_every: int = 6
+    rank_every: int = 30               # ~5 sim-minutes at 10 s ticks (§2.3)
+    session_ttl: int = 360
+    decay: DecayConfig = DecayConfig()
+    rank: RankConfig = RankConfig()
+    use_kernel: bool = False           # fused Pallas decay/prune + scoring
+
+
+class EngineState(NamedTuple):
+    qstore: HashTable
+    cooc: HashTable
+    sessions: SessionTable
+    tick: jax.Array  # i32
+
+
+def init_state(cfg: EngineConfig) -> EngineState:
+    qstore = stores.make_table(cfg.query_capacity, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
+    })
+    cooc = stores.make_table(cfg.cooc_capacity, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
+        "src_hi": jnp.uint32, "src_lo": jnp.uint32,
+        "dst_hi": jnp.uint32, "dst_lo": jnp.uint32,
+    })
+    sessions = stores.make_session_table(cfg.session_capacity, cfg.session_window)
+    return EngineState(qstore, cooc, sessions, jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# jitted step functions
+# ---------------------------------------------------------------------------
+
+_Q_MODES = (("weight", "add"), ("count", "add"), ("last_tick", "set"))
+_C_MODES = (("weight", "add"), ("count", "add"), ("last_tick", "set"),
+            ("src_hi", "set"), ("src_lo", "set"),
+            ("dst_hi", "set"), ("dst_lo", "set"))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ingest_queries(
+    state: EngineState,
+    sess_hi: jax.Array, sess_lo: jax.Array,
+    q_hi: jax.Array, q_lo: jax.Array,
+    src: jax.Array, valid: jax.Array,
+    *, cfg: EngineConfig,
+) -> EngineState:
+    """The query path of §4.3 for one micro-batch."""
+    sw = jnp.asarray(cfg.source_weights, jnp.float32)
+    w = sw[jnp.clip(src, 0, len(cfg.source_weights) - 1)]
+    B = q_hi.shape[0]
+    tick_vec = jnp.full((B,), state.tick, jnp.int32)
+
+    qstore = stores.insert_accumulate(
+        state.qstore, q_hi, q_lo,
+        {"weight": w, "count": jnp.ones((B,), jnp.float32), "last_tick": tick_vec},
+        valid, modes=_Q_MODES, probe_rounds=cfg.probe_rounds)
+
+    sessions, pairs = stores.update_sessions(
+        state.sessions, sess_hi, sess_lo, q_hi, q_lo, src, state.tick, valid,
+        probe_rounds=cfg.probe_rounds)
+
+    # pair weight: geometric mean of the two interaction-source weights
+    w_src = sw[jnp.clip(pairs.src_code, 0, len(cfg.source_weights) - 1)]
+    w_dst = sw[jnp.clip(pairs.dst_code, 0, len(cfg.source_weights) - 1)]
+    w_pair = jnp.sqrt(w_src * w_dst)
+    p_hi, p_lo = combine_fp_device(pairs.src_hi, pairs.src_lo,
+                                   pairs.dst_hi, pairs.dst_lo)
+    P = p_hi.shape[0]
+    cooc = stores.insert_accumulate(
+        state.cooc, p_hi, p_lo,
+        {"weight": w_pair, "count": jnp.ones((P,), jnp.float32),
+         "last_tick": jnp.full((P,), state.tick, jnp.int32),
+         "src_hi": pairs.src_hi, "src_lo": pairs.src_lo,
+         "dst_hi": pairs.dst_hi, "dst_lo": pairs.dst_lo},
+        pairs.valid, modes=_C_MODES, probe_rounds=cfg.probe_rounds)
+
+    return EngineState(qstore, cooc, sessions, state.tick)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ingest_tweets(
+    state: EngineState,
+    g_hi: jax.Array, g_lo: jax.Array,   # [T, G]
+    valid: jax.Array,                    # [T]
+    *, cfg: EngineConfig,
+) -> EngineState:
+    """The tweet path of §4.3 for one micro-batch of tweets."""
+    T, G = g_hi.shape
+    flat_hi, flat_lo = g_hi.reshape(-1), g_lo.reshape(-1)
+    vals, found, _ = stores.lookup(state.qstore, flat_hi, flat_lo,
+                                   probe_rounds=cfg.probe_rounds)
+    querylike = (found & (vals["count"] >= cfg.min_querylike_count)
+                 & valid[:, None].repeat(G, 1).reshape(-1))
+    B = T * G
+    tick_vec = jnp.full((B,), state.tick, jnp.int32)
+    w = jnp.full((B,), cfg.tweet_weight, jnp.float32)
+    qstore = stores.insert_accumulate(
+        state.qstore, flat_hi, flat_lo,
+        {"weight": w, "count": jnp.ones((B,), jnp.float32), "last_tick": tick_vec},
+        querylike, modes=_Q_MODES, probe_rounds=cfg.probe_rounds)
+
+    # all ordered pairs among query-like grams of the same tweet
+    ql = querylike.reshape(T, G)
+    src_hi = jnp.broadcast_to(g_hi[:, :, None], (T, G, G)).reshape(-1)
+    src_lo = jnp.broadcast_to(g_lo[:, :, None], (T, G, G)).reshape(-1)
+    dst_hi = jnp.broadcast_to(g_hi[:, None, :], (T, G, G)).reshape(-1)
+    dst_lo = jnp.broadcast_to(g_lo[:, None, :], (T, G, G)).reshape(-1)
+    ok = (ql[:, :, None] & ql[:, None, :]).reshape(-1)
+    same = (src_hi == dst_hi) & (src_lo == dst_lo)
+    ok = ok & ~same
+    p_hi, p_lo = combine_fp_device(src_hi, src_lo, dst_hi, dst_lo)
+    P = p_hi.shape[0]
+    cooc = stores.insert_accumulate(
+        state.cooc, p_hi, p_lo,
+        {"weight": jnp.full((P,), cfg.tweet_weight, jnp.float32),
+         "count": jnp.ones((P,), jnp.float32),
+         "last_tick": jnp.full((P,), state.tick, jnp.int32),
+         "src_hi": src_hi, "src_lo": src_lo, "dst_hi": dst_hi, "dst_lo": dst_lo},
+        ok, modes=_C_MODES, probe_rounds=cfg.probe_rounds)
+    return EngineState(qstore, cooc, state.sessions, state.tick)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def decay_cycle(state: EngineState, dticks: jax.Array, *, cfg: EngineConfig
+                ) -> Tuple[EngineState, Dict[str, jax.Array]]:
+    """Decay/prune cycle (§4.3): decay all weights, prune small entries and
+    stale sessions."""
+    qstore, q_live, q_tot = sweep_decay_prune(
+        state.qstore, dticks, cfg=cfg.decay, weight_lanes=("weight",),
+        use_kernel=cfg.use_kernel)
+    cooc, c_live, c_tot = sweep_decay_prune(
+        state.cooc, dticks, cfg=cfg.decay, weight_lanes=("weight",),
+        use_kernel=cfg.use_kernel)
+    sessions = stores.evict_sessions(state.sessions, state.tick, cfg.session_ttl)
+    stats = {"q_live": q_live, "q_total_w": q_tot,
+             "c_live": c_live, "c_total_w": c_tot}
+    return EngineState(qstore, cooc, sessions, state.tick), stats
+
+
+@jax.jit
+def advance_tick(state: EngineState) -> EngineState:
+    return state._replace(tick=state.tick + 1)
+
+
+# ---------------------------------------------------------------------------
+# Host orchestrator
+# ---------------------------------------------------------------------------
+
+class SearchAssistanceEngine:
+    """Host-side driver of one backend instance (paper Figure 4).
+
+    Call :meth:`step` once per tick with the tick's micro-batches; the engine
+    runs decay and ranking cycles at their configured cadences and keeps the
+    latest suggestion table for the frontend.
+    """
+
+    def __init__(self, cfg: EngineConfig, name: str = "rt"):
+        self.cfg = cfg
+        self.name = name
+        self.state = init_state(cfg)
+        self.suggestions: Dict[int, List[Tuple[int, float]]] = {}
+        self.last_rank_tick: int = -1
+        self.n_rank_cycles = 0
+        self.n_decay_cycles = 0
+
+    # ---- ingestion ----
+    def step(self, query_events=None, tweets=None) -> Optional[Dict]:
+        """Process one tick. Returns rank-cycle stats when a cycle ran."""
+        out = None
+        if query_events is not None:
+            s_hi, s_lo = split_fp(query_events.sess_fp)
+            q_hi, q_lo = split_fp(query_events.q_fp)
+            self.state = ingest_queries(
+                self.state, jnp.asarray(s_hi), jnp.asarray(s_lo),
+                jnp.asarray(q_hi), jnp.asarray(q_lo),
+                jnp.asarray(query_events.src, jnp.int32),
+                jnp.asarray(query_events.valid), cfg=self.cfg)
+        if tweets is not None:
+            g_hi, g_lo = split_fp(tweets.grams)
+            self.state = ingest_tweets(
+                self.state, jnp.asarray(g_hi), jnp.asarray(g_lo),
+                jnp.asarray(tweets.valid), cfg=self.cfg)
+
+        tick = int(self.state.tick)
+        if self.cfg.decay_every > 0 and tick > 0 and tick % self.cfg.decay_every == 0:
+            self.state, stats = decay_cycle(
+                self.state, jnp.int32(self.cfg.decay_every), cfg=self.cfg)
+            self.n_decay_cycles += 1
+        if self.cfg.rank_every > 0 and tick > 0 and tick % self.cfg.rank_every == 0:
+            out = self.run_rank_cycle()
+        self.state = advance_tick(self.state)
+        return out
+
+    def run_rank_cycle(self) -> Dict:
+        table = ranking.ranking_cycle(self.state.cooc, self.state.qstore,
+                                      self.cfg.rank)
+        self.suggestions = ranking.suggestions_to_host(table)
+        self.last_rank_tick = int(self.state.tick)
+        self.n_rank_cycles += 1
+        return {"tick": self.last_rank_tick,
+                "n_rows": int(table.n_rows),
+                "n_suggest": len(self.suggestions)}
+
+    # ---- serving-side reads (the frontend cache pulls these) ----
+    def suggest_fp(self, fp: int, k: int = 8) -> List[Tuple[int, float]]:
+        return self.suggestions.get(int(fp), [])[:k]
+
+    # ---- persistence (every rank cycle the leader persists, §4.2) ----
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        leaves, treedef = jax.tree.flatten(self.state)
+        return {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+
+    def load_state_arrays(self, arrays: Dict[str, np.ndarray]) -> None:
+        leaves, treedef = jax.tree.flatten(self.state)
+        new_leaves = [jnp.asarray(arrays[f"leaf_{i}"]) for i in range(len(leaves))]
+        self.state = jax.tree.unflatten(treedef, new_leaves)

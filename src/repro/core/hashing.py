@@ -1,0 +1,112 @@
+"""64-bit fingerprints and table hashing, without jax x64.
+
+JAX defaults to 32-bit integer types (x64 disabled); enabling x64 globally
+would perturb every model's dtypes. We therefore represent 64-bit
+fingerprints as two uint32 lanes ``(hi, lo)`` everywhere on device, and
+compute probe positions with 32-bit avalanche mixing of both lanes.
+
+Host-side fingerprinting (strings -> fp64) uses FNV-1a, implemented both for
+scalars (python ints) and numpy batches so the tokenizer can vectorize.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def fnv1a_64(data: bytes) -> int:
+    """FNV-1a 64-bit hash of a byte string. fp 0 is reserved -> remapped to 1."""
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & _MASK64
+    return h or 1
+
+
+def fingerprint(text: str) -> int:
+    return fnv1a_64(text.encode("utf-8"))
+
+
+def combine_fp(a: int, b: int) -> int:
+    """Order-sensitive 64-bit combine of two fingerprints (directed pairs)."""
+    h = (a ^ 0x9E3779B97F4A7C15) & _MASK64
+    h = (h * FNV_PRIME) & _MASK64
+    h ^= b
+    h = (h * FNV_PRIME) & _MASK64
+    h ^= h >> 29
+    return h or 1
+
+
+def split_fp(fp) -> tuple:
+    """fp64 -> (hi, lo) uint32 pair. Works on python ints and numpy arrays."""
+    if isinstance(fp, (int, np.integer)):
+        return np.uint32((fp >> 32) & 0xFFFFFFFF), np.uint32(fp & 0xFFFFFFFF)
+    fp = np.asarray(fp, dtype=np.uint64)
+    return (fp >> np.uint64(32)).astype(np.uint32), (fp & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+def join_fp(hi, lo) -> np.ndarray:
+    """(hi, lo) uint32 -> fp64 numpy uint64 (host-side only)."""
+    return (np.asarray(hi, np.uint64) << np.uint64(32)) | np.asarray(lo, np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# Device-side (jnp) 32-bit mixing.
+# ---------------------------------------------------------------------------
+
+def _mix32(x):
+    """murmur3 fmix32 finalizer — avalanche a uint32 lane."""
+    x = jnp.asarray(x, jnp.uint32)
+    x ^= x >> 16
+    x = x * jnp.uint32(0x85EBCA6B)
+    x ^= x >> 13
+    x = x * jnp.uint32(0xC2B2AE35)
+    x ^= x >> 16
+    return x
+
+
+def probe_hash(hi, lo):
+    """Initial probe position hash from a (hi, lo) fingerprint pair."""
+    return _mix32(jnp.asarray(hi, jnp.uint32) * jnp.uint32(0x9E3779B9) ^ _mix32(lo))
+
+
+def combine_fp_device(a_hi, a_lo, b_hi, b_lo):
+    """Device-side order-sensitive pair fingerprint -> (hi, lo) uint32.
+
+    Not bit-identical to ``combine_fp`` (host); collision-equivalent quality.
+    Both sides of the system (reference engine & JAX engine) must use the SAME
+    combine — the reference calls this via numpy, see ``combine_fp_np``.
+    """
+    h1 = _mix32(jnp.asarray(a_hi, jnp.uint32) ^ jnp.uint32(0x9E3779B9))
+    h1 = _mix32(h1 * jnp.uint32(0x85EBCA6B) ^ jnp.asarray(b_hi, jnp.uint32))
+    h2 = _mix32(jnp.asarray(a_lo, jnp.uint32) * jnp.uint32(0xC2B2AE35) ^ jnp.uint32(0x27D4EB2F))
+    h2 = _mix32(h2 ^ jnp.asarray(b_lo, jnp.uint32) * jnp.uint32(0x165667B1))
+    # reserve (0, 0) as the empty marker
+    h2 = jnp.where((h1 == 0) & (h2 == 0), jnp.uint32(1), h2)
+    return h1, h2
+
+
+def _mix32_np(x):
+    x = np.asarray(x, np.uint32).copy()
+    with np.errstate(over="ignore"):
+        x ^= x >> np.uint32(16)
+        x = (x * np.uint32(0x85EBCA6B)).astype(np.uint32)
+        x ^= x >> np.uint32(13)
+        x = (x * np.uint32(0xC2B2AE35)).astype(np.uint32)
+        x ^= x >> np.uint32(16)
+    return x
+
+
+def combine_fp_np(a_hi, a_lo, b_hi, b_lo):
+    """numpy mirror of combine_fp_device (used by the reference engine)."""
+    with np.errstate(over="ignore"):
+        h1 = _mix32_np(np.asarray(a_hi, np.uint32) ^ np.uint32(0x9E3779B9))
+        h1 = _mix32_np((h1 * np.uint32(0x85EBCA6B)).astype(np.uint32) ^ np.asarray(b_hi, np.uint32))
+        h2 = _mix32_np((np.asarray(a_lo, np.uint32) * np.uint32(0xC2B2AE35)).astype(np.uint32) ^ np.uint32(0x27D4EB2F))
+        h2 = _mix32_np(h2 ^ (np.asarray(b_lo, np.uint32) * np.uint32(0x165667B1)).astype(np.uint32))
+    h2 = np.where((h1 == 0) & (h2 == 0), np.uint32(1), h2)
+    return h1, h2

@@ -1,0 +1,185 @@
+"""Association scoring + ranking cycles (paper §2.4, §4.3 "Ranking cycles").
+
+The ranker periodically traverses the entire cooccurrence store, scores each
+(A -> B) pair with several association statistics computed against the query
+store marginals, combines them linearly (the paper's "simplest workable
+strategy ... linear combination with hand-tuned weights"), and emits top-k
+suggestions per source query.
+
+Score lanes (all named in §2.4):
+  * conditional relative frequency   P(B|A) = w_ab / W_a
+  * pointwise mutual information     log( w_ab * T / (W_a * W_b) )
+  * log-likelihood ratio             Dunning's G² over the 2x2 count table
+  * chi-squared                      χ² over the same 2x2 table
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import stores
+from .stores import HashTable
+
+
+@dataclasses.dataclass(frozen=True)
+class RankConfig:
+    top_k: int = 8
+    # linear combination coefficients over (condprob, pmi, llr, chi2)
+    coef_condprob: float = 1.0
+    coef_pmi: float = 0.15
+    coef_llr: float = 0.02
+    coef_chi2: float = 0.0
+    # evidence gates: "accumulating sufficient evidence" (§2.2)
+    min_pair_weight: float = 0.25
+    min_src_weight: float = 0.5
+    min_pair_count: float = 1.0
+    use_kernel: bool = False   # route scoring through the Pallas kernel
+
+
+def _xlogx(x):
+    return jnp.where(x > 0, x * jnp.log(jnp.maximum(x, 1e-30)), 0.0)
+
+
+def assoc_scores_jnp(w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c):
+    """Reference (pure jnp) association score lanes. All inputs f32 arrays.
+
+    Returns (condprob, pmi, llr, chi2); invalid/degenerate entries -> 0.
+    """
+    eps = 1e-9
+    w_a = jnp.maximum(w_a, 0.0)
+    w_b = jnp.maximum(w_b, 0.0)
+    condprob = jnp.where(w_a > 0, w_ab / jnp.maximum(w_a, eps), 0.0)
+    pmi = jnp.where(
+        (w_ab > 0) & (w_a > 0) & (w_b > 0),
+        jnp.log(jnp.maximum(w_ab * jnp.maximum(total_w, eps), eps)
+                / jnp.maximum(w_a * w_b, eps)),
+        0.0,
+    )
+    # 2x2 contingency over raw counts: events where A precedes B.
+    k11 = c_ab
+    k12 = jnp.maximum(c_a - c_ab, 0.0)
+    k21 = jnp.maximum(c_b - c_ab, 0.0)
+    k22 = jnp.maximum(total_c - c_a - c_b + c_ab, 0.0)
+    n = jnp.maximum(k11 + k12 + k21 + k22, eps)
+    row1, row2 = k11 + k12, k21 + k22
+    col1, col2 = k11 + k21, k12 + k22
+    llr = 2.0 * (
+        _xlogx(k11) + _xlogx(k12) + _xlogx(k21) + _xlogx(k22)
+        - _xlogx(row1) - _xlogx(row2) - _xlogx(col1) - _xlogx(col2)
+        + _xlogx(n)
+    )
+    llr = jnp.maximum(llr, 0.0)
+    denom = jnp.maximum(row1 * row2 * col1 * col2, eps)
+    chi2 = n * (k11 * k22 - k12 * k21) ** 2 / denom
+    valid = c_ab > 0
+    return (jnp.where(valid, condprob, 0.0), jnp.where(valid, pmi, 0.0),
+            jnp.where(valid, llr, 0.0), jnp.where(valid, chi2, 0.0))
+
+
+def combine_scores(cfg: RankConfig, condprob, pmi, llr, chi2):
+    """The paper's linear-combination ranker (hand-tuned coefficients)."""
+    return (cfg.coef_condprob * condprob
+            + cfg.coef_pmi * jax.nn.sigmoid(pmi)          # squash unbounded lanes
+            + cfg.coef_llr * jnp.log1p(llr)
+            + cfg.coef_chi2 * jnp.log1p(chi2))
+
+
+class SuggestionTable(NamedTuple):
+    """Dense top-k suggestion output of one ranking cycle."""
+    src_hi: jax.Array    # u32[M]
+    src_lo: jax.Array    # u32[M]
+    dst_hi: jax.Array    # u32[M, K]
+    dst_lo: jax.Array    # u32[M, K]
+    score: jax.Array     # f32[M, K]  (0 => empty slot)
+    n_rows: jax.Array    # i32[]
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ranking_cycle(
+    cooc: HashTable,
+    qstore: HashTable,
+    cfg: RankConfig,
+) -> SuggestionTable:
+    """One full ranking cycle over the cooccurrence store."""
+    C = cooc.capacity
+    live = cooc.live_mask
+    src_hi = cooc.lanes["src_hi"]
+    src_lo = cooc.lanes["src_lo"]
+    dst_hi = cooc.lanes["dst_hi"]
+    dst_lo = cooc.lanes["dst_lo"]
+    w_ab = cooc.lanes["weight"]
+    c_ab = cooc.lanes["count"]
+
+    src_vals, src_found, _ = stores.lookup(qstore, src_hi, src_lo)
+    dst_vals, dst_found, _ = stores.lookup(qstore, dst_hi, dst_lo)
+    total_w = jnp.sum(qstore.lanes["weight"])
+    total_c = jnp.sum(qstore.lanes["count"])
+
+    if cfg.use_kernel:
+        from ..kernels import ops as kops
+        score = kops.assoc_score(
+            w_ab, c_ab, src_vals["weight"], dst_vals["weight"],
+            src_vals["count"], dst_vals["count"], total_w, total_c,
+            coefs=(cfg.coef_condprob, cfg.coef_pmi, cfg.coef_llr, cfg.coef_chi2))
+    else:
+        lanes = assoc_scores_jnp(w_ab, c_ab, src_vals["weight"], dst_vals["weight"],
+                                 src_vals["count"], dst_vals["count"], total_w, total_c)
+        score = combine_scores(cfg, *lanes)
+
+    ok = (live & src_found & dst_found
+          & (w_ab >= cfg.min_pair_weight)
+          & (c_ab >= cfg.min_pair_count)
+          & (src_vals["weight"] >= cfg.min_src_weight))
+    score = jnp.where(ok, score, -jnp.inf)
+
+    # group by src, descending score: stable lexsort, last key is primary.
+    order = jnp.lexsort((-score, src_lo, src_hi))
+    s_hi, s_lo = src_hi[order], src_lo[order]
+    s_dhi, s_dlo = dst_hi[order], dst_lo[order]
+    s_score = score[order]
+    s_ok = ok[order]
+
+    prev_hi = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, jnp.uint32), s_hi[:-1]])
+    prev_lo = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, jnp.uint32), s_lo[:-1]])
+    is_new = (s_hi != prev_hi) | (s_lo != prev_lo)
+    seg_id = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    first_idx = jax.ops.segment_min(jnp.arange(C, dtype=jnp.int32), seg_id,
+                                    num_segments=C)
+    pos = jnp.arange(C, dtype=jnp.int32) - first_idx[seg_id]
+
+    K = cfg.top_k
+    keep = s_ok & (pos < K)
+    row = seg_id
+    out_src_hi = jnp.zeros((C,), jnp.uint32).at[jnp.where(is_new & s_ok, row, C)].set(s_hi, mode="drop")
+    out_src_lo = jnp.zeros((C,), jnp.uint32).at[jnp.where(is_new & s_ok, row, C)].set(s_lo, mode="drop")
+    r_idx = jnp.where(keep, row, C)
+    p_idx = jnp.where(keep, pos, 0)
+    out_dst_hi = jnp.zeros((C, K), jnp.uint32).at[r_idx, p_idx].set(s_dhi, mode="drop")
+    out_dst_lo = jnp.zeros((C, K), jnp.uint32).at[r_idx, p_idx].set(s_dlo, mode="drop")
+    out_score = jnp.zeros((C, K), jnp.float32).at[r_idx, p_idx].set(
+        jnp.where(keep, s_score, 0.0), mode="drop")
+    n_rows = jnp.sum((is_new & s_ok).astype(jnp.int32))
+    return SuggestionTable(out_src_hi, out_src_lo, out_dst_hi, out_dst_lo,
+                           out_score, n_rows)
+
+
+def suggestions_to_host(table: SuggestionTable) -> dict:
+    """Export a SuggestionTable to host numpy dict keyed by src fp64."""
+    from .hashing import join_fp
+    src_hi = np.asarray(table.src_hi)
+    src_lo = np.asarray(table.src_lo)
+    mask = (src_hi != 0) | (src_lo != 0)
+    out = {}
+    dst_fp = join_fp(np.asarray(table.dst_hi), np.asarray(table.dst_lo))
+    score = np.asarray(table.score)
+    for i in np.nonzero(mask)[0]:
+        fp = int(join_fp(src_hi[i], src_lo[i]))
+        row = [(int(d), float(s)) for d, s in zip(dst_fp[i], score[i]) if s > 0.0]
+        if row:
+            out[fp] = row
+    return out

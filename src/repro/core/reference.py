@@ -1,0 +1,173 @@
+"""Pure-Python dict-based reference implementation of the engine.
+
+This is the correctness oracle: it mirrors the JVM engine the paper
+describes (hash-maps mutated event-at-a-time) and defines the exact
+semantics the JAX engine must reproduce at micro-batch granularity:
+
+  * same store lanes (weight/count/last_tick),
+  * same session sliding-window pair emission (batch order per session),
+  * same decay/prune and ranking math.
+
+Deliberately simple and slow — tests compare it against the vectorized
+device engine on identical event streams.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .decay import DecayConfig
+from .engine import EngineConfig
+from .ranking import RankConfig
+
+
+def _sigmoid(x: float) -> float:
+    if x >= 0:
+        return 1.0 / (1.0 + math.exp(-x))
+    e = math.exp(x)
+    return e / (1.0 + e)
+
+
+def _xlogx(x: float) -> float:
+    return x * math.log(x) if x > 0 else 0.0
+
+
+class ReferenceEngine:
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        self.q: Dict[int, List[float]] = {}          # fp -> [w, c, last_tick]
+        self.cooc: Dict[Tuple[int, int], List[float]] = {}
+        self.sessions: Dict[int, deque] = {}         # sess_fp -> deque[(qfp, src)]
+        self.sess_tick: Dict[int, int] = {}
+        self.tick = 0
+        self.suggestions: Dict[int, List[Tuple[int, float]]] = {}
+
+    # ------------------------------------------------------------------
+    def _source_w(self, src: int) -> float:
+        sw = self.cfg.source_weights
+        return sw[min(max(src, 0), len(sw) - 1)]
+
+    def _bump_q(self, fp: int, w: float) -> None:
+        e = self.q.setdefault(int(fp), [0.0, 0.0, 0])
+        e[0] += w
+        e[1] += 1.0
+        e[2] = self.tick
+
+    def _bump_cooc(self, a: int, b: int, w: float) -> None:
+        e = self.cooc.setdefault((int(a), int(b)), [0.0, 0.0, 0])
+        e[0] += w
+        e[1] += 1.0
+        e[2] = self.tick
+
+    def ingest_queries(self, events) -> None:
+        W = self.cfg.session_window
+        for sess, q, src, valid in zip(events.sess_fp, events.q_fp,
+                                       events.src, events.valid):
+            if not valid or int(q) == 0 or int(sess) == 0:
+                continue
+            sess, q, src = int(sess), int(q), int(src)
+            self._bump_q(q, self._source_w(src))
+            d = self.sessions.setdefault(sess, deque(maxlen=W))
+            for (prev, psrc) in d:
+                if prev == q:
+                    continue
+                w_pair = math.sqrt(self._source_w(psrc) * self._source_w(src))
+                self._bump_cooc(prev, q, w_pair)
+            d.append((q, src))
+            self.sess_tick[sess] = self.tick
+
+    def ingest_tweets(self, tweets) -> None:
+        cfg = self.cfg
+        # query-likeness snapshot BEFORE this batch's updates
+        def querylike(fp: int) -> bool:
+            e = self.q.get(int(fp))
+            return e is not None and e[1] >= cfg.min_querylike_count
+        batches = []
+        for grams, valid in zip(tweets.grams, tweets.valid):
+            if not valid:
+                continue
+            ql = [int(g) for g in grams if int(g) != 0 and querylike(g)]
+            batches.append(ql)
+        for ql in batches:
+            for g in ql:
+                self._bump_q(g, cfg.tweet_weight)
+            for a in ql:
+                for b in ql:
+                    if a != b:
+                        self._bump_cooc(a, b, cfg.tweet_weight)
+
+    def decay_cycle(self, dticks: int) -> None:
+        cfg = self.cfg.decay
+        f = cfg.factor_py(dticks)
+        for d in (self.q, self.cooc):
+            dead = []
+            for k, e in d.items():
+                e[0] *= f
+                if e[0] < cfg.prune_threshold:
+                    dead.append(k)
+            for k in dead:
+                del d[k]
+        stale = [s for s, t in self.sess_tick.items()
+                 if self.tick - t > self.cfg.session_ttl]
+        for s in stale:
+            self.sessions.pop(s, None)
+            self.sess_tick.pop(s, None)
+
+    # ------------------------------------------------------------------
+    def rank_cycle(self) -> Dict[int, List[Tuple[int, float]]]:
+        cfg: RankConfig = self.cfg.rank
+        total_w = sum(e[0] for e in self.q.values())
+        total_c = sum(e[1] for e in self.q.values())
+        per_src: Dict[int, List[Tuple[float, int]]] = {}
+        for (a, b), (w_ab, c_ab, _) in self.cooc.items():
+            ea, eb = self.q.get(a), self.q.get(b)
+            if ea is None or eb is None:
+                continue
+            w_a, c_a = ea[0], ea[1]
+            w_b, c_b = eb[0], eb[1]
+            if (w_ab < cfg.min_pair_weight or c_ab < cfg.min_pair_count
+                    or w_a < cfg.min_src_weight):
+                continue
+            condprob = w_ab / w_a if w_a > 0 else 0.0
+            pmi = (math.log(w_ab * max(total_w, 1e-9) / max(w_a * w_b, 1e-9))
+                   if w_ab > 0 and w_a > 0 and w_b > 0 else 0.0)
+            k11 = c_ab
+            k12 = max(c_a - c_ab, 0.0)
+            k21 = max(c_b - c_ab, 0.0)
+            k22 = max(total_c - c_a - c_b + c_ab, 0.0)
+            n = max(k11 + k12 + k21 + k22, 1e-9)
+            r1, r2 = k11 + k12, k21 + k22
+            c1, c2 = k11 + k21, k12 + k22
+            llr = 2.0 * (_xlogx(k11) + _xlogx(k12) + _xlogx(k21) + _xlogx(k22)
+                         - _xlogx(r1) - _xlogx(r2) - _xlogx(c1) - _xlogx(c2)
+                         + _xlogx(n))
+            llr = max(llr, 0.0)
+            chi2 = n * (k11 * k22 - k12 * k21) ** 2 / max(r1 * r2 * c1 * c2, 1e-9)
+            score = (cfg.coef_condprob * condprob
+                     + cfg.coef_pmi * _sigmoid(pmi)
+                     + cfg.coef_llr * math.log1p(llr)
+                     + cfg.coef_chi2 * math.log1p(chi2))
+            per_src.setdefault(a, []).append((score, b))
+        out: Dict[int, List[Tuple[int, float]]] = {}
+        for a, lst in per_src.items():
+            lst.sort(key=lambda t: (-t[0], t[1]))
+            out[a] = [(b, s) for (s, b) in lst[: cfg.top_k]]
+        self.suggestions = out
+        return out
+
+    # ------------------------------------------------------------------
+    def step(self, query_events=None, tweets=None) -> None:
+        if query_events is not None:
+            self.ingest_queries(query_events)
+        if tweets is not None:
+            self.ingest_tweets(tweets)
+        if (self.cfg.decay_every > 0 and self.tick > 0
+                and self.tick % self.cfg.decay_every == 0):
+            self.decay_cycle(self.cfg.decay_every)
+        if (self.cfg.rank_every > 0 and self.tick > 0
+                and self.tick % self.cfg.rank_every == 0):
+            self.rank_cycle()
+        self.tick += 1

@@ -1,0 +1,282 @@
+"""Beyond-paper: the sharded search-assistance backend.
+
+The paper's backend is "replicated for fault tolerance, but not sharded
+(each instance independently holds the entire state)" and names the two
+scalability walls (§4.4): every instance must consume the full hoses, and
+store memory bounds coverage. This module shards the engine over a mesh
+axis and removes the memory wall:
+
+  * **query store**: replicated (it is orders of magnitude smaller than the
+    pair space — the paper's own observation) so ranking marginals and
+    query-likeness checks stay local;
+  * **sessions store**: sharded by session hash — pair *generation* is local
+    to the session owner;
+  * **cooccurrence store**: sharded by *source-query* hash, so one ranking
+    cycle shard holds every pair of its source queries and top-k is local;
+  * **hot-key salting**: Zipf-skewed sources (the same skew that produced
+    the paper's Hadoop stragglers, §3.2) are split across ``n_salts``
+    shards via a salt on the destination hash; the frontend merges the
+    per-salt top-k lists. Hotness is decided against the replicated query
+    store at routing time (count >= hot_threshold).
+  * pair routing: fixed-capacity bucketization + ``all_to_all`` along the
+    shard axis (overflow is dropped *and counted*, mirroring the paper's
+    rate-limiting stance).
+
+State lives as arrays with a leading shard axis, sharded with shard_map;
+the same single-device store/ranking code runs per shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from . import ranking, stores
+from .decay import sweep_decay_prune
+from .engine import EngineConfig, _Q_MODES, _C_MODES
+from .hashing import combine_fp_device, probe_hash, split_fp
+from .ranking import RankConfig, SuggestionTable
+from .stores import HashTable, SessionTable
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedConfig:
+    base: EngineConfig
+    n_salts: int = 4
+    hot_threshold: float = 50.0     # count above which a src key is "hot"
+    route_capacity: int = 4096      # per-destination bucket capacity
+
+
+class ShardedState(NamedTuple):
+    qstore: HashTable        # replicated
+    cooc: HashTable          # leading dim = shard
+    sessions: SessionTable   # leading dim = shard
+    tick: jax.Array
+    n_route_drop: jax.Array  # routed pairs dropped on bucket overflow
+
+
+def _stack_shards(tree, n):
+    """Concatenate n per-shard tables along dim 0 (shard_map blocks dim 0).
+
+    Scalars (per-shard counters) become shape (n,) -> (1,) per device.
+    All stores start zeroed, so fresh zeros of the stacked shape suffice.
+    """
+    def f(x):
+        if x.ndim == 0:
+            return jnp.zeros((n,), x.dtype)
+        return jnp.zeros((n * x.shape[0],) + x.shape[1:], x.dtype)
+    return jax.tree.map(f, tree)
+
+
+def init_sharded_state(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"
+                       ) -> ShardedState:
+    n = mesh.shape[axis]
+    base = cfg.base
+    qstore = stores.make_table(base.query_capacity, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32})
+    cooc = stores.make_table(base.cooc_capacity // n, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
+        "src_hi": jnp.uint32, "src_lo": jnp.uint32,
+        "dst_hi": jnp.uint32, "dst_lo": jnp.uint32})
+    sessions = stores.make_session_table(base.session_capacity // n,
+                                         base.session_window)
+    return ShardedState(
+        qstore=qstore,
+        cooc=_stack_shards(cooc, n),
+        sessions=_stack_shards(sessions, n),
+        tick=jnp.zeros((), jnp.int32),
+        n_route_drop=jnp.zeros((n,), jnp.int32),
+    )
+
+
+def _route(pairs_key_hi, pairs_key_lo, owner, payload: Dict[str, jax.Array],
+           valid, n_shards: int, cap: int, axis: str):
+    """Bucketize by owner shard and all_to_all. Returns routed flat arrays.
+
+    All arrays are per-device (inside shard_map). Overflow beyond ``cap``
+    per destination bucket is dropped and counted.
+    """
+    Bp = pairs_key_hi.shape[0]
+    owner = jnp.where(valid, owner, n_shards)  # invalid -> sentinel bucket
+    order = jnp.argsort(owner)                  # stable
+    o_sorted = owner[order]
+    # position within each owner run
+    idx = jnp.arange(Bp, dtype=jnp.int32)
+    seg_start = jax.ops.segment_min(
+        idx, jnp.clip(o_sorted, 0, n_shards).astype(jnp.int32),
+        num_segments=n_shards + 1)
+    pos = idx - seg_start[jnp.clip(o_sorted, 0, n_shards)]
+    ok = (o_sorted < n_shards) & (pos < cap)
+    dropped = jnp.sum(((o_sorted < n_shards) & (pos >= cap)).astype(jnp.int32))
+
+    dest_row = jnp.where(ok, o_sorted.astype(jnp.int32), n_shards)
+    dest_pos = jnp.where(ok, pos, 0)
+
+    def bucketize(x, fill=0):
+        buf = jnp.full((n_shards, cap) + x.shape[1:], fill, x.dtype)
+        return buf.at[dest_row, dest_pos].set(x[order], mode="drop")
+
+    b_hi = bucketize(pairs_key_hi)
+    b_lo = bucketize(pairs_key_lo)
+    b_payload = {k: bucketize(v) for k, v in payload.items()}
+    b_valid = jnp.zeros((n_shards, cap), bool).at[dest_row, dest_pos].set(
+        ok, mode="drop")
+
+    # exchange: axis 0 is the destination shard
+    t_hi = jax.lax.all_to_all(b_hi, axis, 0, 0, tiled=False)
+    t_lo = jax.lax.all_to_all(b_lo, axis, 0, 0, tiled=False)
+    t_val = jax.lax.all_to_all(b_valid, axis, 0, 0, tiled=False)
+    t_payload = {k: jax.lax.all_to_all(v, axis, 0, 0, tiled=False)
+                 for k, v in b_payload.items()}
+    flat = lambda x: x.reshape((n_shards * cap,) + x.shape[2:])
+    return (flat(t_hi), flat(t_lo), {k: flat(v) for k, v in t_payload.items()},
+            flat(t_val), dropped)
+
+
+def make_sharded_step(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
+    """Build the jitted sharded ingest step (query path)."""
+    n = mesh.shape[axis]
+    base = cfg.base
+
+    def body(state: ShardedState, s_hi, s_lo, q_hi, q_lo, src, valid):
+        me = jax.lax.axis_index(axis)
+        B = q_hi.shape[0]
+        tick_vec = jnp.full((B,), state.tick, jnp.int32)
+        sw = jnp.asarray(base.source_weights, jnp.float32)
+        w = sw[jnp.clip(src, 0, len(base.source_weights) - 1)]
+
+        # --- replicated query store: every shard applies the full batch ---
+        qstore = stores.insert_accumulate(
+            state.qstore, q_hi, q_lo,
+            {"weight": w, "count": jnp.ones((B,), jnp.float32),
+             "last_tick": tick_vec},
+            valid, modes=_Q_MODES, probe_rounds=base.probe_rounds)
+
+        # --- sessions: filter to my shard (owner = hash(sess) % n) ---
+        sess_owner = (probe_hash(s_hi, s_lo) % jnp.uint32(n)).astype(jnp.int32)
+        mine = valid & (sess_owner == me)
+        sessions, pairs = stores.update_sessions(
+            state.sessions, s_hi, s_lo, q_hi, q_lo, src, state.tick, mine,
+            probe_rounds=base.probe_rounds)
+
+        # --- route pairs to cooccurrence owner: hash(src) (+ salt if hot) ---
+        svals, sfound, _ = stores.lookup(qstore, pairs.src_hi, pairs.src_lo,
+                                         probe_rounds=base.probe_rounds)
+        hot = sfound & (svals["count"] >= cfg.hot_threshold)
+        salt = jnp.where(
+            hot, (probe_hash(pairs.dst_hi, pairs.dst_lo)
+                  % jnp.uint32(cfg.n_salts)).astype(jnp.uint32),
+            jnp.uint32(0))
+        owner = ((probe_hash(pairs.src_hi, pairs.src_lo) + salt)
+                 % jnp.uint32(n)).astype(jnp.int32)
+        w_src = sw[jnp.clip(pairs.src_code, 0, len(base.source_weights) - 1)]
+        w_dst = sw[jnp.clip(pairs.dst_code, 0, len(base.source_weights) - 1)]
+        w_pair = jnp.sqrt(w_src * w_dst)
+        payload = {"src_hi": pairs.src_hi, "src_lo": pairs.src_lo,
+                   "dst_hi": pairs.dst_hi, "dst_lo": pairs.dst_lo,
+                   "w": w_pair}
+        r_hi, r_lo, r_pl, r_valid, drop = _route(
+            pairs.src_hi, pairs.src_lo, owner, payload, pairs.valid,
+            n, cfg.route_capacity, axis)
+        # pair key for the store: combine(src, dst)
+        p_hi, p_lo = combine_fp_device(r_pl["src_hi"], r_pl["src_lo"],
+                                       r_pl["dst_hi"], r_pl["dst_lo"])
+        Pn = p_hi.shape[0]
+        cooc = stores.insert_accumulate(
+            state.cooc, p_hi, p_lo,
+            {"weight": r_pl["w"], "count": jnp.ones((Pn,), jnp.float32),
+             "last_tick": jnp.full((Pn,), state.tick, jnp.int32),
+             "src_hi": r_pl["src_hi"], "src_lo": r_pl["src_lo"],
+             "dst_hi": r_pl["dst_hi"], "dst_lo": r_pl["dst_lo"]},
+            r_valid, modes=_C_MODES, probe_rounds=base.probe_rounds)
+
+        return ShardedState(qstore, cooc, sessions, state.tick,
+                            state.n_route_drop + drop[None])
+
+    rep = P()
+    state_spec = _state_spec(axis)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(state_spec, rep, rep, rep, rep, rep, rep),
+                   out_specs=state_spec,
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def make_sharded_decay(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
+    base = cfg.base
+
+    def body(state: ShardedState, dticks):
+        qstore, _, _ = sweep_decay_prune(state.qstore, dticks, cfg=base.decay,
+                                         use_kernel=False)
+        cooc, _, _ = sweep_decay_prune(state.cooc, dticks, cfg=base.decay,
+                                       use_kernel=False)
+        sessions = stores.evict_sessions(state.sessions, state.tick,
+                                         base.session_ttl)
+        return ShardedState(qstore, cooc, sessions, state.tick + 0,
+                            state.n_route_drop)
+
+    rep, sh = P(), P(axis)
+    state_spec = _state_spec(axis)
+    fn = shard_map(body, mesh=mesh, in_specs=(state_spec, rep),
+                   out_specs=state_spec, check_rep=False)
+    return jax.jit(fn)
+
+
+def make_sharded_rank(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
+    def body(state: ShardedState):
+        t = ranking.ranking_cycle(state.cooc, state.qstore, cfg.base.rank)
+        return t._replace(n_rows=t.n_rows[None])  # (1,) per shard
+
+    state_spec = _state_spec(axis)
+    out_spec = SuggestionTable(*([P(axis)] * 5), n_rows=P(axis))
+    fn = shard_map(body, mesh=mesh, in_specs=(state_spec,),
+                   out_specs=out_spec, check_rep=False)
+    return jax.jit(fn)
+
+
+def _state_spec(axis: str) -> ShardedState:
+    rep, sh = P(), P(axis)
+    return ShardedState(
+        qstore=jax.tree.map(lambda _: rep, stores.make_table(
+            2, {"weight": jnp.float32, "count": jnp.float32,
+                "last_tick": jnp.int32})),
+        cooc=jax.tree.map(lambda _: sh, stores.make_table(
+            2, {"weight": jnp.float32, "count": jnp.float32,
+                "last_tick": jnp.int32, "src_hi": jnp.uint32,
+                "src_lo": jnp.uint32, "dst_hi": jnp.uint32,
+                "dst_lo": jnp.uint32})),
+        sessions=jax.tree.map(lambda _: sh, stores.make_session_table(2, 2)),
+        tick=rep,
+        n_route_drop=sh,
+    )
+
+
+def merge_sharded_suggestions(table: SuggestionTable, top_k: int
+                              ) -> Dict[int, List[Tuple[int, float]]]:
+    """Host-side merge of per-shard suggestion tables (salted srcs appear in
+    up to n_salts shards)."""
+    from .hashing import join_fp
+    src_hi = np.asarray(table.src_hi).reshape(-1)
+    src_lo = np.asarray(table.src_lo).reshape(-1)
+    K = table.score.shape[-1]
+    dst_hi = np.asarray(table.dst_hi).reshape(-1, K)
+    dst_lo = np.asarray(table.dst_lo).reshape(-1, K)
+    score = np.asarray(table.score).reshape(-1, K)
+    merged: Dict[int, Dict[int, float]] = {}
+    mask = (src_hi != 0) | (src_lo != 0)
+    src_fp = join_fp(src_hi, src_lo)
+    dst_fp = join_fp(dst_hi, dst_lo)
+    for i in np.nonzero(mask)[0]:
+        d = merged.setdefault(int(src_fp[i]), {})
+        for j in range(K):
+            if score[i, j] > 0.0:
+                fp = int(dst_fp[i, j])
+                d[fp] = max(d.get(fp, 0.0), float(score[i, j]))
+    return {s: sorted(d.items(), key=lambda t: (-t[1], t[0]))[:top_k]
+            for s, d in merged.items()}

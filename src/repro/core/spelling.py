@@ -1,0 +1,116 @@
+"""Spelling correction via a pairwise edit-distance variant (paper §4.5).
+
+The paper runs a periodic batch job computing "a pairwise edit distance
+variant calculation between all queries observed within a long span of time",
+with spelling-specific twists:
+
+  * mistakes are more frequently observed in *internal* characters than at
+    the beginning or end of a word -> edits at the first character are
+    penalised (cost 1.5 instead of 1.0), so "justin biber" ~ "justin bieber"
+    scores closer than "mustin bieber";
+  * Twitter specifics: @mentions and hashtags are compared on their bare
+    text (leading sigils stripped);
+  * adjacent transpositions count as a single edit (Damerau).
+
+A correction A -> B is emitted when the weighted distance is small and B is
+substantially more frequent than A ("especially if A returns far fewer
+results than B", §2.4).
+
+The batched banded DP is the Pallas kernel in ``kernels/edit_distance.py``;
+``kernels/ref.py`` holds the jnp oracle. This module is the host-side
+orchestration: string prep, tiling over the all-pairs space, and filtering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAX_QUERY_CHARS = 24
+
+
+@dataclasses.dataclass(frozen=True)
+class SpellConfig:
+    max_len: int = MAX_QUERY_CHARS
+    max_distance: float = 2.0      # weighted-edit acceptance threshold
+    min_len: int = 4               # too-short strings are too noisy
+    freq_boost: float = 3.0        # weight(B) must exceed boost * weight(A)
+    first_char_cost: float = 1.5   # the paper's positional weighting
+    tile: int = 256                # pair tile per device call
+    use_kernel: bool = True
+
+
+def normalize_query(text: str) -> str:
+    """Strip Twitter sigils; lowercase; collapse whitespace."""
+    toks = []
+    for tok in text.lower().split():
+        while tok[:1] in ("@", "#"):
+            tok = tok[1:]
+        if tok:
+            toks.append(tok)
+    return " ".join(toks)
+
+
+def encode_strings(texts: List[str], max_len: int) -> Tuple[np.ndarray, np.ndarray]:
+    """-> (chars u8[N, max_len] zero-padded, lengths i32[N])."""
+    n = len(texts)
+    chars = np.zeros((n, max_len), np.uint8)
+    lens = np.zeros((n,), np.int32)
+    for i, t in enumerate(texts):
+        b = t.encode("utf-8")[:max_len]
+        chars[i, : len(b)] = np.frombuffer(b, np.uint8)
+        lens[i] = len(b)
+    return chars, lens
+
+
+def spelling_cycle(
+    fps: np.ndarray,
+    texts: List[str],
+    weights: np.ndarray,
+    cfg: SpellConfig = SpellConfig(),
+) -> Dict[int, Tuple[int, float]]:
+    """All-pairs weighted edit distance over the given queries.
+
+    Returns {misspelled_fp: (corrected_fp, weighted_distance)} keeping, per
+    source, the lowest-distance candidate (frequency used as tie-break).
+    """
+    from ..kernels import ops as kops
+
+    norm = [normalize_query(t) for t in texts]
+    chars, lens = encode_strings(norm, cfg.max_len)
+    n = len(texts)
+    out: Dict[int, Tuple[int, float]] = {}
+    order = np.argsort(-weights)  # scan high-frequency candidates first
+    chars_s, lens_s = chars[order], lens[order]
+    w_s, fp_s = weights[order], fps[order]
+
+    best_d = np.full((n,), np.inf, np.float64)
+    # tile the (source x candidate) pair space
+    for a0 in range(0, n, cfg.tile):
+        a1 = min(a0 + cfg.tile, n)
+        for b0 in range(0, n, cfg.tile):
+            b1 = min(b0 + cfg.tile, n)
+            ai = np.arange(a0, a1)
+            bi = np.arange(b0, b1)
+            # quick pruning: candidates must be notably more frequent
+            pair_ok = (w_s[bi][None, :] >= cfg.freq_boost * w_s[ai][:, None])
+            pair_ok &= (lens_s[ai][:, None] >= cfg.min_len)
+            pair_ok &= np.abs(lens_s[ai][:, None] - lens_s[bi][None, :]) <= int(cfg.max_distance)
+            if not pair_ok.any():
+                continue
+            aa, bb = np.nonzero(pair_ok)
+            d = kops.edit_distance(
+                chars_s[ai[aa]], lens_s[ai[aa]],
+                chars_s[bi[bb]], lens_s[bi[bb]],
+                first_char_cost=cfg.first_char_cost,
+                use_kernel=cfg.use_kernel,
+            )
+            d = np.asarray(d)
+            for k in range(len(aa)):
+                i_src = a0 + aa[k]
+                dk = float(d[k])
+                if 0.0 < dk <= cfg.max_distance and dk < best_d[i_src]:
+                    best_d[i_src] = dk
+                    out[int(fp_s[i_src])] = (int(fp_s[b0 + bb[k]]), dk)
+    return out

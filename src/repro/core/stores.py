@@ -1,0 +1,438 @@
+"""In-memory statistics stores as fixed-capacity, dense-array hash tables.
+
+The paper's backend holds three in-memory stores (§4.2): the *query
+statistics store*, the *query cooccurrence statistics store*, and the
+*sessions store*. The deployed Twitter engine used JVM hash-maps mutated
+event-at-a-time; the TPU-native adaptation here uses **open-addressing hash
+tables laid out as dense JAX arrays** updated by *micro-batches* of events:
+
+  * keys are 64-bit fingerprints stored as two uint32 lanes (no jax x64),
+  * a batch of updates is deduplicated with a stable lexsort + segment-sum,
+  * existing keys are found with a K-round triangular probe (all rounds are
+    always scanned, which makes lookups correct in the presence of pruned
+    slots without tombstones),
+  * new keys claim the first empty slot on their probe sequence through a
+    scatter-max "claim" race (unique keys after dedup => at most one winner
+    per key, losers retry the next round),
+  * keys that fail to place after K rounds are *dropped and counted* — the
+    paper's engine likewise rate-limits/prunes to bound memory (§4.4).
+
+All operations are functional (table in, table out) and jit-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import probe_hash, combine_fp_device
+
+# Lane reduction modes.
+ADD = "add"    # accumulate (weights, counts)
+SET = "set"    # last-writer-wins (timestamps, language, src/dst fps)
+MAX = "max"    # running max
+
+
+class HashTable(NamedTuple):
+    """Open-addressing hash table over (hi, lo) uint32 fingerprint pairs."""
+    key_hi: jax.Array          # u32[C]; (0,0) == empty slot
+    key_lo: jax.Array          # u32[C]
+    lanes: Dict[str, jax.Array]   # each [C] or [C, ...]
+    n_dropped: jax.Array       # i32[] — updates dropped due to probe failure
+
+    @property
+    def capacity(self) -> int:
+        return self.key_hi.shape[0]
+
+    @property
+    def live_mask(self) -> jax.Array:
+        return (self.key_hi != 0) | (self.key_lo != 0)
+
+    def live_count(self) -> jax.Array:
+        return jnp.sum(self.live_mask.astype(jnp.int32))
+
+
+def make_table(capacity: int, lane_specs: Dict[str, Any]) -> HashTable:
+    """lane_specs: name -> dtype or (dtype, trailing_shape)."""
+    assert capacity & (capacity - 1) == 0, "capacity must be a power of two"
+    lanes = {}
+    for name, spec in lane_specs.items():
+        if isinstance(spec, tuple):
+            dtype, trailing = spec
+            lanes[name] = jnp.zeros((capacity, *trailing), dtype=dtype)
+        else:
+            lanes[name] = jnp.zeros((capacity,), dtype=spec)
+    return HashTable(
+        key_hi=jnp.zeros((capacity,), jnp.uint32),
+        key_lo=jnp.zeros((capacity,), jnp.uint32),
+        lanes=lanes,
+        n_dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def _probe_slot(h0: jax.Array, r: int, capacity: int) -> jax.Array:
+    """Triangular probing: h0 + r(r+1)/2 mod C covers all slots for C=2^k."""
+    return (h0 + jnp.uint32(r * (r + 1) // 2)) & jnp.uint32(capacity - 1)
+
+
+def _dedup_sorted(key_hi, key_lo, valid):
+    """Stable lexsort by (hi, lo); returns (perm, seg_id, rep_mask, run_start).
+
+    rep_mask marks the LAST row of each equal-key run in sorted order, so
+    SET lanes naturally take the final (batch-order latest) value. Invalid
+    rows have key (0,0) and sort first; they form segment(s) that callers
+    mask out via the key-!=0 check.
+    """
+    perm = jnp.lexsort((key_lo, key_hi))  # lexsort is stable
+    s_hi, s_lo = key_hi[perm], key_lo[perm]
+    prev_hi = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, jnp.uint32), s_hi[:-1]])
+    prev_lo = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, jnp.uint32), s_lo[:-1]])
+    is_new = (s_hi != prev_hi) | (s_lo != prev_lo)
+    seg_id = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    nxt_new = jnp.concatenate([is_new[1:], jnp.ones((1,), bool)])
+    rep_mask = nxt_new & ((s_hi != 0) | (s_lo != 0)) & valid[perm]
+    return perm, seg_id, rep_mask
+
+
+@partial(jax.jit, static_argnames=("modes", "probe_rounds"))
+def insert_accumulate(
+    table: HashTable,
+    key_hi: jax.Array,
+    key_lo: jax.Array,
+    updates: Dict[str, jax.Array],
+    valid: jax.Array,
+    *,
+    modes: Tuple[Tuple[str, str], ...],
+    probe_rounds: int = 16,
+) -> HashTable:
+    """Batched insert-or-accumulate of (key -> lane updates).
+
+    modes: tuple of (lane_name, ADD|SET|MAX) — a hashable static spec.
+    """
+    C = table.capacity
+    mode_map = dict(modes)
+    # Invalid rows get the empty key so they collapse into a masked run.
+    key_hi = jnp.where(valid, key_hi, 0).astype(jnp.uint32)
+    key_lo = jnp.where(valid, key_lo, 0).astype(jnp.uint32)
+
+    B = key_hi.shape[0]
+    perm, seg_id, rep_mask = _dedup_sorted(key_hi, key_lo, valid)
+    s_hi, s_lo = key_hi[perm], key_lo[perm]
+
+    # Per-segment reductions of each lane, landed on the representative row.
+    agg: Dict[str, jax.Array] = {}
+    for name, upd in updates.items():
+        upd_s = upd[perm]
+        mode = mode_map[name]
+        if mode == ADD:
+            seg = jax.ops.segment_sum(upd_s, seg_id, num_segments=B)
+            agg[name] = seg[seg_id]
+        elif mode == MAX:
+            seg = jax.ops.segment_max(upd_s, seg_id, num_segments=B)
+            agg[name] = seg[seg_id]
+        else:  # SET — representative row is the last of the run already.
+            agg[name] = upd_s
+
+    alive = rep_mask
+    h0 = probe_hash(s_hi, s_lo)
+
+    # -- Pass 1: find existing slots across ALL probe rounds (prune-safe). --
+    found_slot = jnp.full((B,), -1, jnp.int32)
+    for r in range(probe_rounds):
+        slot = _probe_slot(h0, r, C)
+        t_hi = table.key_hi[slot]
+        t_lo = table.key_lo[slot]
+        hit = alive & (found_slot < 0) & (t_hi == s_hi) & (t_lo == s_lo)
+        found_slot = jnp.where(hit, slot.astype(jnp.int32), found_slot)
+
+    key_hi_tab, key_lo_tab = table.key_hi, table.key_lo
+    placed = found_slot >= 0
+    write_slot = found_slot
+
+    # -- Pass 2: unplaced keys claim the first empty slot on their sequence. --
+    for r in range(probe_rounds):
+        want = alive & ~placed
+        slot = _probe_slot(h0, r, C)
+        empty = (key_hi_tab[slot] == 0) & (key_lo_tab[slot] == 0)
+        contend = want & empty
+        claim = jnp.full((C,), -1, jnp.int32)
+        claim = claim.at[slot].max(jnp.where(contend, jnp.arange(B, dtype=jnp.int32), -1))
+        won = contend & (claim[slot] == jnp.arange(B, dtype=jnp.int32))
+        # OOB sentinel + mode='drop': losers must not scatter at all (a
+        # masked write of the *old* value could race a genuine winner).
+        drop_slot = jnp.where(won, slot.astype(jnp.int32), C)
+        key_hi_tab = key_hi_tab.at[drop_slot].set(s_hi, mode="drop")
+        key_lo_tab = key_lo_tab.at[drop_slot].set(s_lo, mode="drop")
+        write_slot = jnp.where(won, slot.astype(jnp.int32), write_slot)
+        placed = placed | won
+
+    dropped = jnp.sum((alive & ~placed).astype(jnp.int32))
+
+    # -- Apply lane updates at write_slot (unique keys => unique slots). --
+    ok = placed & alive
+    safe = jnp.where(ok, write_slot, 0)
+    drop = jnp.where(ok, write_slot, C)
+    new_lanes = dict(table.lanes)
+    for name, upd in agg.items():
+        lane = new_lanes[name]
+        mode = mode_map[name]
+        if mode == ADD:
+            zeros = jnp.zeros_like(upd)
+            add = jnp.where(_bmask(ok, upd), upd, zeros)
+            new_lanes[name] = lane.at[safe].add(add)
+        elif mode == MAX:
+            cur = lane[safe]
+            new_lanes[name] = lane.at[drop].set(jnp.maximum(cur, upd), mode="drop")
+        else:  # SET
+            new_lanes[name] = lane.at[drop].set(upd, mode="drop")
+
+    return HashTable(key_hi_tab, key_lo_tab, new_lanes, table.n_dropped + dropped)
+
+
+def _bmask(mask: jax.Array, ref: jax.Array) -> jax.Array:
+    """Broadcast a [B] mask against a [B, ...] lane update."""
+    return mask.reshape(mask.shape + (1,) * (ref.ndim - 1))
+
+
+@partial(jax.jit, static_argnames=("probe_rounds",))
+def lookup(
+    table: HashTable,
+    key_hi: jax.Array,
+    key_lo: jax.Array,
+    *,
+    probe_rounds: int = 16,
+) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    """Batched lookup. Returns (lanes_at_key, found_mask, slot)."""
+    C = table.capacity
+    key_hi = jnp.asarray(key_hi, jnp.uint32)
+    key_lo = jnp.asarray(key_lo, jnp.uint32)
+    h0 = probe_hash(key_hi, key_lo)
+    B = key_hi.shape[0]
+    found_slot = jnp.full((B,), -1, jnp.int32)
+    for r in range(probe_rounds):
+        slot = _probe_slot(h0, r, C)
+        hit = (found_slot < 0) & (table.key_hi[slot] == key_hi) & (table.key_lo[slot] == key_lo) \
+            & ((key_hi != 0) | (key_lo != 0))
+        found_slot = jnp.where(hit, slot.astype(jnp.int32), found_slot)
+    found = found_slot >= 0
+    safe = jnp.where(found, found_slot, 0)
+    out = {}
+    for name, lane in table.lanes.items():
+        v = lane[safe]
+        out[name] = jnp.where(_bmask(found, v), v, jnp.zeros_like(v))
+    return out, found, found_slot
+
+
+def export_live(table: HashTable) -> Dict[str, np.ndarray]:
+    """Host-side export of live entries (for persistence / suggestion build)."""
+    mask = np.asarray(table.live_mask)
+    out = {
+        "key_hi": np.asarray(table.key_hi)[mask],
+        "key_lo": np.asarray(table.key_lo)[mask],
+    }
+    for name, lane in table.lanes.items():
+        out[name] = np.asarray(lane)[mask]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sessions store: per-session sliding window ring buffers (paper §4.2).
+# ---------------------------------------------------------------------------
+
+class SessionTable(NamedTuple):
+    key_hi: jax.Array    # u32[S]
+    key_lo: jax.Array    # u32[S]
+    ring_hi: jax.Array   # u32[S, W] — recent query fingerprints
+    ring_lo: jax.Array   # u32[S, W]
+    ring_src: jax.Array  # i32[S, W] — interaction source code per entry
+    cursor: jax.Array    # i32[S] — next write position
+    filled: jax.Array    # i32[S] — number of valid ring entries (<= W)
+    last_tick: jax.Array  # i32[S]
+    n_dropped: jax.Array  # i32[]
+
+    @property
+    def capacity(self) -> int:
+        return self.key_hi.shape[0]
+
+    @property
+    def window(self) -> int:
+        return self.ring_hi.shape[1]
+
+
+def make_session_table(capacity: int, window: int) -> SessionTable:
+    assert capacity & (capacity - 1) == 0
+    return SessionTable(
+        key_hi=jnp.zeros((capacity,), jnp.uint32),
+        key_lo=jnp.zeros((capacity,), jnp.uint32),
+        ring_hi=jnp.zeros((capacity, window), jnp.uint32),
+        ring_lo=jnp.zeros((capacity, window), jnp.uint32),
+        ring_src=jnp.zeros((capacity, window), jnp.int32),
+        cursor=jnp.zeros((capacity,), jnp.int32),
+        filled=jnp.zeros((capacity,), jnp.int32),
+        last_tick=jnp.zeros((capacity,), jnp.int32),
+        n_dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+class PairBatch(NamedTuple):
+    """Emitted (predecessor -> new query) cooccurrence pairs, [B*W] flat."""
+    src_hi: jax.Array
+    src_lo: jax.Array
+    src_code: jax.Array
+    dst_hi: jax.Array
+    dst_lo: jax.Array
+    dst_code: jax.Array
+    valid: jax.Array
+
+
+@partial(jax.jit, static_argnames=("probe_rounds",))
+def update_sessions(
+    table: SessionTable,
+    sess_hi: jax.Array,
+    sess_lo: jax.Array,
+    q_hi: jax.Array,
+    q_lo: jax.Array,
+    src_code: jax.Array,
+    tick: jax.Array,
+    valid: jax.Array,
+    *,
+    probe_rounds: int = 16,
+) -> Tuple[SessionTable, PairBatch]:
+    """Append a micro-batch of queries to their sessions; emit pairs.
+
+    Exact order semantics: events are processed in batch order *per session*
+    (stable sort groups a session's events while preserving arrival order);
+    a new query pairs with the W most recent predecessors, drawing first from
+    earlier same-batch events, then from the pre-batch ring window.
+    """
+    S, W = table.capacity, table.window
+    B = q_hi.shape[0]
+    sess_hi = jnp.where(valid, sess_hi, 0).astype(jnp.uint32)
+    sess_lo = jnp.where(valid, sess_lo, 0).astype(jnp.uint32)
+
+    perm = jnp.lexsort((sess_lo, sess_hi))  # stable
+    e_shi, e_slo = sess_hi[perm], sess_lo[perm]
+    e_qhi, e_qlo = q_hi[perm], q_lo[perm]
+    e_src = src_code[perm]
+    e_valid = valid[perm] & ((e_shi != 0) | (e_slo != 0))
+
+    prev_hi = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, jnp.uint32), e_shi[:-1]])
+    prev_lo = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, jnp.uint32), e_slo[:-1]])
+    is_new_run = (e_shi != prev_hi) | (e_slo != prev_lo)
+    seg_id = jnp.cumsum(is_new_run.astype(jnp.int32)) - 1
+    pos_in_run = jnp.arange(B, dtype=jnp.int32) - jax.ops.segment_min(
+        jnp.arange(B, dtype=jnp.int32), seg_id, num_segments=B)[seg_id]
+    run_len = jax.ops.segment_sum(jnp.ones((B,), jnp.int32), seg_id, num_segments=B)[seg_id]
+
+    # ---- find/create the session row: probe with run representatives. ----
+    rep = is_new_run & e_valid
+    h0 = probe_hash(e_shi, e_slo)
+    found_slot = jnp.full((B,), -1, jnp.int32)
+    for r in range(probe_rounds):
+        slot = _probe_slot(h0, r, S)
+        hit = rep & (found_slot < 0) & (table.key_hi[slot] == e_shi) & (table.key_lo[slot] == e_slo)
+        found_slot = jnp.where(hit, slot.astype(jnp.int32), found_slot)
+    key_hi_tab, key_lo_tab = table.key_hi, table.key_lo
+    placed = found_slot >= 0
+    row = found_slot
+    for r in range(probe_rounds):
+        want = rep & ~placed
+        slot = _probe_slot(h0, r, S)
+        empty = (key_hi_tab[slot] == 0) & (key_lo_tab[slot] == 0)
+        contend = want & empty
+        claim = jnp.full((S,), -1, jnp.int32)
+        claim = claim.at[slot].max(jnp.where(contend, jnp.arange(B, dtype=jnp.int32), -1))
+        won = contend & (claim[slot] == jnp.arange(B, dtype=jnp.int32))
+        drop_slot = jnp.where(won, slot.astype(jnp.int32), S)
+        key_hi_tab = key_hi_tab.at[drop_slot].set(e_shi, mode="drop")
+        key_lo_tab = key_lo_tab.at[drop_slot].set(e_slo, mode="drop")
+        row = jnp.where(won, slot.astype(jnp.int32), row)
+        placed = placed | won
+    dropped = jnp.sum((rep & ~placed).astype(jnp.int32))
+    # Broadcast the representative's row to every event in its run.
+    rep_row = jax.ops.segment_max(jnp.where(rep, row, -1), seg_id, num_segments=B)
+    row = rep_row[seg_id]
+    e_ok = e_valid & (row >= 0)
+    safe_row = jnp.where(e_ok, row, 0)
+
+    pre_cursor = table.cursor[safe_row]
+    pre_filled = table.filled[safe_row]
+
+    # ---- emit pairs: d-th most recent predecessor, d = 1..W. ----
+    n_intra = jnp.minimum(pos_in_run, W)
+    pair_src_hi = jnp.zeros((B, W), jnp.uint32)
+    pair_src_lo = jnp.zeros((B, W), jnp.uint32)
+    pair_src_code = jnp.zeros((B, W), jnp.int32)
+    pair_ok = jnp.zeros((B, W), bool)
+    idx = jnp.arange(B, dtype=jnp.int32)
+    for d in range(1, W + 1):
+        take_intra = (d <= n_intra)
+        j = jnp.maximum(idx - d, 0)
+        intra_hi, intra_lo, intra_src = e_qhi[j], e_qlo[j], e_src[j]
+        age = d - 1 - n_intra  # >= 0 when not intra
+        ring_ok = (~take_intra) & (age < jnp.minimum(W - n_intra, pre_filled))
+        ring_pos = jnp.mod(pre_cursor - 1 - age, W)
+        r_hi = table.ring_hi[safe_row, jnp.where(ring_ok, ring_pos, 0)]
+        r_lo = table.ring_lo[safe_row, jnp.where(ring_ok, ring_pos, 0)]
+        r_src = table.ring_src[safe_row, jnp.where(ring_ok, ring_pos, 0)]
+        s_hi = jnp.where(take_intra, intra_hi, r_hi)
+        s_lo = jnp.where(take_intra, intra_lo, r_lo)
+        s_sc = jnp.where(take_intra, intra_src, r_src)
+        ok = e_ok & (take_intra | ring_ok) & ((s_hi != 0) | (s_lo != 0))
+        # drop self-pairs (identical consecutive queries)
+        ok = ok & ~((s_hi == e_qhi) & (s_lo == e_qlo))
+        pair_src_hi = pair_src_hi.at[:, d - 1].set(s_hi)
+        pair_src_lo = pair_src_lo.at[:, d - 1].set(s_lo)
+        pair_src_code = pair_src_code.at[:, d - 1].set(s_sc)
+        pair_ok = pair_ok.at[:, d - 1].set(ok)
+
+    # ---- write the last min(W, run_len) events of each run into the ring. ----
+    should_write = e_ok & (pos_in_run >= run_len - W)
+    wpos = jnp.mod(pre_cursor + pos_in_run, W)
+    w_row = jnp.where(should_write, safe_row, S)  # OOB => dropped
+    ring_hi = table.ring_hi.at[w_row, wpos].set(e_qhi, mode="drop")
+    ring_lo = table.ring_lo.at[w_row, wpos].set(e_qlo, mode="drop")
+    ring_src = table.ring_src.at[w_row, wpos].set(e_src, mode="drop")
+
+    # cursor/filled advance once per run (apply at the run's last event).
+    is_last = jnp.concatenate([is_new_run[1:], jnp.ones((1,), bool)])
+    adv = e_ok & is_last
+    a_row = jnp.where(adv, safe_row, S)
+    new_cursor = jnp.mod(pre_cursor + run_len, W)
+    new_filled = jnp.minimum(pre_filled + run_len, W)
+    cursor = table.cursor.at[a_row].set(new_cursor, mode="drop")
+    filled = table.filled.at[a_row].set(new_filled, mode="drop")
+    last_tick = table.last_tick.at[a_row].set(
+        jnp.full((B,), tick, jnp.int32), mode="drop")
+
+    new_table = SessionTable(key_hi_tab, key_lo_tab, ring_hi, ring_lo, ring_src,
+                             cursor, filled, last_tick, table.n_dropped + dropped)
+
+    pairs = PairBatch(
+        src_hi=pair_src_hi.reshape(-1),
+        src_lo=pair_src_lo.reshape(-1),
+        src_code=pair_src_code.reshape(-1),
+        dst_hi=jnp.broadcast_to(e_qhi[:, None], (B, W)).reshape(-1),
+        dst_lo=jnp.broadcast_to(e_qlo[:, None], (B, W)).reshape(-1),
+        dst_code=jnp.broadcast_to(e_src[:, None], (B, W)).reshape(-1),
+        valid=pair_ok.reshape(-1),
+    )
+    return new_table, pairs
+
+
+@jax.jit
+def evict_sessions(table: SessionTable, tick: jax.Array, ttl: int) -> SessionTable:
+    """Prune sessions with no recent activity (paper's decay/prune cycle)."""
+    live = (table.key_hi != 0) | (table.key_lo != 0)
+    stale = live & ((tick - table.last_tick) > ttl)
+    keep = ~stale
+    return table._replace(
+        key_hi=jnp.where(keep, table.key_hi, 0),
+        key_lo=jnp.where(keep, table.key_lo, 0),
+        cursor=jnp.where(keep, table.cursor, 0),
+        filled=jnp.where(keep, table.filled, 0),
+    )

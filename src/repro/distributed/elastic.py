@@ -1,0 +1,52 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+Checkpoints store host (unsharded) arrays; loading for a new mesh is a
+device_put with the target NamedShardings derived from the same logical
+sharding rules — so a run checkpointed on a (16, 16) single pod restarts
+unchanged on (2, 16, 16), (8, 8), or 1 device. The only requirement is
+that sharded dims remain divisible by the new axis sizes (checked here,
+with clear errors)."""
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import params_shardings, use_mesh
+
+
+def validate_divisibility(tree: Any, shardings: Any, mesh: Mesh) -> List[str]:
+    problems = []
+
+    def check(path, leaf, sh):
+        if not isinstance(sh, NamedSharding):
+            return
+        for dim, axes in enumerate(sh.spec):
+            if axes is None:
+                continue
+            ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+            size = int(np.prod([mesh.shape[a] for a in ax_tuple]))
+            if leaf.shape[dim] % size:
+                problems.append(
+                    f"{'/'.join(map(str, path))}: dim {dim} ({leaf.shape[dim]})"
+                    f" not divisible by {size}")
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), tree, shardings)
+    return problems
+
+
+def reshard_for_mesh(host_tree: Any, mesh: Mesh,
+                     rules: Sequence[Tuple[str, Tuple]]) -> Any:
+    """Place a host pytree onto ``mesh`` under the logical rules."""
+    shape_tree = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), np.asarray(x).dtype),
+        host_tree)
+    shardings = params_shardings(mesh, shape_tree, rules)
+    problems = validate_divisibility(shape_tree, shardings, mesh)
+    if problems:
+        raise ValueError("cannot reshard: " + "; ".join(problems))
+    with use_mesh(mesh):
+        return jax.tree.map(
+            lambda x, s: jax.device_put(np.asarray(x), s), host_tree, shardings)

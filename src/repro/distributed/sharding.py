@@ -1,0 +1,147 @@
+"""Sharding rules + mesh-context plumbing.
+
+Models are written against LOGICAL axis names:
+
+  * ``dp``    — pure data parallelism (maps to ('pod', 'data') or ('data',))
+  * ``tp``    — tensor/model parallelism (maps to ('model',))
+
+``constrain(x, *logical_axes)`` applies a with_sharding_constraint only when
+a mesh context is active (set by the launcher / dryrun via ``use_mesh``), so
+the same model code runs unsharded on a laptop and sharded on a pod.
+
+A per-model "sharding rules" table maps parameter-tree path patterns to
+PartitionSpecs; ``params_shardings`` walks a params pytree and produces the
+NamedSharding tree for jit in_shardings.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def logical_axes() -> Dict[str, Tuple[str, ...]]:
+    """Logical -> physical axis mapping for the current mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return {}
+    names = mesh.axis_names
+    if "pod" in names:
+        return {"dp": ("pod", "data"), "tp": ("model",),
+                "all": ("pod", "data", "model")}
+    if "data" in names:
+        return {"dp": ("data",), "tp": ("model",),
+                "all": ("data", "model")}
+    # single-axis meshes (e.g. the sharded engine's ("shard",))
+    return {"dp": (names[0],), "tp": (), "all": (names[0],)}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = getattr(_ctx, "mesh", None)
+    _ctx.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ctx.mesh = prev
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if isinstance(phys, tuple):
+        return int(np.prod([mesh.shape[a] for a in phys]))
+    return int(mesh.shape[phys])
+
+
+def resolve(*logical: Optional[str], shape: Optional[Tuple[int, ...]] = None,
+            unconstrained_fallback: bool = False) -> P:
+    """Logical axis names -> PartitionSpec under the current mesh.
+
+    With ``shape``, axes that do not evenly divide their dim are DROPPED
+    (GSPMD rejects uneven shardings): replaced by UNCONSTRAINED inside jit
+    constraints (let propagation decide) or None for in/out shardings.
+    """
+    table = logical_axes()
+    mesh = current_mesh()
+    out = []
+    for i, ax in enumerate(logical):
+        if ax is None:
+            out.append(None)
+            continue
+        phys = table.get(ax, ())
+        if len(phys) == 0:
+            out.append(None)
+            continue
+        entry = phys[0] if len(phys) == 1 else phys
+        if shape is not None and mesh is not None:
+            if shape[i] % _axis_size(mesh, entry):
+                out.append(P.UNCONSTRAINED if unconstrained_fallback else None)
+                continue
+        out.append(entry)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Sharding constraint by logical axes; no-op without a mesh context.
+    Non-divisible dims are left unconstrained (propagation decides)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve(*logical, shape=x.shape, unconstrained_fallback=True)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*logical: Optional[str],
+                   shape: Optional[Tuple[int, ...]] = None
+                   ) -> Optional[NamedSharding]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(*logical, shape=shape))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules: path-regex -> logical axes per dim.
+# ---------------------------------------------------------------------------
+
+def params_shardings(mesh: Mesh, params_shape, rules: Sequence[Tuple[str, Tuple]]):
+    """Build a NamedSharding tree for a params pytree.
+
+    rules: list of (path_regex, logical_axes_tuple). First match wins; a
+    non-matching leaf is fully replicated. logical axes use 'dp'/'tp'/None.
+    """
+    with use_mesh(mesh):
+        def leaf_spec(path, leaf):
+            pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            for pat, axes in rules:
+                if re.search(pat, pstr):
+                    # pad axes to leaf rank; drop non-divisible axes
+                    ax = tuple(axes) + (None,) * (leaf.ndim - len(axes))
+                    return NamedSharding(
+                        mesh, resolve(*ax[: leaf.ndim], shape=leaf.shape))
+            return NamedSharding(mesh, P())
+        return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def batch_shardings(mesh: Mesh, batch_shape, batch_axis: str = "dp"):
+    """Shard every batch leaf on its leading dim over dp (others replicated)."""
+    with use_mesh(mesh):
+        def leaf_spec(leaf):
+            if leaf.ndim == 0:
+                return NamedSharding(mesh, P())
+            return NamedSharding(
+                mesh, resolve(batch_axis, *([None] * (leaf.ndim - 1)),
+                              shape=leaf.shape))
+        return jax.tree_util.tree_map(leaf_spec, batch_shape)

@@ -1,0 +1,98 @@
+"""Fused association scoring (Pallas TPU kernel) — the ranking-cycle hot loop.
+
+One pass over the cooccurrence store computes all four association lanes
+(conditional probability, PMI, log-likelihood ratio, chi-squared — paper
+§2.4) AND their linear combination. Unfused, XLA materializes several
+intermediate [C]-sized lanes in HBM; fused, each of the six input lanes is
+read once and one output lane is written.
+
+Layout mirrors decay_prune: (C/1024, 8, 128) tiles, 1-D grid.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .decay_prune import LANE, SUBLANE, TILE, ROWS_PER_BLOCK
+
+
+def _make_kernel(coefs: Tuple[float, float, float, float]):
+    c0, c1, c2, c3 = [float(c) for c in coefs]  # python literals, not arrays
+
+    def _xlogx(x):
+        return jnp.where(x > 0, x * jnp.log(jnp.maximum(x, 1e-30)), 0.0)
+
+    def kernel(w_ab_ref, c_ab_ref, w_a_ref, w_b_ref, c_a_ref, c_b_ref,
+               tw_ref, tc_ref, out_ref):
+        eps = jnp.float32(1e-9)
+        w_ab = w_ab_ref[...]
+        c_ab = c_ab_ref[...]
+        w_a = jnp.maximum(w_a_ref[...], 0.0)
+        w_b = jnp.maximum(w_b_ref[...], 0.0)
+        c_a = c_a_ref[...]
+        c_b = c_b_ref[...]
+        total_w = tw_ref[0]
+        total_c = tc_ref[0]
+
+        condprob = jnp.where(w_a > 0, w_ab / jnp.maximum(w_a, eps), 0.0)
+        pmi = jnp.where(
+            (w_ab > 0) & (w_a > 0) & (w_b > 0),
+            jnp.log(jnp.maximum(w_ab * jnp.maximum(total_w, eps), eps)
+                    / jnp.maximum(w_a * w_b, eps)),
+            0.0)
+        k11 = c_ab
+        k12 = jnp.maximum(c_a - c_ab, 0.0)
+        k21 = jnp.maximum(c_b - c_ab, 0.0)
+        k22 = jnp.maximum(total_c - c_a - c_b + c_ab, 0.0)
+        n = jnp.maximum(k11 + k12 + k21 + k22, eps)
+        r1, r2 = k11 + k12, k21 + k22
+        q1, q2 = k11 + k21, k12 + k22
+        llr = 2.0 * (_xlogx(k11) + _xlogx(k12) + _xlogx(k21) + _xlogx(k22)
+                     - _xlogx(r1) - _xlogx(r2) - _xlogx(q1) - _xlogx(q2)
+                     + _xlogx(n))
+        llr = jnp.maximum(llr, 0.0)
+        chi2 = n * (k11 * k22 - k12 * k21) ** 2 / jnp.maximum(r1 * r2 * q1 * q2, eps)
+        valid = c_ab > 0
+        condprob = jnp.where(valid, condprob, 0.0)
+        pmi = jnp.where(valid, pmi, 0.0)
+        llr = jnp.where(valid, llr, 0.0)
+        chi2 = jnp.where(valid, chi2, 0.0)
+        score = (c0 * condprob + c1 * jax.nn.sigmoid(pmi)
+                 + c2 * jnp.log1p(llr) + c3 * jnp.log1p(chi2))
+        out_ref[...] = score
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("coefs", "interpret"))
+def assoc_score(w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c,
+                *, coefs: Tuple[float, float, float, float],
+                interpret: bool = True) -> jax.Array:
+    C = w_ab.shape[0]
+    assert C % TILE == 0
+    rows = C // TILE
+    blk = min(ROWS_PER_BLOCK, rows)
+    assert rows % blk == 0
+    grid = rows // blk
+    shape3 = (rows, SUBLANE, LANE)
+
+    spec = pl.BlockSpec((blk, SUBLANE, LANE), lambda i: (i, 0, 0))
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    args = [x.astype(jnp.float32).reshape(shape3)
+            for x in (w_ab, c_ab, w_a, w_b, c_a, c_b)]
+    tw = jnp.asarray(total_w, jnp.float32).reshape(1)
+    tc = jnp.asarray(total_c, jnp.float32).reshape(1)
+
+    out = pl.pallas_call(
+        _make_kernel(coefs),
+        grid=(grid,),
+        in_specs=[spec] * 6 + [sspec, sspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(shape3, jnp.float32),
+        interpret=interpret,
+    )(*args, tw, tc)
+    return out.reshape(C)

@@ -1,0 +1,95 @@
+"""Fused decay + prune + occupancy sweep (Pallas TPU kernel).
+
+The paper's decay/prune cycle (§4.3) touches every store entry: decay all
+weights, clear entries under the prune threshold, and (for monitoring /
+§4.4 memory control) report live occupancy and total weight. Done naively
+this is three full HBM passes over the table (decay write, prune write,
+stats read); the fused kernel does ONE read + ONE write per lane plus a
+per-block stats reduction.
+
+TPU layout: the 1-D table arrays (capacity C, a power of two) are viewed as
+(C/1024, 8, 128) so each block is an aligned (8, 128) VPU tile; the grid
+walks row-blocks of ROWS_PER_BLOCK tiles. Stats are accumulated per grid
+step into a small (grid,)-shaped output and reduced on the host side of the
+call (one extra tiny pass).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+TILE = LANE * SUBLANE            # 1024 elements per tile
+ROWS_PER_BLOCK = 16              # 16 tiles = 16KiB f32 per lane per block
+
+
+def _kernel(key_hi_ref, key_lo_ref, w_ref, f_ref, t_ref,
+            out_hi_ref, out_lo_ref, out_w_ref, live_ref, tot_ref):
+    f = f_ref[0]
+    thresh = t_ref[0]
+    k_hi = key_hi_ref[...]
+    k_lo = key_lo_ref[...]
+    w = w_ref[...]
+    live = (k_hi != 0) | (k_lo != 0)
+    w2 = w * f
+    keep = live & (w2 >= thresh)
+    w_out = jnp.where(keep, w2, 0.0)
+    out_hi_ref[...] = jnp.where(keep, k_hi, jnp.uint32(0))
+    out_lo_ref[...] = jnp.where(keep, k_lo, jnp.uint32(0))
+    out_w_ref[...] = w_out
+    live_ref[0] = jnp.sum(keep.astype(jnp.float32))
+    tot_ref[0] = jnp.sum(w_out)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decay_prune(key_hi: jax.Array, key_lo: jax.Array, weight: jax.Array,
+                decay_factor: jax.Array, threshold: jax.Array,
+                *, interpret: bool = True
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused sweep over (key_hi, key_lo, weight) table arrays.
+
+    Returns (key_hi', key_lo', weight', live_count i32[], total_weight f32[]).
+    Auxiliary lanes of the store are cleared by the caller using the
+    returned keys (a pruned slot has key (0,0)).
+    """
+    C = key_hi.shape[0]
+    assert C % TILE == 0, "table capacity must be a multiple of 1024"
+    rows = C // TILE
+    blk = min(ROWS_PER_BLOCK, rows)
+    assert rows % blk == 0
+    grid = rows // blk
+
+    shape3 = (rows, SUBLANE, LANE)
+    kh = key_hi.reshape(shape3)
+    kl = key_lo.reshape(shape3)
+    w = weight.reshape(shape3)
+    f = jnp.asarray(decay_factor, jnp.float32).reshape(1)
+    t = jnp.asarray(threshold, jnp.float32).reshape(1)
+
+    spec = pl.BlockSpec((blk, SUBLANE, LANE), lambda i: (i, 0, 0))
+    sspec = pl.BlockSpec((1,), lambda i: (0,), memory_space=pl.ANY) \
+        if False else pl.BlockSpec((1,), lambda i: (0,))
+    stat_spec = pl.BlockSpec((1,), lambda i: (i,))
+
+    out_hi, out_lo, out_w, live_p, tot_p = pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[spec, spec, spec, sspec, sspec],
+        out_specs=[spec, spec, spec, stat_spec, stat_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(shape3, jnp.uint32),
+            jax.ShapeDtypeStruct(shape3, jnp.uint32),
+            jax.ShapeDtypeStruct(shape3, jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+            jax.ShapeDtypeStruct((grid,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kh, kl, w, f, t)
+
+    return (out_hi.reshape(C), out_lo.reshape(C), out_w.reshape(C),
+            jnp.sum(live_p).astype(jnp.int32), jnp.sum(tot_p))

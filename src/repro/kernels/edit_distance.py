@@ -1,0 +1,130 @@
+"""Batched weighted edit distance (Pallas TPU kernel) — spelling correction.
+
+The paper's spelling path computes "a pairwise edit distance variant
+calculation between all queries observed within a long span of time" (§4.5).
+The variant here (identical to ``ref.edit_distance_ref``):
+
+  * adjacent transpositions are one edit (optimal string alignment),
+  * edits touching the FIRST character of either string cost
+    ``first_char_cost`` (mistakes cluster on internal characters),
+  * strings are byte arrays, zero-padded to a fixed L (<= 24 for queries).
+
+TPU adaptation: the textbook row-major DP is sequential in both i and j.
+We run the **anti-diagonal wavefront**: diagonal d holds D[i][d-i]; each of
+the 2L diagonals is computed as a vector op over i (and over the pair batch),
+keeping a 4-deep ring of diagonals in VMEM (the transposition term needs
+d-4). One kernel instance processes a PAIR_BLOCK of pairs; arrays are
+(PAIR_BLOCK, L+1) f32 — a few KiB, comfortably VMEM-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAIR_BLOCK = 128
+
+
+def _make_kernel(L: int, first_char_cost: float):
+    fc = float(first_char_cost)   # python literals (closure constants)
+    BIG = 1e9
+
+    def kernel(a_ref, al_ref, b_ref, bl_ref, out_ref):
+        a = a_ref[...].astype(jnp.int32)      # (B, L)
+        b = b_ref[...].astype(jnp.int32)
+        al = al_ref[...].astype(jnp.int32)    # (B,)
+        bl = bl_ref[...].astype(jnp.int32)
+        B = a.shape[0]
+        ii = jnp.arange(L + 1, dtype=jnp.int32)          # i lane
+        col0 = jnp.where(ii == 0, 0.0, fc + (ii - 1.0))  # D[i][0]
+        row0 = col0                                       # D[0][j] symmetric
+
+        def boundary(d):
+            """Diagonal holding only boundary-consistent values."""
+            # cell (i, j=d-i): i==0 -> row0[d]; i==d -> col0[d]; else filled in
+            return jnp.zeros((B, L + 1), jnp.float32)
+
+        def diag_step(d, carry):
+            dm1, dm2, dm3, dm4, out = carry
+            j = d - ii                                    # per-lane j
+            valid = (ii >= jnp.maximum(0, d - L)) & (ii <= jnp.minimum(d, L))
+            # gather a[i-1], b[j-1] per lane
+            a_i = jnp.take_along_axis(
+                a, jnp.clip(ii - 1, 0, L - 1)[None, :].repeat(B, 0), axis=1)
+            bj_idx = jnp.clip(j - 1, 0, L - 1)
+            b_j = jnp.take_along_axis(b, bj_idx[None, :].repeat(B, 0), axis=1)
+
+            # neighbor diagonals (shift in i)
+            dm1_im1 = jnp.roll(dm1, 1, axis=1)            # D[i-1][j]   (d-1)
+            dm2_im1 = jnp.roll(dm2, 1, axis=1)            # D[i-1][j-1] (d-2)
+            dm4_im2 = jnp.roll(dm4, 2, axis=1)            # D[i-2][j-2] (d-4)
+
+            sub_w = jnp.where((ii == 1) | (j == 1), fc, 1.0)
+            ins_w = jnp.where(j == 1, fc, 1.0)
+            del_w = jnp.where(ii == 1, fc, 1.0)
+            sub = dm2_im1 + jnp.where(a_i == b_j, 0.0, sub_w)[...]
+            ins = dm1 + ins_w
+            dele = dm1_im1 + del_w
+            dnew = jnp.minimum(jnp.minimum(sub, ins), dele)
+
+            # transposition
+            a_im1 = jnp.take_along_axis(
+                a, jnp.clip(ii - 2, 0, L - 1)[None, :].repeat(B, 0), axis=1)
+            b_jm1 = jnp.take_along_axis(
+                b, jnp.clip(j - 2, 0, L - 1)[None, :].repeat(B, 0), axis=1)
+            can_t = (ii >= 2) & (j >= 2)
+            tw = jnp.where((ii == 2) | (j == 2), fc, 1.0)
+            tmatch = can_t & (a_im1 == b_j) & (a_i == b_jm1)
+            dnew = jnp.minimum(dnew, jnp.where(tmatch, dm4_im2 + tw, BIG))
+
+            # boundaries
+            dnew = jnp.where(ii == 0, row0[jnp.clip(d, 0, L)], dnew)
+            dnew = jnp.where(j == 0, col0[jnp.clip(d, 0, L)], dnew)
+            dnew = jnp.where(valid[None, :], dnew, BIG)
+
+            # capture result when d == al + bl (one-hot gather at i == al)
+            hit = (d == al + bl)
+            sel = jnp.sum(jnp.where(ii[None, :] == al[:, None], dnew, 0.0), axis=1)
+            out = jnp.where(hit, sel, out)
+            return (dnew, dm1, dm2, dm3, out)
+
+        # d = 0 diagonal: single cell D[0][0] = 0
+        d0 = jnp.where(ii[None, :] == 0, 0.0, BIG) * jnp.ones((B, 1), jnp.float32)
+        neg = jnp.full((B, L + 1), BIG, jnp.float32)
+        out = jnp.where(al + bl == 0, 0.0, BIG).astype(jnp.float32)
+        carry = (d0, neg, neg, neg, out)
+        carry = jax.lax.fori_loop(1, 2 * L + 1, diag_step, carry)
+        out_ref[...] = carry[4]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("first_char_cost", "interpret"))
+def edit_distance(a_chars, a_len, b_chars, b_len, *,
+                  first_char_cost: float = 1.5,
+                  interpret: bool = True) -> jax.Array:
+    """Weighted OSA distance per pair. a_chars/b_chars u8[B, L]."""
+    B, L = a_chars.shape
+    blk = min(PAIR_BLOCK, B)
+    pad = (-B) % blk
+    if pad:
+        a_chars = jnp.pad(a_chars, ((0, pad), (0, 0)))
+        b_chars = jnp.pad(b_chars, ((0, pad), (0, 0)))
+        a_len = jnp.pad(a_len, (0, pad))
+        b_len = jnp.pad(b_len, (0, pad))
+    Bp = B + pad
+    grid = Bp // blk
+
+    spec2 = pl.BlockSpec((blk, L), lambda i: (i, 0))
+    spec1 = pl.BlockSpec((blk,), lambda i: (i,))
+    out = pl.pallas_call(
+        _make_kernel(L, first_char_cost),
+        grid=(grid,),
+        in_specs=[spec2, spec1, spec2, spec1],
+        out_specs=spec1,
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.float32),
+        interpret=interpret,
+    )(a_chars, jnp.asarray(a_len, jnp.int32), b_chars, jnp.asarray(b_len, jnp.int32))
+    return out[:B]

@@ -1,0 +1,123 @@
+"""Flash attention forward (Pallas TPU kernel): causal, sliding-window, GQA.
+
+IO-aware attention for the LM architectures: never materializes the
+[Tq, Tk] score matrix in HBM. Online softmax with running (m, l) statistics;
+K/V are streamed block-by-block through VMEM via the innermost grid
+dimension (sequential on TPU), the output block is revisited and finalized
+on the last K block.
+
+Supports:
+  * causal masking with end-alignment (decode: Tq < Tk aligns to the end),
+  * sliding-window attention (Mistral/Mixtral-style SWA, `window` > 0),
+  * grouped-query attention (Hq a multiple of Hkv) via the K/V index map.
+
+Backward is delegated to the XLA reference (``ops.flash_attention`` wires a
+custom_vjp whose bwd recomputes with the jnp oracle) — the training path in
+this framework defaults to XLA attention; the kernel is the serving-path
+fast forward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+MIN_LANE = 128
+
+
+def _make_kernel(*, bq: int, bk: int, nk: int, tq: int, tk: int,
+                 causal: bool, window: int, scale: float):
+    def kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+        ik = pl.program_id(3)
+        iq = pl.program_id(2)
+
+        @pl.when(ik == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+            + (tk - tq)
+        k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < tk
+        if causal:
+            mask &= k_pos <= q_pos
+        if window and window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...][:, :1]                   # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                       # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)               # (bq, 1)
+        l_new = corr * l_ref[...][:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+        @pl.when(ik == nk - 1)
+        def _finalize():
+            l = l_ref[...][:, :1]
+            o_ref[0, 0] = jnp.where(
+                l > 0, acc_ref[...] / jnp.maximum(l, 1e-30), 0.0
+            ).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "scale", "block_q",
+                                    "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D] -> [B, Hq, Tq, D]."""
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0
+    rep = Hq // Hkv
+    scale = float(scale) if scale is not None else float(1.0 / (D ** 0.5))
+
+    bq = min(block_q, Tq)
+    bk = min(block_k, Tk)
+    pad_q = (-Tq) % bq
+    pad_k = (-Tk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0))) if pad_k else v
+    nq = qp.shape[2] // bq
+    nk = kp.shape[2] // bk
+
+    grid = (B, Hq, nq, nk)
+    out = pl.pallas_call(
+        _make_kernel(bq=bq, bk=bk, nk=nk, tq=Tq, tk=Tk, causal=causal,
+                     window=window, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),        # acc
+            pltpu.VMEM((bq, MIN_LANE), jnp.float32),  # running max m
+            pltpu.VMEM((bq, MIN_LANE), jnp.float32),  # running denom l
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Tq]

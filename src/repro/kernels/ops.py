@@ -1,0 +1,107 @@
+"""Public jit'd wrappers for the Pallas kernels, with ref fallbacks.
+
+On this (CPU) container every kernel executes via ``interpret=True``; on a
+real TPU backend set ``interpret=False`` (auto-detected). The wrappers keep
+kernel-vs-oracle selection in ONE place so the engine/models just call ops.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from . import decay_prune as _dp
+from . import assoc_score as _as
+from . import edit_distance as _ed
+from . import flash_attention as _fa
+
+_INTERPRET = jax.default_backend() != "tpu"
+# The blocked sweeps require 1024-multiple capacities.
+_TILE = _dp.TILE
+
+
+def decay_prune_table(table, dticks, *, cfg, weight_lanes: Tuple[str, ...]):
+    """Fused decay/prune sweep over a HashTable (engine decay cycle)."""
+    from ..core.stores import HashTable
+    primary = weight_lanes[0]
+    f = cfg.factor(dticks)
+    if table.capacity % _TILE:
+        # ragged capacity: fall back to the jnp path semantics
+        kh, kl, w, keep, live, tot = ref.decay_prune_ref(
+            table.key_hi, table.key_lo, table.lanes[primary], f,
+            cfg.prune_threshold)
+    else:
+        kh, kl, w, live, tot = _dp.decay_prune(
+            table.key_hi, table.key_lo, table.lanes[primary], f,
+            jnp.float32(cfg.prune_threshold), interpret=_INTERPRET)
+        keep = (kh != 0) | (kl != 0)
+    lanes = dict(table.lanes)
+    lanes[primary] = w
+    for name in weight_lanes[1:]:
+        lanes[name] = jnp.where(keep, lanes[name] * f, 0.0)
+    for name, lane in lanes.items():
+        if name not in weight_lanes:
+            kb = keep.reshape(keep.shape + (1,) * (lane.ndim - 1))
+            lanes[name] = jnp.where(kb, lane, jnp.zeros_like(lane))
+    return table._replace(key_hi=kh, key_lo=kl, lanes=lanes), live, tot
+
+
+def assoc_score(w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c, *,
+                coefs: Tuple[float, float, float, float]):
+    """Fused association scoring over full store lanes."""
+    if w_ab.shape[0] % _TILE:
+        return ref.assoc_score_ref(w_ab, c_ab, w_a, w_b, c_a, c_b,
+                                   total_w, total_c, coefs)
+    return _as.assoc_score(w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c,
+                           coefs=tuple(float(c) for c in coefs),
+                           interpret=_INTERPRET)
+
+
+def edit_distance(a_chars, a_len, b_chars, b_len, *,
+                  first_char_cost: float = 1.5, use_kernel: bool = True):
+    """Batched weighted OSA edit distance."""
+    a_chars = jnp.asarray(a_chars)
+    b_chars = jnp.asarray(b_chars)
+    a_len = jnp.asarray(a_len, jnp.int32)
+    b_len = jnp.asarray(b_len, jnp.int32)
+    if not use_kernel:
+        return ref.edit_distance_ref(a_chars, a_len, b_chars, b_len,
+                                     first_char_cost)
+    return _ed.edit_distance(a_chars, a_len, b_chars, b_len,
+                             first_char_cost=float(first_char_cost),
+                             interpret=_INTERPRET)
+
+
+# ---------------------------------------------------------------------------
+# flash attention with a custom_vjp: Pallas forward, oracle backward.
+# ---------------------------------------------------------------------------
+
+def _fa_fwd_impl(q, k, v, causal, window):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=_INTERPRET)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    return _fa_fwd_impl(q, k, v, causal, window)
+
+
+def _fa_fwd(q, k, v, causal, window):
+    return _fa_fwd_impl(q, k, v, causal, window), (q, k, v)
+
+
+def _fa_bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.flash_attention_ref(
+            q_, k_, v_, causal=causal, window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

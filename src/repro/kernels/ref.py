@@ -1,0 +1,143 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function defines the exact semantics its kernel must reproduce; kernel
+tests sweep shapes/dtypes and ``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ranking import assoc_scores_jnp
+
+
+# ---------------------------------------------------------------------------
+# decay_prune: fused decay + prune + occupancy stats over a store's arrays.
+# ---------------------------------------------------------------------------
+
+def decay_prune_ref(key_hi, key_lo, weight, decay_factor, threshold):
+    """Returns (key_hi', key_lo', weight', keep_mask, live_count, total_w)."""
+    live = (key_hi != 0) | (key_lo != 0)
+    w = weight * decay_factor
+    keep = live & (w >= threshold)
+    w = jnp.where(keep, w, 0.0)
+    return (jnp.where(keep, key_hi, 0), jnp.where(keep, key_lo, 0), w, keep,
+            jnp.sum(keep.astype(jnp.int32)), jnp.sum(w))
+
+
+# ---------------------------------------------------------------------------
+# assoc_score: fused association scoring (ranking-cycle hot loop).
+# ---------------------------------------------------------------------------
+
+def assoc_score_ref(w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c,
+                    coefs: Tuple[float, float, float, float]):
+    condprob, pmi, llr, chi2 = assoc_scores_jnp(
+        w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c)
+    c0, c1, c2, c3 = coefs
+    return (c0 * condprob + c1 * jax.nn.sigmoid(pmi)
+            + c2 * jnp.log1p(llr) + c3 * jnp.log1p(chi2))
+
+
+# ---------------------------------------------------------------------------
+# edit_distance: batched weighted Damerau (OSA) distance, first-char penalty.
+# ---------------------------------------------------------------------------
+
+def edit_distance_ref(a_chars, a_len, b_chars, b_len, first_char_cost=1.5):
+    """Weighted optimal-string-alignment distance.
+
+    a_chars/b_chars: u8[B, L] zero-padded; lengths i32[B]. Edits touching the
+    first character of either string cost ``first_char_cost``; all other
+    edits cost 1. Adjacent transpositions are a single edit.
+    Returns f32[B].
+    """
+    B, L = a_chars.shape
+    a = a_chars.astype(jnp.int32)
+    b = b_chars.astype(jnp.int32)
+    big = jnp.float32(1e9)
+
+    # D has shape (B, L+1, L+1); row-by-row scan (rows are i over `a`).
+    j_idx = jnp.arange(L + 1, dtype=jnp.float32)
+    # first-char-weighted boundary: D[0, j] = fc + (j-1) for j >= 1
+    fc = jnp.float32(first_char_cost)
+    row0 = jnp.where(j_idx == 0, 0.0, fc + (j_idx - 1.0))
+
+    def cost_at(i, j_is_1):
+        # an edit consuming position i of `a` (i is 1-based) or the first
+        # char of `b` is weighted.
+        return jnp.where((i == 1) | j_is_1, fc, 1.0)
+
+    def row_step(carry, i):
+        prev2, prev1 = carry  # rows i-2 and i-1, each (B, L+1)
+        ai = a[:, i - 1]                       # (B,)
+        del_cost = jnp.where(i == 1, fc, 1.0)
+        # D[i][0]
+        d0 = jnp.where(i == 1, fc, prev1[:, 0] + 1.0)
+
+        # j-loop must be sequential (insertion dep) -> inner scan over j.
+        def col_step(dprev, j):
+            # dprev: (B,) = D[i][j-1]
+            bj = b[:, j - 1]
+            sub_w = jnp.where((i == 1) | (j == 1), fc, 1.0)
+            ins_w = jnp.where(j == 1, fc, 1.0)
+            del_w = jnp.where(i == 1, fc, 1.0)
+            sub = prev1[:, j - 1] + jnp.where(ai == bj, 0.0, sub_w)
+            ins = dprev + ins_w
+            dele = prev1[:, j] + del_w
+            d = jnp.minimum(jnp.minimum(sub, ins), dele)
+            # transposition: a[i-2]==b[j-1] and a[i-1]==b[j-2]
+            can_t = (i >= 2) & (j >= 2)
+            tw = jnp.where((i == 2) | (j == 2), fc, 1.0)  # touches first char
+            at2 = a[:, jnp.maximum(i - 2, 0)]
+            bt2 = b[:, jnp.maximum(j - 2, 0)]
+            tmatch = can_t & (at2 == bj) & (ai == bt2)
+            trans = jnp.where(tmatch, prev2[:, jnp.maximum(j - 2, 0)] + tw, big)
+            d = jnp.minimum(d, trans)
+            return d, d
+
+        _, cols = jax.lax.scan(col_step, d0, jnp.arange(1, L + 1))
+        row = jnp.concatenate([d0[:, None], cols.T], axis=1)  # (B, L+1)
+        return (prev1, row), row
+
+    init = (jnp.broadcast_to(row0, (B, L + 1)),
+            jnp.broadcast_to(row0, (B, L + 1)))
+    (_, _), rows = jax.lax.scan(row_step, init, jnp.arange(1, L + 1))
+    # rows: (L, B, L+1); full table with row 0 prepended
+    table = jnp.concatenate(
+        [jnp.broadcast_to(row0, (1, B, L + 1)), rows], axis=0)  # (L+1, B, L+1)
+    out = table[a_len, jnp.arange(B), b_len]
+    # identical strings -> 0; empty-vs-empty -> 0
+    return out.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: causal / sliding-window / GQA attention forward.
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """q: [B, Hq, Tq, D]; k/v: [B, Hkv, Tk, D]; GQA via Hq % Hkv == 0.
+
+    window > 0 => sliding-window attention of that width (causal).
+    Returns [B, Hq, Tq, D] in q.dtype (accumulation in f32).
+    """
+    B, Hq, Tq, D = q.shape
+    Hkv = k.shape[1]
+    rep = Hq // Hkv
+    kf = jnp.repeat(k, rep, axis=1)
+    vf = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(D))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * scale
+    Tk = k.shape[2]
+    qpos = jnp.arange(Tq)[:, None] + (Tk - Tq)   # align ends (decode-friendly)
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,115 @@
+"""End-to-end search-assistance service launcher (paper Figure 4).
+
+Runs the full deployed architecture on a synthetic stream: backend
+engine(s) consuming the query hose + firehose, leader-elected persistence
+every rank cycle, frontend replicas polling for fresh results, background
+model + interpolation, and a periodic spelling job.
+
+  python -m repro.launch.serve_assist --ticks 120 --out /tmp/assist
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from ..core.background import background_config
+from ..core.engine import EngineConfig, SearchAssistanceEngine
+from ..core.spelling import SpellConfig, spelling_cycle
+from ..core import stores
+from ..core.hashing import join_fp
+from ..data.stream import StreamConfig, SyntheticStream, steve_jobs_scenario
+from ..distributed.fault_tolerance import CheckpointManager, ReplicaGroup
+from ..serving.serve import SuggestFrontend, ServerSet, pack_suggestions
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticks", type=int, default=120)
+    ap.add_argument("--out", default="/tmp/assist")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--fail-replica-at", type=int, default=-1,
+                    help="tick at which backend replica 0 dies (failover demo)")
+    ap.add_argument("--use-kernel", action="store_true")
+    args = ap.parse_args()
+
+    scfg, event = steve_jobs_scenario(
+        base_cfg=StreamConfig(vocab_size=2048, queries_per_tick=1024,
+                              tweets_per_tick=128))
+    stream = SyntheticStream(scfg, seed=0)
+    ecfg = EngineConfig(query_capacity=1 << 14, cooc_capacity=1 << 17,
+                        session_capacity=1 << 14, decay_every=6,
+                        rank_every=12, use_kernel=args.use_kernel)
+
+    rt_dir = os.path.join(args.out, "rt")
+    bg_dir = os.path.join(args.out, "bg")
+    spell_dir = os.path.join(args.out, "spell")
+    rt_group = ReplicaGroup(args.replicas, CheckpointManager(rt_dir))
+    # replicated backends (paper: replicated, not sharded)
+    backends = [SearchAssistanceEngine(ecfg, name=f"rt{i}")
+                for i in range(args.replicas)]
+    bg_engine = SearchAssistanceEngine(background_config(ecfg), name="bg")
+    bg_ckpt = CheckpointManager(bg_dir)
+    spell_ckpt = CheckpointManager(spell_dir)
+
+    frontends = [SuggestFrontend(rt_dir, bg_dir, stream.tok, spell_dir=spell_dir)
+                 for _ in range(2)]
+    serverset = ServerSet(frontends)
+    head = "steve jobs"
+
+    for t in range(args.ticks):
+        ev, tw = stream.gen_tick(t)
+        if args.fail_replica_at == t:
+            rt_group.fail(0)
+            print(f"[t={t}] replica 0 FAILED; leader is now {rt_group.leader()}")
+        results = []
+        for rid, eng in enumerate(backends):
+            if not rt_group.alive[rid]:
+                continue
+            results.append((rid, eng.step(ev, tw)))
+        bg_res = bg_engine.step(ev, tw)
+
+        for rid, res in results:
+            if res is not None:   # a rank cycle ran -> leader persists
+                wrote = rt_group.persist(
+                    rid, t, pack_suggestions(backends[rid].suggestions),
+                    {"tick": t})
+                if wrote:
+                    print(f"[t={t}] leader replica {rid} persisted "
+                          f"{len(backends[rid].suggestions)} suggestion rows")
+        if bg_res is not None:
+            bg_ckpt.save(t, pack_suggestions(bg_engine.suggestions))
+
+        # periodic spelling job (paper: a Pig job over a long span)
+        if t > 0 and t % 60 == 0:
+            leader = rt_group.leader()
+            if leader is not None:
+                exp = stores.export_live(backends[leader].state.qstore)
+                fps = join_fp(exp["key_hi"], exp["key_lo"])
+                texts = [stream.tok.text(int(f)) for f in fps]
+                corr = spelling_cycle(fps, texts, exp["weight"],
+                                      SpellConfig(use_kernel=args.use_kernel))
+                if corr:
+                    a = np.array(list(corr.keys()), np.uint64)
+                    b = np.array([v[0] for v in corr.values()], np.uint64)
+                    d = np.array([v[1] for v in corr.values()], np.float64)
+                    spell_ckpt.save(t, [a, b, d])
+                    print(f"[t={t}] spelling job: {len(corr)} corrections")
+
+        # frontends poll every tick (paper: every minute)
+        for f in frontends:
+            f.poll()
+
+        if t % 12 == 0 and t >= event.t_start:
+            sugg = serverset.request(head, k=5)
+            print(f"[t={t}] related('{head}') = "
+                  f"{[(s, round(sc, 3)) for s, sc in sugg]}")
+
+    print("final suggestions for head query:",
+          serverset.request(head, k=8))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,525 @@
+"""Unified architecture API: one entry point for init / train / serve /
+abstract input specs across the three families (lm, gnn, recsys).
+
+Everything the launcher, dry-run, smoke tests and benchmarks need:
+
+  * ``abstract_params(spec)``         — ShapeDtypeStructs via eval_shape
+  * ``init_params(rng, spec)``        — real parameters
+  * ``make_step(spec, shape_cell)``   — the jittable step fn for a cell
+  * ``input_specs(spec, shape_cell)`` — ShapeDtypeStruct inputs for a cell
+  * ``make_inputs(rng, spec, cell)``  — materialized random inputs (smoke)
+  * ``sharding_rules(spec)``          — param path-regex -> logical axes
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gnn, recsys, transformer as tr
+from .moe import MoEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (architecture x input-shape) cell of the assignment matrix."""
+    name: str
+    kind: str                      # train | prefill | decode | serve | retrieval
+    dims: Dict[str, int]
+    skip: Optional[str] = None     # reason if inapplicable (recorded, not run)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                    # lm | gnn | recsys
+    model: str                     # lm | gat | bst | xdeepfm | bert4rec | twotower
+    config: Any
+    smoke_config: Any
+    shapes: Tuple[ShapeCell, ...]
+    source: str = ""
+
+    def cell(self, name: str) -> ShapeCell:
+        for c in self.shapes:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# init / params
+# ---------------------------------------------------------------------------
+
+def init_params(rng, spec_or_cfg, model: Optional[str] = None):
+    cfg = spec_or_cfg.config if isinstance(spec_or_cfg, ArchSpec) else spec_or_cfg
+    model = model or (spec_or_cfg.model if isinstance(spec_or_cfg, ArchSpec) else None)
+    if isinstance(cfg, tr.LMConfig):
+        return tr.init_params(rng, cfg)
+    if isinstance(cfg, gnn.GATConfig):
+        return gnn.init_params(rng, cfg)
+    if isinstance(cfg, recsys.BSTConfig):
+        return recsys.bst_init(rng, cfg)
+    if isinstance(cfg, recsys.XDeepFMConfig):
+        return recsys.xdeepfm_init(rng, cfg)
+    if isinstance(cfg, recsys.Bert4RecConfig):
+        return recsys.bert4rec_init(rng, cfg)
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        return recsys.twotower_init(rng, cfg)
+    raise TypeError(type(cfg))
+
+
+def abstract_params(cfg) -> Any:
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def sharding_rules(cfg):
+    if isinstance(cfg, tr.LMConfig):
+        return tr.params_sharding_rules()
+    if isinstance(cfg, gnn.GATConfig):
+        return []  # tiny params: fully replicated
+    # recsys: embedding tables row-sharded over tp
+    return [
+        (r"(item_emb|user_emb|profile_emb|emb|linear_w)$", ("tp",)),
+        (r"mlp/w0$", (None, "tp")),
+        (r"mlp/w1$", ("tp", None)),
+    ]
+
+
+def _param_bytes(cfg) -> int:
+    shapes = jax.tree.leaves(abstract_params(cfg))
+    return int(sum(np.prod(s.shape) * s.dtype.itemsize for s in shapes))
+
+
+def serve_rules(cfg):
+    """Param sharding for SERVING (§Perf iterations A1/B1):
+
+    * dense LMs fit a tp-row at bf16 -> keep 1D Megatron rules (2D serve
+      sharding costs a dp-axis weight all-gather per layer per step);
+    * MoE LMs need 2D (weights >> HBM*tp);
+    * small recsys models (< 2 GB total) REPLICATE at serve: the embedding
+      gather becomes local and the score matmuls lose their collectives;
+      the 10M-item two-tower table stays row-sharded.
+    """
+    if isinstance(cfg, tr.LMConfig):
+        return tr.serve_sharding_rules() if cfg.moe else tr.params_sharding_rules()
+    if isinstance(cfg, gnn.GATConfig):
+        return []
+    if _param_bytes(cfg) < 2 << 30:
+        return []   # fully replicated serving copy
+    return sharding_rules(cfg)
+
+
+def batch_axis_for(cfg, cell: ShapeCell) -> str:
+    """Small recsys models replicate at serve and do redundant compute per
+    model-axis row unless the batch shards over the WHOLE mesh ('all').
+    Measured (EXPERIMENTS.md §Perf F3): confirmed for bst/xdeepfm/bert4rec
+    (useful ratio 0.06->0.99); REFUTED for two-tower — its 10 GB tp-sharded
+    item table turns 'all'-sharded batches into gather storms
+    (retrieval frac 0.315->0.132), so it keeps 'dp'."""
+    if isinstance(cfg, (recsys.BSTConfig, recsys.XDeepFMConfig,
+                        recsys.Bert4RecConfig)):
+        return "all"
+    return "dp"
+
+
+# ---------------------------------------------------------------------------
+# loss / step builders
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg) -> Callable:
+    if isinstance(cfg, tr.LMConfig):
+        return lambda p, b: tr.loss_fn(p, b, cfg)
+    if isinstance(cfg, gnn.GATConfig):
+        return lambda p, b: gnn.loss_fn(p, b, cfg)
+    if isinstance(cfg, recsys.BSTConfig):
+        return lambda p, b: recsys.bce_loss(recsys.bst_forward(p, b, cfg),
+                                            b["labels"])
+    if isinstance(cfg, recsys.XDeepFMConfig):
+        return lambda p, b: recsys.bce_loss(recsys.xdeepfm_forward(p, b, cfg),
+                                            b["labels"])
+    if isinstance(cfg, recsys.Bert4RecConfig):
+        if cfg.n_items > 100_000:   # production vocab -> sampled softmax
+            return lambda p, b: recsys.bert4rec_sampled_loss(p, b, cfg)
+        return lambda p, b: recsys.bert4rec_loss(p, b, cfg)
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        return lambda p, b: recsys.twotower_loss(p, b, cfg)
+    raise TypeError(type(cfg))
+
+
+def serve_fn(cfg, cell: ShapeCell) -> Callable:
+    """Forward-only step for serve/prefill/decode/retrieval cells."""
+    if isinstance(cfg, tr.LMConfig):
+        if cell.kind == "prefill":
+            return lambda p, caches, tokens: tr.prefill(p, tokens, cfg, caches)
+        if cell.kind == "decode":
+            return lambda p, caches, tokens: tr.decode_step(p, tokens, cfg, caches)
+        raise ValueError(cell.kind)
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        if cell.kind == "retrieval":
+            return lambda p, b: recsys.retrieval_scores(p, b, cfg)
+        return lambda p, b: (recsys.user_tower(p, b, cfg)
+                             * recsys.item_tower(p, b["pos_item"], cfg)).sum(-1)
+    if isinstance(cfg, recsys.BSTConfig):
+        if cell.kind == "retrieval":
+            def bst_retr(p, b):
+                n = b["cand_ids"].shape[0]
+                bb = {"hist": jnp.broadcast_to(b["hist"],
+                                               (n,) + b["hist"].shape[1:]),
+                      "target": b["cand_ids"],
+                      "profile": jnp.broadcast_to(b["profile"],
+                                                  (n,) + b["profile"].shape[1:])}
+                return recsys.bst_forward(p, bb, cfg)
+            return bst_retr
+        return lambda p, b: recsys.bst_forward(p, b, cfg)
+    if isinstance(cfg, recsys.XDeepFMConfig):
+        if cell.kind == "retrieval":
+            def xd_retr(p, b):
+                n = b["cand_ids"].shape[0]
+                ctx = jnp.broadcast_to(b["fields_ctx"],
+                                       (n, cfg.n_fields - 1))
+                item = (b["cand_ids"] % cfg.field_vocab
+                        + (cfg.n_fields - 1) * cfg.field_vocab)
+                fields = jnp.concatenate([ctx, item[:, None]], axis=1)
+                return recsys.xdeepfm_forward(p, {"fields": fields}, cfg)
+            return xd_retr
+        return lambda p, b: recsys.xdeepfm_forward(p, b, cfg)
+    if isinstance(cfg, recsys.Bert4RecConfig):
+        if cell.kind == "retrieval" or (cell.kind == "serve"
+                                        and cfg.n_items > 100_000):
+            return lambda p, b: recsys.bert4rec_topk_serve(p, b, cfg)
+        return lambda p, b: recsys.bert4rec_forward(p, b, cfg)
+    raise TypeError(type(cfg))
+
+
+def adapt_lm_config(cfg: tr.LMConfig, cell: ShapeCell, dp_size: int = 1
+                    ) -> tr.LMConfig:
+    """Per-cell config tweaks: MoE dispatch groups must divide the token
+    count and align with the dp axis."""
+    if not isinstance(cfg, tr.LMConfig) or cfg.moe is None:
+        return cfg
+    d = cell.dims
+    if cell.kind == "train":
+        n_tok = d["batch"] * d["seq"]
+    elif cell.kind == "prefill":
+        n_tok = d["batch"] * d["seq"]
+    else:
+        n_tok = d["batch"]
+    g = dp_size
+    while g > 1 and n_tok % g:
+        g -= 1
+    return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, groups=g))
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct) + materialization
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, cell: ShapeCell) -> Dict[str, Any]:
+    """Abstract input pytree for a cell (weak-type-correct, no allocation)."""
+    S = jax.ShapeDtypeStruct
+    d = cell.dims
+
+    if isinstance(cfg, tr.LMConfig):
+        if cell.kind == "train":
+            return {"batch": {"tokens": S((d["batch"], d["seq"] + 1), jnp.int32)}}
+        cache_len = d.get("cache_len", d["seq"])
+        caches = jax.eval_shape(
+            lambda: tr.init_caches(cfg, d["batch"], cache_len))
+        if cell.kind == "prefill":
+            return {"caches": caches,
+                    "tokens": S((d["batch"], d["seq"]), jnp.int32)}
+        return {"caches": caches, "tokens": S((d["batch"], 1), jnp.int32)}
+
+    if isinstance(cfg, gnn.GATConfig):
+        n = d["n_nodes"]
+        e = d.get("n_edges_padded", d["n_edges"])
+        b = {"x": S((n, d["d_feat"]), jnp.float32),
+             "src": S((e,), jnp.int32), "dst": S((e,), jnp.int32),
+             "labels": S((n,), jnp.int32),
+             "label_mask": S((n,), jnp.bool_),
+             "edge_valid": S((e,), jnp.bool_)}
+        return {"batch": b}
+
+    B = d.get("batch", 1)
+    if isinstance(cfg, recsys.BSTConfig):
+        if cell.kind == "retrieval":
+            return {"batch": {
+                "hist": S((1, cfg.seq_len - 1), jnp.int32),
+                "profile": S((1, cfg.n_profile_fields), jnp.int32),
+                "cand_ids": S((d["n_candidates"],), jnp.int32)}}
+        b = {"hist": S((B, cfg.seq_len - 1), jnp.int32),
+             "target": S((B,), jnp.int32),
+             "profile": S((B, cfg.n_profile_fields), jnp.int32)}
+        if cell.kind == "train":
+            b["labels"] = S((B,), jnp.int32)
+        return {"batch": b}
+    if isinstance(cfg, recsys.XDeepFMConfig):
+        if cell.kind == "retrieval":
+            return {"batch": {
+                "fields_ctx": S((1, cfg.n_fields - 1), jnp.int32),
+                "cand_ids": S((d["n_candidates"],), jnp.int32)}}
+        b = {"fields": S((B, cfg.n_fields), jnp.int32)}
+        if cell.kind == "train":
+            b["labels"] = S((B,), jnp.int32)
+        return {"batch": b}
+    if isinstance(cfg, recsys.Bert4RecConfig):
+        b = {"items": S((B, cfg.seq_len), jnp.int32)}
+        if cell.kind == "train":
+            if cfg.n_items > 100_000:   # sampled softmax inputs
+                M = max(1, int(0.15 * cfg.seq_len))
+                b["mask_pos"] = S((B, M), jnp.int32)
+                b["labels"] = S((B, M), jnp.int32)
+                b["neg_ids"] = S((8192,), jnp.int32)
+            else:
+                b["labels"] = S((B, cfg.seq_len), jnp.int32)
+                b["loss_mask"] = S((B, cfg.seq_len), jnp.bool_)
+        return {"batch": b}
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        b = {"user_id": S((B,), jnp.int32),
+             "hist": S((B, cfg.hist_len), jnp.int32)}
+        if cell.kind == "train":
+            b["pos_item"] = S((B,), jnp.int32)
+            b["item_logq"] = S((B,), jnp.float32)
+        elif cell.kind == "retrieval":
+            b["cand_ids"] = S((d["n_candidates"],), jnp.int32)
+        else:
+            b["pos_item"] = S((B,), jnp.int32)
+        return {"batch": b}
+    raise TypeError(type(cfg))
+
+
+def make_inputs(rng: np.random.Generator, cfg, cell: ShapeCell) -> Dict:
+    """Materialize random inputs matching input_specs (for smoke/bench)."""
+    specs = input_specs(cfg, cell)
+
+    def fill(s):
+        if s.dtype == jnp.int32:
+            hi = 100
+            return jnp.asarray(rng.integers(0, hi, s.shape), jnp.int32)
+        if s.dtype == jnp.bool_:
+            return jnp.asarray(rng.random(s.shape) < 0.5)
+        return jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+
+    out = jax.tree.map(fill, specs,
+                       is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    # token/id ranges must respect vocab sizes
+    def clampi(x, hi):
+        return jnp.asarray(np.asarray(x) % hi, jnp.int32)
+    if isinstance(cfg, tr.LMConfig):
+        if "batch" in out:
+            out["batch"]["tokens"] = clampi(out["batch"]["tokens"], cfg.vocab_size)
+        else:
+            out["tokens"] = clampi(out["tokens"], cfg.vocab_size)
+            d = cell.dims
+            out["caches"] = tr.init_caches(cfg, d["batch"],
+                                           d.get("cache_len", d["seq"]))
+    if isinstance(cfg, gnn.GATConfig):
+        n = cell.dims["n_nodes"]
+        out["batch"]["src"] = clampi(out["batch"]["src"], n)
+        out["batch"]["dst"] = clampi(out["batch"]["dst"], n)
+        out["batch"]["labels"] = clampi(out["batch"]["labels"], cfg.n_classes)
+    if isinstance(cfg, recsys.BSTConfig):
+        out["batch"]["hist"] = clampi(out["batch"]["hist"], cfg.n_items)
+        out["batch"]["profile"] = clampi(out["batch"]["profile"], cfg.profile_vocab)
+        for k in ("target", "cand_ids"):
+            if k in out["batch"]:
+                out["batch"][k] = clampi(out["batch"][k], cfg.n_items)
+        if "labels" in out["batch"]:
+            out["batch"]["labels"] = clampi(out["batch"]["labels"], 2)
+    if isinstance(cfg, recsys.XDeepFMConfig):
+        if "fields" in out["batch"]:
+            f = np.asarray(out["batch"]["fields"]) % cfg.field_vocab
+            f = f + np.arange(cfg.n_fields)[None] * cfg.field_vocab
+            out["batch"]["fields"] = jnp.asarray(f, jnp.int32)
+        if "fields_ctx" in out["batch"]:
+            f = np.asarray(out["batch"]["fields_ctx"]) % cfg.field_vocab
+            f = f + np.arange(cfg.n_fields - 1)[None] * cfg.field_vocab
+            out["batch"]["fields_ctx"] = jnp.asarray(f, jnp.int32)
+            out["batch"]["cand_ids"] = clampi(out["batch"]["cand_ids"],
+                                              cfg.total_vocab)
+        if "labels" in out["batch"]:
+            out["batch"]["labels"] = clampi(out["batch"]["labels"], 2)
+    if isinstance(cfg, recsys.Bert4RecConfig):
+        out["batch"]["items"] = clampi(out["batch"]["items"], cfg.vocab)
+        if "labels" in out["batch"]:
+            out["batch"]["labels"] = clampi(out["batch"]["labels"], cfg.vocab)
+        if "mask_pos" in out["batch"]:
+            out["batch"]["mask_pos"] = clampi(out["batch"]["mask_pos"],
+                                              cfg.seq_len)
+            out["batch"]["neg_ids"] = clampi(out["batch"]["neg_ids"], cfg.vocab)
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        out["batch"]["user_id"] = clampi(out["batch"]["user_id"], cfg.n_users)
+        out["batch"]["hist"] = clampi(out["batch"]["hist"], cfg.n_items)
+        for k in ("pos_item", "cand_ids"):
+            if k in out["batch"]:
+                out["batch"][k] = clampi(out["batch"][k], cfg.n_items)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MODEL_BYTES — analytic HBM-traffic model for the §Roofline memory term.
+#
+# The CPU backend's HLO byte metrics do not transfer to TPU (pre-fusion
+# operand counting / micro-fusions), so the memory term is derived
+# analytically from the cell structure; the HLO numbers are kept as
+# diagnostic columns. Formulas (bf16=2B, f32=4B):
+#
+#  LM train:  36*P (params fwd+bwd reads, f32 grads, master/m/v R+W)
+#             + L*T*(28*d + 24*ff_eff)*2  (residual save + remat recompute
+#               + bwd intermediate traffic; ff_eff folds MoE top-k+shared)
+#             + 6*T*Vpad*2  (logits write + bwd read + grad)
+#  LM prefill: 2*P + L*T*(15*d + 9*ff_eff)*2 + KV writes
+#  LM decode:  2*P (weights stream once per token)  + KV cache read/write
+#  GNN:        per layer: edge gather+scatter of [E,H,D] messages (x3 lanes)
+#              + node features; train = 3x fwd
+#  recsys:     embedding gathers + widest interaction tensors + MLP acts
+# ---------------------------------------------------------------------------
+
+def model_bytes(cfg, cell: ShapeCell) -> float:
+    d_ = cell.dims
+    if isinstance(cfg, tr.LMConfig):
+        P = cfg.param_count()
+        d = cfg.d_model
+        if cfg.moe:
+            ff_eff = (cfg.moe.top_k * cfg.moe.d_ff * 1.5
+                      + cfg.moe.n_shared_experts * cfg.moe.shared_d_ff)
+        else:
+            ff_eff = cfg.d_ff
+        if cell.kind == "train":
+            T = d_["batch"] * d_["seq"]
+            act = cfg.n_layers * T * (28 * d + 24 * ff_eff) * 2.0
+            logits = 6.0 * T * cfg.padded_vocab * 2.0
+            return 36.0 * P + act + logits
+        if cell.kind == "prefill":
+            T = d_["batch"] * d_["seq"]
+            act = cfg.n_layers * T * (15 * d + 9 * ff_eff) * 2.0
+            kv = cfg.n_layers * T * 2 * cfg.n_kv_heads * cfg.hd * 2.0
+            return 2.0 * P + act + kv
+        # decode: one token/seq; weights stream once, KV cache read+write
+        B = d_["batch"]
+        ctx = min(d_.get("cache_len", d_["seq"]),
+                  cfg.window if cfg.window > 0 else d_["seq"])
+        kv = cfg.n_layers * B * ctx * 2 * cfg.n_kv_heads * cfg.hd * 2.0
+        act = cfg.n_layers * B * (15 * d + 9 * ff_eff) * 2.0
+        return 2.0 * P + kv + act
+    if isinstance(cfg, gnn.GATConfig):
+        E, N = d_["n_edges"], d_["n_nodes"]
+        msg = cfg.n_layers * 3.0 * E * cfg.n_heads * cfg.d_hidden * 4.0
+        nodes = 2.0 * N * d_["d_feat"] * 4.0
+        f = msg + nodes
+        return 3.0 * f if cell.kind == "train" else f
+    B = d_.get("batch", 1)
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        emb = 2.0 * B * (cfg.hist_len + 1) * cfg.embed_dim * 4.0
+        mlp_t = 2.0 * B * sum(cfg.tower_mlp) * 4.0 * 2
+        f = emb + mlp_t
+        if cell.kind == "retrieval":
+            n = d_["n_candidates"]
+            f += 2.0 * n * (cfg.embed_dim + sum(cfg.tower_mlp)) * 4.0
+            f += 2.0 * B * n * 4.0
+        if cell.kind == "train":
+            f = 3.0 * f + 2.0 * B * B * 4.0
+        return f
+    if isinstance(cfg, recsys.XDeepFMConfig):
+        m, D = cfg.n_fields, cfg.embed_dim
+        emb = 2.0 * B * m * D * 4.0
+        z = sum(2.0 * B * h * m * D * 4.0 for h in cfg.cin_layers)
+        dnn = 2.0 * B * sum(cfg.dnn_dims) * 4.0
+        f = emb + z + dnn
+        return 3.0 * f if cell.kind == "train" else f
+    if isinstance(cfg, recsys.BSTConfig):
+        T, D = cfg.seq_len, cfg.embed_dim
+        act = 2.0 * B * (T * D * 10 + sum(cfg.mlp_dims)) * 4.0
+        return 3.0 * act if cell.kind == "train" else act
+    if isinstance(cfg, recsys.Bert4RecConfig):
+        T, D = cfg.seq_len, cfg.embed_dim
+        act = 2.0 * B * T * D * 10 * cfg.n_blocks * 4.0
+        if cell.kind == "train" and cfg.n_items > 100_000:
+            act += 2.0 * B * int(0.15 * T) * 8192 * 4.0   # sampled logits
+            act *= 3.0
+        elif cell.kind == "train":
+            act = 3.0 * (act + 2.0 * B * T * cfg.vocab * 4.0)
+        else:
+            act += 2.0 * B * cfg.vocab * 4.0               # top-k scores
+        return act
+    raise TypeError(type(cfg))
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (the "useful compute" numerator for §Roofline)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, cell: ShapeCell) -> float:
+    d = cell.dims
+    if isinstance(cfg, tr.LMConfig):
+        n = cfg.active_param_count() if cfg.moe else cfg.param_count()
+        if cell.kind == "train":
+            return 6.0 * n * d["batch"] * d["seq"]
+        if cell.kind == "prefill":
+            return 2.0 * n * d["batch"] * d["seq"]
+        return 2.0 * n * d["batch"]  # decode: one token per sequence
+    if isinstance(cfg, gnn.GATConfig):
+        # per edge per layer: attention score + message (2 * H * D flops-ish)
+        e = d["n_edges"]
+        n = d["n_nodes"]
+        h, dd = cfg.n_heads, cfg.d_hidden
+        proj = 2.0 * n * cfg.d_in * h * dd
+        msg = 6.0 * e * h * dd
+        f = cfg.n_layers * (proj + msg)
+        return 3.0 * f if cell.kind == "train" else f
+    # recsys: dominated by MLP/interaction + embedding gathers
+    B = d.get("batch", 1)
+    if isinstance(cfg, recsys.TwoTowerConfig):
+        dims = (2 * cfg.embed_dim,) + cfg.tower_mlp
+        fl = sum(2.0 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        dims_i = (cfg.embed_dim,) + cfg.tower_mlp
+        fl += sum(2.0 * a * b for a, b in zip(dims_i[:-1], dims_i[1:]))
+        f = B * fl
+        if cell.kind == "retrieval":
+            f += 2.0 * B * d["n_candidates"] * cfg.tower_mlp[-1]
+            dims_i = (cfg.embed_dim,) + cfg.tower_mlp
+            f += d["n_candidates"] * sum(2.0 * a * b
+                                         for a, b in zip(dims_i[:-1], dims_i[1:]))
+        if cell.kind == "train":
+            f = 3.0 * f + 2.0 * B * B * cfg.tower_mlp[-1]
+        return f
+    if isinstance(cfg, recsys.XDeepFMConfig):
+        if cell.kind == "retrieval":
+            B = d["n_candidates"]   # broadcast-forward over candidates
+        m, D = cfg.n_fields, cfg.embed_dim
+        h_prev, cin = m, 0.0
+        for h in cfg.cin_layers:
+            cin += 2.0 * h_prev * m * D * h
+            h_prev = h
+        dims = (m * D,) + cfg.dnn_dims + (1,)
+        dnn = sum(2.0 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        f = B * (cin + dnn)
+        return 3.0 * f if cell.kind == "train" else f
+    if isinstance(cfg, recsys.BSTConfig):
+        if cell.kind == "retrieval":
+            B = d["n_candidates"]
+        T, D = cfg.seq_len, cfg.embed_dim
+        attn = cfg.n_blocks * (8.0 * T * D * D + 4.0 * T * T * D
+                               + 4.0 * T * D * cfg.d_ff)
+        dims = (T * D + cfg.n_profile_fields * D,) + cfg.mlp_dims + (1,)
+        head = sum(2.0 * a * b for a, b in zip(dims[:-1], dims[1:]))
+        f = B * (attn + head)
+        return 3.0 * f if cell.kind == "train" else f
+    if isinstance(cfg, recsys.Bert4RecConfig):
+        T, D = cfg.seq_len, cfg.embed_dim
+        enc = cfg.n_blocks * (8.0 * T * D * D + 4.0 * T * T * D
+                              + 4.0 * T * D * cfg.d_ff)
+        if cell.kind == "train":
+            if cfg.n_items > 100_000:   # sampled softmax over K+1 candidates
+                M = max(1, int(0.15 * T))
+                out = 2.0 * M * D * (8192 + 1)
+            else:
+                out = 2.0 * T * D * cfg.vocab
+            return 3.0 * B * (enc + out)
+        # serve/retrieval: encoder + LAST-position scores over the vocab
+        out = 2.0 * D * cfg.vocab
+        return B * (enc + out)
+    raise TypeError(type(cfg))

@@ -1,0 +1,193 @@
+"""GAT (Velickovic et al., arXiv:1710.10903) with segment-op message passing.
+
+JAX has no sparse SpMM beyond BCOO, so message passing is built from the
+primitives the taxonomy mandates: gather over an edge index, edge-softmax
+via ``segment_max``/``segment_sum`` (numerically stable), and scatter-sum
+aggregation. Edges are the only large tensors — they shard over 'dp'.
+
+Includes the host-side fanout neighbor sampler required by the
+``minibatch_lg`` shape (GraphSAGE-style layered sampling, padded to static
+shapes for jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+from .layers import init_linear
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str
+    d_in: int
+    d_hidden: int           # per head
+    n_heads: int
+    n_layers: int
+    n_classes: int
+    dtype: str = "float32"
+    negative_slope: float = 0.2
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def init_params(rng, cfg: GATConfig) -> Params:
+    ks = jax.random.split(rng, cfg.n_layers * 3)
+    layers = []
+    d_in = cfg.d_in
+    for l in range(cfg.n_layers):
+        last = l == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        layers.append({
+            "w": init_linear(ks[3 * l], d_in, heads * d_out, cfg.jdtype),
+            "a_src": (jax.random.normal(ks[3 * l + 1], (heads, d_out),
+                                        jnp.float32) * 0.1).astype(cfg.jdtype),
+            "a_dst": (jax.random.normal(ks[3 * l + 2], (heads, d_out),
+                                        jnp.float32) * 0.1).astype(cfg.jdtype),
+        })
+        d_in = heads * d_out if not last else d_out
+    return {"layers": layers}
+
+
+def gat_layer(p: Params, x, src, dst, n_nodes: int, heads: int, d_out: int,
+              edge_valid=None, slope: float = 0.2, last: bool = False):
+    """x: [N, d_in]; src/dst: [E] int32 (message src -> dst)."""
+    h = (x @ p["w"]).reshape(-1, heads, d_out)             # [N, H, D]
+    e_src = jnp.sum(h * p["a_src"][None], axis=-1)         # [N, H]
+    e_dst = jnp.sum(h * p["a_dst"][None], axis=-1)
+    # per-edge unnormalized attention
+    logits = jax.nn.leaky_relu(e_src[src] + e_dst[dst], slope)  # [E, H]
+    logits = constrain(logits, "dp", None)
+    if edge_valid is not None:
+        logits = jnp.where(edge_valid[:, None], logits, -1e30)
+        safe_dst = jnp.where(edge_valid, dst, n_nodes - 1)
+    else:
+        safe_dst = dst
+    # segment softmax over incoming edges of each dst (f32, max-shifted)
+    lmax = jax.ops.segment_max(logits.astype(jnp.float32), safe_dst,
+                               num_segments=n_nodes)       # [N, H]
+    lmax = jnp.where(jnp.isfinite(lmax), lmax, 0.0)
+    ex = jnp.exp(logits.astype(jnp.float32) - lmax[safe_dst])
+    if edge_valid is not None:
+        ex = jnp.where(edge_valid[:, None], ex, 0.0)
+    denom = jax.ops.segment_sum(ex, safe_dst, num_segments=n_nodes)
+    alpha = ex / jnp.maximum(denom[safe_dst], 1e-16)       # [E, H]
+    msg = h[src].astype(jnp.float32) * alpha[..., None]    # [E, H, D]
+    msg = constrain(msg, "dp", None, None)
+    out = jax.ops.segment_sum(msg, safe_dst, num_segments=n_nodes)  # [N,H,D]
+    if last:
+        out = jnp.mean(out, axis=1)                        # average heads
+    else:
+        out = jax.nn.elu(out.reshape(n_nodes, heads * d_out))
+    return out.astype(x.dtype)
+
+
+def forward(params: Params, batch: Dict, cfg: GATConfig) -> jax.Array:
+    """batch: {x [N, F], src [E], dst [E], edge_valid? [E]} -> logits [N, C]."""
+    x = batch["x"].astype(cfg.jdtype)
+    src, dst = batch["src"], batch["dst"]
+    ev = batch.get("edge_valid")
+    n = x.shape[0]
+    for l, p in enumerate(params["layers"]):
+        last = l == cfg.n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        x = gat_layer(p, x, src, dst, n, heads, d_out, ev,
+                      cfg.negative_slope, last)
+    return x
+
+
+def loss_fn(params: Params, batch: Dict, cfg: GATConfig):
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch.get("label_mask", jnp.ones_like(labels, bool))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = jnp.sum(jnp.where(mask, lse - ll, 0.0)) / jnp.maximum(
+        jnp.sum(mask.astype(jnp.float32)), 1.0)
+    return nll, {"nll": nll}
+
+
+# ---------------------------------------------------------------------------
+# Neighbor sampler (host-side, GraphSAGE-style fanout sampling)
+# ---------------------------------------------------------------------------
+
+class CSRGraph(NamedTuple):
+    indptr: np.ndarray   # [N+1]
+    indices: np.ndarray  # [E] — in-neighbors of each node
+
+
+def build_csr(n_nodes: int, src: np.ndarray, dst: np.ndarray) -> CSRGraph:
+    """CSR over incoming edges (dst -> its srcs)."""
+    order = np.argsort(dst, kind="stable")
+    s_dst = dst[order]
+    s_src = src[order]
+    counts = np.bincount(s_dst, minlength=n_nodes)
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return CSRGraph(indptr=indptr, indices=s_src.astype(np.int64))
+
+
+def sample_subgraph(g: CSRGraph, feats: np.ndarray, seed_nodes: np.ndarray,
+                    fanouts: List[int], rng: np.random.Generator
+                    ) -> Dict[str, np.ndarray]:
+    """Layered fanout sampling; returns padded static-shape arrays.
+
+    Output nodes are renumbered 0..N_sub; seeds occupy [0, len(seeds)).
+    Shapes: nodes = seeds * prod(1 + fanouts...) upper bound; edges padded
+    with edge_valid mask.
+    """
+    n_seeds = len(seed_nodes)
+    max_nodes = n_seeds
+    layer_sizes = [n_seeds]
+    for f in fanouts:
+        layer_sizes.append(layer_sizes[-1] * f)
+        max_nodes += layer_sizes[-1]
+    max_edges = sum(layer_sizes[1:])
+
+    node_ids = list(seed_nodes)
+    node_pos = {int(n): i for i, n in enumerate(seed_nodes)}
+    src_l, dst_l = [], []
+    frontier = list(seed_nodes)
+    for f in fanouts:
+        nxt = []
+        for n in frontier:
+            lo, hi = g.indptr[n], g.indptr[n + 1]
+            deg = hi - lo
+            if deg == 0:
+                continue
+            take = min(f, int(deg))
+            picks = g.indices[lo + rng.choice(deg, size=take, replace=False)]
+            for p in picks:
+                p = int(p)
+                if p not in node_pos:
+                    node_pos[p] = len(node_ids)
+                    node_ids.append(p)
+                src_l.append(node_pos[p])
+                dst_l.append(node_pos[int(n)])
+                nxt.append(p)
+        frontier = nxt
+
+    n_sub = len(node_ids)
+    x = np.zeros((max_nodes, feats.shape[1]), feats.dtype)
+    x[:n_sub] = feats[np.asarray(node_ids, np.int64)]
+    E = len(src_l)
+    src = np.full(max_edges, max_nodes - 1, np.int32)
+    dst = np.full(max_edges, max_nodes - 1, np.int32)
+    src[:E] = src_l
+    dst[:E] = dst_l
+    ev = np.zeros(max_edges, bool)
+    ev[:E] = True
+    return {"x": x, "src": src, "dst": dst, "edge_valid": ev,
+            "node_ids": np.asarray(node_ids[:n_sub], np.int64),
+            "n_sub": n_sub, "n_seeds": n_seeds}

@@ -1,0 +1,113 @@
+"""Decode KV caches: full-length and sliding-window (ring buffer).
+
+Cache pytree layout (per layer; the transformer scans over a stacked
+leading layer dim):
+
+  full:    {"k": [B, T_max, Hkv, D], "v": same, "pos": [B] int32}
+  window:  {"k": [B, W, Hkv, D], "v": same, "pos": [B] int32}  (ring)
+
+``pos`` is the number of tokens already written (the next write index).
+A sliding-window cache keeps only the last W tokens — constant memory for
+arbitrarily long decodes (the sub-quadratic state required by long_500k).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+               dtype, *, window: int = 0) -> Dict:
+    L = window if window > 0 else max_len
+    return {
+        "k": jnp.zeros((batch, L, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, L, n_kv_heads, head_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "window": jnp.array(window, jnp.int32),  # 0 => full cache
+    }
+
+
+def cache_read_state(cache: Dict) -> Tuple[jax.Array, jax.Array]:
+    """Absolute positions + validity of the PRE-write cache slots.
+    Used by the two-piece (online-softmax) attention path, which never
+    concatenates the cache with fresh keys."""
+    B, L = cache["k"].shape[0], cache["k"].shape[1]
+    window = cache["window"]
+    is_ring = window > 0
+    pre_pos = cache["pos"][:, None]
+    slot = jnp.arange(L, dtype=jnp.int32)[None, :]
+    ring_age = jnp.mod(pre_pos - 1 - slot, L)
+    ring_abs = pre_pos - 1 - ring_age
+    full_abs = jnp.broadcast_to(slot, (B, L))
+    kpos = jnp.where(is_ring, ring_abs, full_abs)
+    valid = (kpos >= 0) & (kpos < pre_pos)
+    return kpos, valid
+
+
+def cache_write(cache: Dict, k_new, v_new, positions) -> Dict:
+    """Scatter T fresh tokens into the cache (ring: last min(T, W) survive)."""
+    B, T = k_new.shape[0], k_new.shape[1]
+    L = cache["k"].shape[1]
+    window = cache["window"]
+    is_ring = window > 0
+    new_pos = positions[:, -1:] + 1
+    survive = (~is_ring) | (positions >= new_pos - L)
+    in_range = is_ring | (positions < L)
+    write_idx = jnp.where(is_ring, jnp.mod(positions, L), positions)
+    write_idx = jnp.where(survive & in_range, write_idx, L)   # OOB => drop
+    b_idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, T))
+    out = dict(cache)
+    out["k"] = cache["k"].at[b_idx, write_idx].set(k_new, mode="drop")
+    out["v"] = cache["v"].at[b_idx, write_idx].set(v_new, mode="drop")
+    out["pos"] = new_pos[:, 0]
+    return out
+
+
+def cache_update_and_read(cache: Dict, k_new, v_new, positions
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, Dict]:
+    """Write T new tokens, return (k_all, v_all, k_positions, k_valid, cache').
+
+    positions: [B, T] absolute positions of the new tokens (== pos .. pos+T-1).
+    Write-then-read: the new tokens land in the buffer and attention reads
+    the buffer directly (no concat copy — decode updates are in-place under
+    buffer donation). REQUIREMENT for the ring layout: T <= W per call —
+    ``transformer.prefill`` chunks long prompts accordingly.
+    """
+    B, T = k_new.shape[0], k_new.shape[1]
+    L = cache["k"].shape[1]
+    window = cache["window"]
+    is_ring = window > 0
+
+    # ---- READ the pre-write state (early queries of this chunk need keys
+    # the write below would evict from a ring buffer) ----
+    pre_pos = cache["pos"][:, None]                              # [B, 1]
+    slot = jnp.arange(L, dtype=jnp.int32)[None, :]               # [1, L]
+    ring_age = jnp.mod(pre_pos - 1 - slot, L)                    # [B, L]
+    ring_abs = pre_pos - 1 - ring_age
+    full_abs = jnp.broadcast_to(slot, (B, L))
+    pre_kpos = jnp.where(is_ring, ring_abs, full_abs)
+    pre_valid = (pre_kpos >= 0) & (pre_kpos < pre_pos)
+
+    k_all = jnp.concatenate([cache["k"], k_new], axis=1)         # [B, L+T, ...]
+    v_all = jnp.concatenate([cache["v"], v_new], axis=1)
+    k_positions = jnp.concatenate([pre_kpos, positions], axis=1)
+    k_valid = jnp.concatenate(
+        [pre_valid, jnp.ones((B, T), bool)], axis=1)
+
+    # ---- WRITE: for a ring, only the last min(T, L) tokens survive ----
+    new_pos = positions[:, -1:] + 1                               # [B, 1]
+    survive = (~is_ring) | (positions >= new_pos - L)
+    in_range = is_ring | (positions < L)
+    write_idx = jnp.where(is_ring, jnp.mod(positions, L), positions)
+    write_idx = jnp.where(survive & in_range, write_idx, L)      # OOB => drop
+    b_idx = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, T))
+    k = cache["k"].at[b_idx, write_idx].set(k_new, mode="drop")
+    v = cache["v"].at[b_idx, write_idx].set(v_new, mode="drop")
+
+    new_cache = dict(cache)
+    new_cache["k"] = k
+    new_cache["v"] = v
+    new_cache["pos"] = new_pos[:, 0]
+    return k_all, v_all, k_positions, k_valid, new_cache

@@ -1,0 +1,265 @@
+"""Shared model layers: norms, RoPE, GQA attention (full / sliding-window /
+qk-norm), SwiGLU MLP. Pure-functional: params are plain dict pytrees.
+
+Sharding: activations/params use logical axes via ``distributed.sharding``
+('dp' batch, 'tp' heads / ffn). Attention math runs in f32 accumulation
+regardless of param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+def init_linear(rng, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., T, H, D]; positions: [..., T] int32."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., T, D/2]
+    cos = jnp.cos(ang)[..., None, :]                 # [..., T, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    window: int = 0          # >0: sliding-window attention
+    rope_theta: float = 10000.0
+    causal: bool = True
+    use_pallas: bool = False  # route the fwd through the flash kernel
+
+
+def init_attention(rng, cfg: AttentionConfig, dtype) -> Params:
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": init_linear(ks[0], cfg.d_model, cfg.n_heads * cfg.head_dim, dtype),
+        "wk": init_linear(ks[1], cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wv": init_linear(ks[2], cfg.d_model, cfg.n_kv_heads * cfg.head_dim, dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * cfg.head_dim, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), dtype)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), dtype)
+    return p
+
+
+ATTN_Q_CHUNK = 1024  # q-block size above which attention is chunked
+
+
+def _attn_block(q, k, v, cfg: AttentionConfig, q_positions, k_positions,
+                k_valid=None):
+    """One q-block: q [B,T,Hq,D], k/v [B,S,Hkv,D] -> [B,T,Hq,D] (f32 acc)."""
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    qh = q.reshape(B, T, Hkv, rep, D)
+    logits = jnp.einsum("bthrd,bshd->bhrts", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(D)
+    mask = jnp.ones((B, T, S), bool)
+    if cfg.causal:
+        mask &= k_positions[:, None, :] <= q_positions[:, :, None]
+    if cfg.window > 0:
+        mask &= k_positions[:, None, :] > q_positions[:, :, None] - cfg.window
+    if k_valid is not None:
+        mask &= k_valid[:, None, :]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrts,bshd->bthrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, T, Hq, D).astype(q.dtype)
+
+
+def _attn_piece(q, k, v, cfg: AttentionConfig, q_positions, k_positions,
+                k_valid=None):
+    """One piece of a split-KV attention: returns UNNORMALIZED
+    (o, m, l) — exp-weighted values, per-query running max and denom —
+    for online-softmax merging across pieces (flash-style)."""
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    qh = q.reshape(B, T, Hkv, rep, D)
+    logits = jnp.einsum("bthrd,bshd->bhrts", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(D)
+    mask = jnp.ones((B, T, S), bool)
+    if cfg.causal:
+        mask &= k_positions[:, None, :] <= q_positions[:, :, None]
+    if cfg.window > 0:
+        mask &= k_positions[:, None, :] > q_positions[:, :, None] - cfg.window
+    if k_valid is not None:
+        mask &= k_valid[:, None, :]
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    m = jnp.max(logits, axis=-1)                      # (B,h,r,T)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhrts,bshd->bthrd", p, v.astype(jnp.float32))
+    perm = lambda x: x.transpose(0, 3, 1, 2).reshape(B, T, Hq)
+    return (o.reshape(B, T, Hq, D), perm(m), perm(l))
+
+
+def _attn_math(q, k, v, cfg: AttentionConfig, q_positions, k_positions,
+               k_valid=None):
+    """Attention with q-axis chunking (XLA 'flash-at-block-level'): never
+    materializes more than [B, chunk, S] logits; the chunk loop is a scan
+    with rematerialized body, so backward recomputes block logits instead
+    of saving [T, S]."""
+    B, T = q.shape[:2]
+    chunk = ATTN_Q_CHUNK
+    if T <= chunk or T % chunk:
+        return _attn_block(q, k, v, cfg, q_positions, k_positions, k_valid)
+    nb = T // chunk
+    qc = q.reshape(B, nb, chunk, *q.shape[2:]).swapaxes(0, 1)
+    pc = q_positions.reshape(B, nb, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(_, inp):
+        qb, pb = inp
+        ob = _attn_block(qb, k, v, cfg, pb, k_positions, k_valid)
+        return None, ob
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    return out.swapaxes(0, 1).reshape(q.shape)
+
+
+def attention(params: Params, x, cfg: AttentionConfig, positions,
+              cache: Optional[Dict] = None) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: [B, T, d]. With a cache dict, runs a decode/prefill step and
+    returns the updated cache (see kv_cache.py for the cache layout)."""
+    B, T, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+    k = (x @ params["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ params["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if cfg.use_pallas:
+            from ..kernels import ops as kops
+            o = kops.flash_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), cfg.causal, cfg.window)
+            o = o.transpose(0, 2, 1, 3)
+        else:
+            o = _attn_math(q, k, v, cfg, positions, positions)
+        new_cache = None
+    elif T <= 16:
+        # DECODE: two-piece attention — cache piece + fresh piece merged by
+        # online softmax. NO concat of [cache, fresh]: concatenating a
+        # tp-sharded cache with fresh tokens made GSPMD all-gather the
+        # whole cache every decode step (EXPERIMENTS.md §Perf cell-1:
+        # tX 6.7 ms -> 5.6 us on granite-3-8b/decode_32k).
+        from .kv_cache import cache_read_state, cache_write
+        pre_kpos, pre_valid = cache_read_state(cache)
+        o1, m1, l1 = _attn_piece(q, cache["k"], cache["v"], cfg, positions,
+                                 pre_kpos, pre_valid)
+        o2, m2, l2 = _attn_piece(q, k, v, cfg, positions, positions, None)
+        m = jnp.maximum(m1, m2)
+        s1 = jnp.exp(m1 - m)        # o_i is already exp-weighted: rescale
+        s2 = jnp.exp(m2 - m)        # by exp(m_i - m) only, denom uses l_i
+        denom = jnp.maximum(l1 * s1 + l2 * s2, 1e-30)
+        o = ((o1 * s1[..., None] + o2 * s2[..., None]) / denom[..., None]
+             ).astype(q.dtype)
+        new_cache = cache_write(cache, k, v, positions)
+    else:
+        # PREFILL: the concat cost amortizes over the whole chunk and the
+        # q-chunked _attn_math bounds the logits working set.
+        from .kv_cache import cache_update_and_read
+        k_all, v_all, k_pos, k_valid, new_cache = cache_update_and_read(
+            cache, k, v, positions)
+        o = _attn_math(q, k_all, v_all, cfg, positions, k_pos, k_valid)
+
+    o = o.reshape(B, T, cfg.n_heads * cfg.head_dim)
+    out = o @ params["wo"]
+    return constrain(out, "dp", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(rng, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": init_linear(ks[0], d_model, d_ff, dtype),
+        "w_up": init_linear(ks[1], d_model, d_ff, dtype),
+        "w_down": init_linear(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params: Params, x) -> jax.Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = constrain(h, "dp", None, "tp")
+    return constrain(h @ params["w_down"], "dp", None, None)
+
+
+def init_mlp(rng, dims, dtype, bias=True) -> Params:
+    """Plain MLP given [d_in, h1, ..., d_out]."""
+    ks = jax.random.split(rng, len(dims) - 1)
+    p = {}
+    for i in range(len(dims) - 1):
+        p[f"w{i}"] = init_linear(ks[i], dims[i], dims[i + 1], dtype)
+        if bias:
+            p[f"b{i}"] = jnp.zeros((dims[i + 1],), dtype)
+    return p
+
+
+def mlp(params: Params, x, n_layers: int, act=jax.nn.relu,
+        final_act: bool = False) -> jax.Array:
+    for i in range(n_layers):
+        x = x @ params[f"w{i}"]
+        if f"b{i}" in params:
+            x = x + params[f"b{i}"]
+        if i < n_layers - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded sort dispatch,
+optional shared experts (Qwen-MoE style), Switch-style aux loss.
+
+Dispatch is **group-local**: tokens are reshaped to (G, N/G, d) with G
+aligned to the data-parallel axis, and routing/sort/scatter happen within a
+group — no cross-device sort, no [T, E, C] one-hot dispatch tensor. Each
+group keeps an (E, C, d) buffer; C = ceil(top_k * N_g / E * capacity_factor).
+Overflowed tokens fall through with zero update (standard capacity drop).
+
+Expert weights are TP-sharded on the ffn dim ('tp'); experts themselves are
+replicated across data shards (every group computes only its own tokens, so
+FLOPs are not duplicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+from .layers import init_linear
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert ffn width
+    n_shared_experts: int = 0      # Qwen-style always-on experts
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    aux_weight: float = 0.01
+    groups: int = 1                # dispatch groups (align to dp size)
+
+
+def init_moe(rng, d_model: int, cfg: MoEConfig, dtype) -> Params:
+    ks = jax.random.split(rng, 6)
+    E, F = cfg.n_experts, cfg.d_ff
+    s = 1.0 / np.sqrt(d_model)
+    p = {
+        "router": init_linear(ks[0], d_model, E, jnp.float32),  # fp32 router
+        "w_gate": (jax.random.normal(ks[1], (E, d_model, F), jnp.float32) * s).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d_model, F), jnp.float32) * s).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, d_model), jnp.float32)
+                   / np.sqrt(F)).astype(dtype),
+    }
+    if cfg.n_shared_experts > 0:
+        SF = cfg.shared_d_ff * cfg.n_shared_experts
+        p["shared"] = {
+            "w_gate": init_linear(ks[4], d_model, SF, dtype),
+            "w_up": init_linear(ks[5], d_model, SF, dtype),
+            "w_down": init_linear(ks[0], SF, d_model, dtype),
+            "gate": init_linear(ks[1], d_model, 1, dtype),
+        }
+    return p
+
+
+def _dispatch_all_groups(xf, router_logits, cfg: MoEConfig,
+                        w_gate, w_up, w_down):
+    """xf: (G, Ng, d); router_logits: (G, Ng, E) f32 -> (out, aux).
+
+    Explicit group dim (no vmap) so the dispatch buffers can carry sharding
+    constraints: groups shard over 'dp', the capacity dim over 'tp' — the
+    (G, E, C, d) buffer is the big MoE tensor and must never replicate.
+    """
+    G, Ng, d = xf.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = int(np.ceil(k * Ng / E * cfg.capacity_factor))
+    C = C + (-C) % 8   # pad capacity to a tileable size
+
+    top_v, top_i = jax.lax.top_k(router_logits, k)          # (G, Ng, k)
+    gates = jax.nn.softmax(top_v, axis=-1)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    me = jnp.mean(probs, axis=1)                             # (G, E)
+    ce = jnp.zeros((G, E), jnp.float32).at[
+        jnp.arange(G)[:, None, None], top_i].add(1.0) / (Ng * k)
+    aux = jnp.mean(E * jnp.sum(me * ce, axis=-1))
+
+    flat_e = top_i.reshape(G, Ng * k).astype(jnp.int32)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Ng, dtype=jnp.int32), k)[None], (G, Ng * k))
+    flat_g = gates.reshape(G, Ng * k)
+    order = jnp.argsort(flat_e, axis=-1)                     # stable, per group
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+    idx = jnp.broadcast_to(jnp.arange(Ng * k, dtype=jnp.int32)[None], (G, Ng * k))
+    seg = se + jnp.arange(G, dtype=jnp.int32)[:, None] * E   # global segment id
+    seg_start = jax.ops.segment_min(idx.reshape(-1), seg.reshape(-1),
+                                    num_segments=G * E).reshape(G, E)
+    pos = idx - jnp.take_along_axis(seg_start, se, axis=-1)
+    keep = pos < C
+    slot = jnp.where(keep, se * C + pos, E * C)              # OOB => dropped
+
+    g_idx = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32)[:, None],
+                             (G, Ng * k))
+    slot_tok = jnp.full((G, E * C), -1, jnp.int32).at[g_idx, slot].set(
+        st, mode="drop")
+    slot_gate = jnp.zeros((G, E * C), jnp.float32).at[g_idx, slot].set(
+        sg, mode="drop")
+    valid = slot_tok >= 0
+    h_in = jnp.take_along_axis(
+        xf, jnp.maximum(slot_tok, 0)[..., None], axis=1)     # (G, E*C, d)
+    h_in = jnp.where(valid[..., None], h_in, 0).reshape(G, E, C, d)
+    h_in = constrain(h_in, "dp", None, "tp", None)
+
+    g = jnp.einsum("gecd,edf->gecf", h_in, w_gate)
+    u = jnp.einsum("gecd,edf->gecf", h_in, w_up)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "dp", None, None, "tp")
+    out_e = jnp.einsum("gecf,efd->gecd", h, w_down).reshape(G, E * C, d)
+    out_e = constrain(out_e, "dp", "tp", None)
+
+    g_slot = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32)[:, None],
+                              (G, E * C))
+    out = jnp.zeros((G, Ng, d), xf.dtype).at[
+        g_slot, jnp.where(valid, slot_tok, Ng)].add(
+        (out_e * slot_gate[..., None]).astype(xf.dtype), mode="drop")
+    return out, aux
+
+
+def moe_ffn(params: Params, x, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) -> (out, aux_loss). Group-local dispatch."""
+    B, T, d = x.shape
+    N = B * T
+    G = cfg.groups
+    assert N % G == 0, f"tokens {N} not divisible by groups {G}"
+    xf = x.reshape(G, N // G, d)
+    xf = constrain(xf, "dp", None, None)
+    logits = (xf.astype(jnp.float32) @ params["router"])      # (G, Ng, E)
+
+    out, aux = _dispatch_all_groups(xf, logits, cfg, params["w_gate"],
+                                    params["w_up"], params["w_down"])
+    out = out.reshape(B, T, d)
+
+    if "shared" in params:
+        sp = params["shared"]
+        h = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        h = constrain(h, "dp", None, "tp")
+        shared_out = h @ sp["w_down"]
+        gate = jax.nn.sigmoid(x @ sp["gate"])
+        out = out + gate * shared_out
+    return constrain(out, "dp", None, None), aux

@@ -1,0 +1,425 @@
+"""RecSys architectures: BST, xDeepFM (CIN), BERT4Rec, two-tower retrieval.
+
+JAX has no native EmbeddingBag — it is built here from ``jnp.take`` +
+masked reduction (taxonomy B.6/B.11), with id 0 reserved as padding.
+Embedding tables are the huge tensors: they shard row-wise over 'tp';
+batches shard over 'dp'.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+from .layers import Params, init_linear, init_mlp, layer_norm, mlp
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag
+# ---------------------------------------------------------------------------
+
+def _n_layers(mlp_params: Dict) -> int:
+    return sum(1 for k in mlp_params if k.startswith("w"))
+
+
+def init_embedding(rng, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, dim), jnp.float32) * 0.05).astype(dtype)
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, *, mode: str = "mean",
+                  weights: Optional[jax.Array] = None) -> jax.Array:
+    """table: [V, D]; idx: [..., bag] int32 (0 = padding) -> [..., D]."""
+    emb = jnp.take(table, idx, axis=0)                    # [..., bag, D]
+    m = (idx != 0).astype(emb.dtype)[..., None]
+    if weights is not None:
+        m = m * weights[..., None]
+    s = jnp.sum(emb * m, axis=-2)
+    if mode == "sum":
+        return s
+    cnt = jnp.maximum(jnp.sum(m, axis=-2), 1e-9)
+    return s / cnt
+
+
+# ---------------------------------------------------------------------------
+# BST — Behavior Sequence Transformer (arXiv:1905.06874)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    n_items: int = 1_000_000
+    n_profile_fields: int = 8
+    profile_vocab: int = 100_000
+    embed_dim: int = 32
+    seq_len: int = 20               # history (seq_len - 1) + target
+    n_blocks: int = 1
+    n_heads: int = 8
+    d_ff: int = 128
+    mlp_dims: Tuple[int, ...] = (1024, 512, 256)
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def bst_init(rng, cfg: BSTConfig) -> Params:
+    ks = jax.random.split(rng, 8 + cfg.n_blocks)
+    D = cfg.embed_dim
+    p = {
+        "item_emb": init_embedding(ks[0], cfg.n_items, D, cfg.jdtype),
+        "pos_emb": init_embedding(ks[1], cfg.seq_len, D, cfg.jdtype),
+        "profile_emb": init_embedding(ks[2], cfg.profile_vocab, D, cfg.jdtype),
+        "blocks": [],
+    }
+    for b in range(cfg.n_blocks):
+        kb = jax.random.split(ks[3 + b], 6)
+        p["blocks"].append({
+            "wq": init_linear(kb[0], D, D, cfg.jdtype),
+            "wk": init_linear(kb[1], D, D, cfg.jdtype),
+            "wv": init_linear(kb[2], D, D, cfg.jdtype),
+            "wo": init_linear(kb[3], D, D, cfg.jdtype),
+            "ln1_s": jnp.ones((D,), cfg.jdtype), "ln1_b": jnp.zeros((D,), cfg.jdtype),
+            "ln2_s": jnp.ones((D,), cfg.jdtype), "ln2_b": jnp.zeros((D,), cfg.jdtype),
+            "ff1": init_linear(kb[4], D, cfg.d_ff, cfg.jdtype),
+            "ff2": init_linear(kb[5], cfg.d_ff, D, cfg.jdtype),
+        })
+    d_flat = cfg.seq_len * D + cfg.n_profile_fields * D
+    dims = (d_flat,) + cfg.mlp_dims + (1,)
+    p["mlp"] = init_mlp(ks[-1], dims, cfg.jdtype)
+    return p
+
+
+def _tiny_mha(blk, x, n_heads):
+    B, T, D = x.shape
+    hd = D // n_heads
+    q = (x @ blk["wq"]).reshape(B, T, n_heads, hd)
+    k = (x @ blk["wk"]).reshape(B, T, n_heads, hd)
+    v = (x @ blk["wv"]).reshape(B, T, n_heads, hd)
+    logit = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) / np.sqrt(hd)
+    probs = jax.nn.softmax(logit, axis=-1)
+    o = jnp.einsum("bhts,bshd->bthd", probs, v.astype(jnp.float32))
+    return (o.reshape(B, T, D).astype(x.dtype)) @ blk["wo"]
+
+
+def bst_forward(params: Params, batch: Dict, cfg: BSTConfig) -> jax.Array:
+    """batch: {hist [B, seq-1], target [B], profile [B, F]} -> logits [B]."""
+    seq = jnp.concatenate([batch["hist"], batch["target"][:, None]], axis=1)
+    x = jnp.take(params["item_emb"], seq, axis=0)
+    x = constrain(x, "dp", None, None)
+    x = x + params["pos_emb"][None]
+    for blk in params["blocks"]:
+        h = layer_norm(x, blk["ln1_s"], blk["ln1_b"])
+        x = x + _tiny_mha(blk, h, cfg.n_heads)
+        h = layer_norm(x, blk["ln2_s"], blk["ln2_b"])
+        x = x + jax.nn.gelu(h @ blk["ff1"]) @ blk["ff2"]
+    prof = jnp.take(params["profile_emb"], batch["profile"], axis=0)
+    flat = jnp.concatenate(
+        [x.reshape(x.shape[0], -1), prof.reshape(prof.shape[0], -1)], axis=1)
+    out = mlp(params["mlp"], flat, _n_layers(params["mlp"]),
+              act=jax.nn.leaky_relu)
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM — CIN + DNN + linear (arXiv:1803.05170)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_fields: int = 39
+    field_vocab: int = 200_000       # rows per field (single offset table)
+    embed_dim: int = 10
+    cin_layers: Tuple[int, ...] = (200, 200, 200)
+    dnn_dims: Tuple[int, ...] = (400, 400)
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def total_vocab(self):
+        return self.n_fields * self.field_vocab
+
+
+def xdeepfm_init(rng, cfg: XDeepFMConfig) -> Params:
+    ks = jax.random.split(rng, 4 + len(cfg.cin_layers))
+    p = {
+        "emb": init_embedding(ks[0], cfg.total_vocab, cfg.embed_dim, cfg.jdtype),
+        "linear_w": (jax.random.normal(ks[1], (cfg.total_vocab,), jnp.float32)
+                     * 0.01).astype(cfg.jdtype),
+        "cin": [],
+        "bias": jnp.zeros((), cfg.jdtype),
+    }
+    h_prev = cfg.n_fields
+    for i, h in enumerate(cfg.cin_layers):
+        p["cin"].append(init_linear(ks[2 + i], h_prev * cfg.n_fields, h,
+                                    cfg.jdtype))
+        h_prev = h
+    d_dnn = cfg.n_fields * cfg.embed_dim
+    dims = (d_dnn,) + cfg.dnn_dims + (1,)
+    p["dnn"] = init_mlp(ks[-1], dims, cfg.jdtype)
+    p["cin_out"] = init_linear(ks[-2], sum(cfg.cin_layers), 1, cfg.jdtype)
+    return p
+
+
+def xdeepfm_forward(params: Params, batch: Dict, cfg: XDeepFMConfig) -> jax.Array:
+    """batch: {fields [B, n_fields] int32 (already offset per field)}."""
+    ids = batch["fields"]
+    x0 = jnp.take(params["emb"], ids, axis=0)           # [B, m, D]
+    x0 = constrain(x0, "dp", None, None)
+    B, m, D = x0.shape
+    # linear term
+    lin = jnp.sum(jnp.take(params["linear_w"], ids, axis=0), axis=1)
+    # CIN
+    xk = x0
+    pooled = []
+    for w in params["cin"]:
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)          # [B, Hk, m, D]
+        z = z.reshape(B, -1, D)                          # [B, Hk*m, D]
+        xk = jnp.einsum("bzd,zh->bhd", z, w)             # [B, Hk+1, D]
+        xk = jax.nn.relu(xk)
+        pooled.append(jnp.sum(xk, axis=-1))              # [B, Hk+1]
+    cin_feat = jnp.concatenate(pooled, axis=1)
+    cin_logit = (cin_feat @ params["cin_out"])[:, 0]
+    # DNN
+    dnn_logit = mlp(params["dnn"], x0.reshape(B, -1), _n_layers(params["dnn"]))[:, 0]
+    return lin + cin_logit + dnn_logit + params["bias"]
+
+
+# ---------------------------------------------------------------------------
+# BERT4Rec — bidirectional masked item prediction (arXiv:1904.06690)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 60_000            # + 1 mask token + 0 pad
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff: int = 256
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def mask_id(self):
+        return self.n_items + 1
+
+    @property
+    def vocab(self):
+        return self.n_items + 2
+
+
+def bert4rec_init(rng, cfg: Bert4RecConfig) -> Params:
+    ks = jax.random.split(rng, 2 + cfg.n_blocks)
+    D = cfg.embed_dim
+    p = {
+        "item_emb": init_embedding(ks[0], cfg.vocab, D, cfg.jdtype),
+        "pos_emb": init_embedding(ks[1], cfg.seq_len, D, cfg.jdtype),
+        "blocks": [],
+        "out_bias": jnp.zeros((cfg.vocab,), cfg.jdtype),
+    }
+    for b in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + b], 6)
+        p["blocks"].append({
+            "wq": init_linear(kb[0], D, D, cfg.jdtype),
+            "wk": init_linear(kb[1], D, D, cfg.jdtype),
+            "wv": init_linear(kb[2], D, D, cfg.jdtype),
+            "wo": init_linear(kb[3], D, D, cfg.jdtype),
+            "ln1_s": jnp.ones((D,), cfg.jdtype), "ln1_b": jnp.zeros((D,), cfg.jdtype),
+            "ln2_s": jnp.ones((D,), cfg.jdtype), "ln2_b": jnp.zeros((D,), cfg.jdtype),
+            "ff1": init_linear(kb[4], D, cfg.d_ff, cfg.jdtype),
+            "ff2": init_linear(kb[5], cfg.d_ff, D, cfg.jdtype),
+        })
+    return p
+
+
+def bert4rec_forward(params: Params, batch: Dict, cfg: Bert4RecConfig) -> jax.Array:
+    """batch: {items [B, T]} -> logits [B, T, vocab] (tied output embedding)."""
+    x = jnp.take(params["item_emb"], batch["items"], axis=0)
+    x = constrain(x, "dp", None, None)
+    x = x + params["pos_emb"][None]
+    for blk in params["blocks"]:
+        h = layer_norm(x, blk["ln1_s"], blk["ln1_b"])
+        x = x + _tiny_mha(blk, h, cfg.n_heads)
+        h = layer_norm(x, blk["ln2_s"], blk["ln2_b"])
+        x = x + jax.nn.gelu(h @ blk["ff1"]) @ blk["ff2"]
+    logits = x @ params["item_emb"].T + params["out_bias"]
+    return constrain(logits, "dp", None, "tp")
+
+
+def bert4rec_sampled_loss(params: Params, batch: Dict, cfg: Bert4RecConfig):
+    """Sampled-softmax masked-item loss for production vocab sizes.
+
+    batch: {items [B, T], mask_pos [B, M], labels [B, M], neg_ids [K]}.
+    The label item competes against K shared negatives (logQ omitted: the
+    sampler is uniform in the synthetic pipeline).
+    """
+    x = jnp.take(params["item_emb"], batch["items"], axis=0)
+    x = constrain(x, "dp", None, None)
+    x = x + params["pos_emb"][None]
+    for blk in params["blocks"]:
+        h = layer_norm(x, blk["ln1_s"], blk["ln1_b"])
+        x = x + _tiny_mha(blk, h, cfg.n_heads)
+        h = layer_norm(x, blk["ln2_s"], blk["ln2_b"])
+        x = x + jax.nn.gelu(h @ blk["ff1"]) @ blk["ff2"]
+    hm = jnp.take_along_axis(x, batch["mask_pos"][..., None], axis=1)  # [B,M,D]
+    lab_e = jnp.take(params["item_emb"], batch["labels"], axis=0)      # [B,M,D]
+    neg_e = jnp.take(params["item_emb"], batch["neg_ids"], axis=0)     # [K,D]
+    pos_logit = jnp.sum(hm * lab_e, axis=-1, dtype=jnp.float32) \
+        + params["out_bias"][batch["labels"]]
+    neg_logit = jnp.einsum("bmd,kd->bmk", hm.astype(jnp.float32),
+                           neg_e.astype(jnp.float32)) \
+        + params["out_bias"][batch["neg_ids"]][None, None, :]
+    lse = jax.nn.logsumexp(
+        jnp.concatenate([pos_logit[..., None], neg_logit], axis=-1), axis=-1)
+    nll = jnp.mean(lse - pos_logit)
+    return nll, {"nll": nll}
+
+
+def bert4rec_topk_serve(params: Params, batch: Dict, cfg: Bert4RecConfig,
+                        top_k: int = 100, n_chunks: int = 16):
+    """Next-item top-k for the last position, hierarchical over vocab chunks
+    (keeps the [B, V] score matrix tp-sharded instead of all-gathered)."""
+    x = jnp.take(params["item_emb"], batch["items"], axis=0)
+    x = constrain(x, "dp", None, None)
+    x = x + params["pos_emb"][None]
+    for blk in params["blocks"]:
+        h = layer_norm(x, blk["ln1_s"], blk["ln1_b"])
+        x = x + _tiny_mha(blk, h, cfg.n_heads)
+        h = layer_norm(x, blk["ln2_s"], blk["ln2_b"])
+        x = x + jax.nn.gelu(h @ blk["ff1"]) @ blk["ff2"]
+    hl = x[:, -1]                                         # [B, D]
+    V = cfg.vocab
+    pad = (-V) % n_chunks
+    emb = params["item_emb"]
+    bias = params["out_bias"]
+    if pad:
+        emb = jnp.pad(emb, ((0, pad), (0, 0)))
+        bias = jnp.pad(bias, (0, pad), constant_values=-1e30)
+    Vc = emb.shape[0] // n_chunks
+    emb_c = emb.reshape(n_chunks, Vc, -1)
+    bias_c = bias.reshape(n_chunks, Vc)
+    scores = jnp.einsum("bd,cvd->bcv", hl.astype(jnp.float32),
+                        emb_c.astype(jnp.float32)) + bias_c[None]
+    scores = constrain(scores, "all", None, None)
+    v1, i1 = jax.lax.top_k(scores, min(top_k, Vc))        # [B, C, K]
+    i1 = i1 + jnp.arange(n_chunks, dtype=jnp.int32)[None, :, None] * Vc
+    v1 = v1.reshape(v1.shape[0], -1)
+    i1 = i1.reshape(i1.shape[0], -1)
+    v2, sel = jax.lax.top_k(v1, top_k)
+    return v2, jnp.take_along_axis(i1, sel, axis=1)
+
+
+def bert4rec_loss(params: Params, batch: Dict, cfg: Bert4RecConfig):
+    """Masked-position cross entropy. batch: items, labels, loss_mask."""
+    logits = bert4rec_forward(params, batch, cfg).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    m = batch["loss_mask"].astype(jnp.float32)
+    nll = jnp.sum((lse - ll) * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return nll, {"nll": nll}
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval with sampled softmax (Yi et al., RecSys'19)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    n_items: int = 10_000_000
+    n_users: int = 10_000_000
+    hist_len: int = 50
+    embed_dim: int = 256
+    tower_mlp: Tuple[int, ...] = (1024, 512, 256)
+    logq_correction: bool = True
+    temperature: float = 0.05
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def twotower_init(rng, cfg: TwoTowerConfig) -> Params:
+    ks = jax.random.split(rng, 6)
+    D = cfg.embed_dim
+    u_dims = (2 * D,) + cfg.tower_mlp
+    i_dims = (D,) + cfg.tower_mlp
+    p = {
+        "user_emb": init_embedding(ks[0], cfg.n_users, D, cfg.jdtype),
+        "item_emb": init_embedding(ks[1], cfg.n_items, D, cfg.jdtype),
+        "user_mlp": init_mlp(ks[2], u_dims, cfg.jdtype),
+        "item_mlp": init_mlp(ks[3], i_dims, cfg.jdtype),
+    }
+    return p
+
+
+def user_tower(params, batch, cfg: TwoTowerConfig) -> jax.Array:
+    u = jnp.take(params["user_emb"], batch["user_id"], axis=0)
+    h = embedding_bag(params["item_emb"], batch["hist"], mode="mean")
+    x = jnp.concatenate([u, h], axis=-1)
+    x = mlp(params["user_mlp"], x, _n_layers(params["user_mlp"]), act=jax.nn.relu)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def item_tower(params, item_ids, cfg: TwoTowerConfig) -> jax.Array:
+    x = jnp.take(params["item_emb"], item_ids, axis=0)
+    x = mlp(params["item_mlp"], x, _n_layers(params["item_mlp"]), act=jax.nn.relu)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def twotower_loss(params: Params, batch: Dict, cfg: TwoTowerConfig):
+    """In-batch sampled softmax with logQ correction.
+
+    batch: {user_id [B], hist [B, H], pos_item [B], item_logq [B]}.
+    """
+    u = user_tower(params, batch, cfg)                   # [B, D]
+    v = item_tower(params, batch["pos_item"], cfg)       # [B, D]
+    logits = (u @ v.T) / cfg.temperature                 # [B, B]
+    # rows follow the fully-sharded batch; columns need the gathered v
+    logits = constrain(logits, "all", None)
+    if cfg.logq_correction and "item_logq" in batch:
+        logits = logits - batch["item_logq"][None, :]
+    logits = logits.astype(jnp.float32)
+    labels = jnp.arange(u.shape[0])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = jnp.mean(lse - ll)
+    return nll, {"nll": nll}
+
+
+def retrieval_scores(params: Params, batch: Dict, cfg: TwoTowerConfig,
+                     top_k: int = 100):
+    """Score 1 query against n_candidates via batched dot; returns top-k.
+
+    batch: {user_id [B], hist [B, H], cand_ids [N]} — the candidate tower
+    runs over the (sharded) candidate id set; no loops.
+    """
+    u = user_tower(params, batch, cfg)                   # [B, D]
+    cand = item_tower(params, batch["cand_ids"], cfg)    # [N, D] ('tp'-sharded)
+    cand = constrain(cand, "tp", None)
+    scores = u @ cand.T                                  # [B, N]
+    vals, idx = jax.lax.top_k(scores, top_k)
+    return vals, idx
+
+
+# binary-cross-entropy helper shared by BST / xDeepFM
+def bce_loss(logits: jax.Array, labels: jax.Array):
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    nll = jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    return nll, {"nll": nll}

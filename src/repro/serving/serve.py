@@ -1,0 +1,128 @@
+"""Serving frontend (paper §4.2, Figure 4).
+
+"Lightweight in-memory caches, which periodically read fresh results from
+HDFS, serve as the frontend nodes ... together they form a single
+replicated, fault-tolerant service endpoint that can be arbitrarily scaled
+out." Request routing in the paper goes through the ServerSet abstraction
+(client-side load balancing over live replicas via ZooKeeper).
+
+Here: ``SuggestFrontend`` polls a checkpoint directory for the newest
+persisted suggestion tables (real-time + background), interpolates them at
+serve time (§4.5), and resolves fingerprints back to strings through the
+tokenizer. ``ServerSet`` is the client-side balancer over frontend replicas
+with liveness-based failover.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.background import interpolate
+from ..core.hashing import fingerprint
+from ..data.tokenizer import NGramTokenizer
+from ..distributed.fault_tolerance import CheckpointManager
+
+
+def pack_suggestions(sugg: Dict[int, List[Tuple[int, float]]]) -> Dict[str, np.ndarray]:
+    """Suggestion dict -> flat arrays for checkpointing."""
+    srcs, dsts, scores, offs = [], [], [], [0]
+    for s, lst in sugg.items():
+        srcs.append(s)
+        for d, sc in lst:
+            dsts.append(d)
+            scores.append(sc)
+        offs.append(len(dsts))
+    return {"src": np.asarray(srcs, np.uint64),
+            "dst": np.asarray(dsts, np.uint64),
+            "score": np.asarray(scores, np.float64),
+            "offsets": np.asarray(offs, np.int64)}
+
+
+def unpack_suggestions(arrays) -> Dict[int, List[Tuple[int, float]]]:
+    out: Dict[int, List[Tuple[int, float]]] = {}
+    src = arrays["src"]
+    offs = arrays["offsets"]
+    for i, s in enumerate(src):
+        lo, hi = int(offs[i]), int(offs[i + 1])
+        out[int(s)] = [(int(d), float(sc))
+                       for d, sc in zip(arrays["dst"][lo:hi],
+                                        arrays["score"][lo:hi])]
+    return out
+
+
+class SuggestFrontend:
+    """One frontend cache replica: polls persisted results, serves lookups."""
+
+    def __init__(self, rt_dir: str, bg_dir: Optional[str] = None,
+                 tok: Optional[NGramTokenizer] = None, alpha: float = 0.7,
+                 spell_dir: Optional[str] = None):
+        self.rt_ckpt = CheckpointManager(rt_dir)
+        self.bg_ckpt = CheckpointManager(bg_dir) if bg_dir else None
+        self.spell_ckpt = CheckpointManager(spell_dir) if spell_dir else None
+        self.tok = tok or NGramTokenizer()
+        self.alpha = alpha
+        self._rt: Dict = {}
+        self._bg: Dict = {}
+        self._spell: Dict[int, Tuple[int, float]] = {}
+        self._cache: Dict = {}
+        self._loaded_steps = (None, None, None)
+        self.alive = True
+
+    def poll(self) -> bool:
+        """Load newer persisted results if any (the paper's 1-min poll)."""
+        steps = (self.rt_ckpt.latest_step(),
+                 self.bg_ckpt.latest_step() if self.bg_ckpt else None,
+                 self.spell_ckpt.latest_step() if self.spell_ckpt else None)
+        if steps == self._loaded_steps:
+            return False
+        if steps[0] is not None:
+            self._rt = self._load(self.rt_ckpt, steps[0])
+        if self.bg_ckpt and steps[1] is not None:
+            self._bg = self._load(self.bg_ckpt, steps[1])
+        if self.spell_ckpt and steps[2] is not None:
+            arrs = self.spell_ckpt.restore_host(steps[2])
+            self._spell = {int(a): (int(b), float(d)) for a, b, d in
+                           zip(arrs["leaf_0"], arrs["leaf_1"], arrs["leaf_2"])}
+        self._cache = interpolate(self._rt, self._bg, self.alpha)
+        self._loaded_steps = steps
+        return True
+
+    @staticmethod
+    def _load(ckpt: CheckpointManager, step: int) -> Dict:
+        arrs = ckpt.restore_host(step)
+        # saved via pack_suggestions tree order: dst, offsets, score, src
+        named = dict(zip(["dst", "offsets", "score", "src"],
+                         [arrs[f"leaf_{i}"] for i in range(4)]))
+        return unpack_suggestions(named)
+
+    # ---- request path ----
+    def related(self, query: str, k: int = 8) -> List[Tuple[str, float]]:
+        fp = fingerprint(" ".join(query.lower().split()))
+        return [(self.tok.text(d), s) for d, s in self._cache.get(fp, [])[:k]]
+
+    def spelling(self, query: str) -> Optional[str]:
+        fp = fingerprint(" ".join(query.lower().split()))
+        hit = self._spell.get(fp)
+        return self.tok.text(hit[0]) if hit else None
+
+
+class ServerSet:
+    """Client-side load-balanced access to replicated frontends with
+    failover (the paper's ZooKeeper-coordinated ServerSet, simulated)."""
+
+    def __init__(self, replicas: List[SuggestFrontend]):
+        self.replicas = replicas
+        self._rr = itertools.count()
+
+    def request(self, query: str, k: int = 8) -> List[Tuple[str, float]]:
+        n = len(self.replicas)
+        start = next(self._rr)
+        for i in range(n):
+            r = self.replicas[(start + i) % n]
+            if r.alive:
+                return r.related(query, k)
+        raise RuntimeError("no live frontend replicas")

@@ -1,0 +1,68 @@
+"""Train-step factory: value_and_grad + AdamW + optional microbatch
+accumulation + optional int8 error-feedback gradient compression."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as optim
+from .grad_compression import compress_with_error_feedback, init_error_feedback
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: optim.AdamWConfig = optim.AdamWConfig()
+    grad_accum: int = 1            # microbatches per step
+    compress_grads: bool = False   # int8 + error feedback
+
+
+def init_train_state(params, cfg: TrainConfig) -> Dict[str, Any]:
+    st = {"opt": optim.init_state(params, cfg.opt)}
+    if cfg.compress_grads:
+        st["ef"] = init_error_feedback(params)
+    return st
+
+
+def make_train_step(loss_fn: Callable, cfg: TrainConfig) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics). Returns
+    step(params, state, batch) -> (params, state, metrics)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def step(params, state, batch):
+        if cfg.grad_accum > 1:
+            # batch leaves are [accum * micro, ...] -> scan microbatches
+            def reshape(x):
+                n = cfg.grad_accum
+                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+            micro = jax.tree.map(reshape, batch)
+
+            def body(acc, mb):
+                (loss, metrics), g = grads_of(params, mb)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + loss), metrics
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (zero_g, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / cfg.grad_accum, grads)
+            loss = loss_sum / cfg.grad_accum
+            metrics = {}
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+
+        new_state = dict(state)
+        if cfg.compress_grads:
+            grads, new_state["ef"] = compress_with_error_feedback(
+                grads, state["ef"])
+        params, new_state["opt"], opt_m = optim.apply_updates(
+            params, grads, state["opt"], cfg.opt)
+        out = {"loss": loss, **opt_m}
+        for k, v in (metrics or {}).items():
+            out[k] = v
+        return params, new_state, out
+
+    return step

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests must see the default single CPU device (the 512-device override is
+# ONLY for launch/dryrun.py). Guard against leakage from the environment.
+flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" in flags and "PYTEST_ALLOW_DEVICES" not in os.environ:
+    os.environ["XLA_FLAGS"] = " ".join(
+        f for f in flags.split() if "xla_force_host_platform_device_count" not in f)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__)))

@@ -1,0 +1,32 @@
+"""Seeded randomized property-test harness.
+
+`hypothesis` is not installed in this offline container, so property-based
+tests use this thin substitute: a decorator that re-runs a test body over N
+deterministic seeds and reports the failing seed (no shrinking, but failures
+are reproducible by construction).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+def property_test(n_cases: int = 10, base_seed: int = 1234):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must not see the `rng` parameter
+        # (it would treat it as a fixture).
+        def wrapper():
+            for case in range(n_cases):
+                seed = base_seed + case * 7919
+                rng = np.random.default_rng(seed)
+                try:
+                    fn(rng)
+                except Exception as e:  # noqa: BLE001
+                    raise AssertionError(
+                        f"property failed at case={case} seed={seed}: {e}"
+                    ) from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + finiteness (no NaNs)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.models import api
+from repro.models.api import ShapeCell
+
+# reduced shape cells per family (the FULL cells are dry-run only)
+_SMOKE_CELLS = {
+    "lm": {
+        "train": ShapeCell("train_smoke", "train", {"batch": 2, "seq": 32}),
+        "prefill": ShapeCell("prefill_smoke", "prefill",
+                             {"batch": 2, "seq": 32, "cache_len": 32}),
+        "decode": ShapeCell("decode_smoke", "decode",
+                            {"batch": 2, "seq": 32, "cache_len": 32}),
+    },
+    "gnn": {
+        "train": ShapeCell("graph_smoke", "train",
+                           {"n_nodes": 64, "n_edges": 256, "d_feat": 32,
+                            "n_classes": 5}),
+    },
+    "recsys": {
+        "train": ShapeCell("train_smoke", "train", {"batch": 16}),
+        "serve": ShapeCell("serve_smoke", "serve", {"batch": 8}),
+        "retrieval": ShapeCell("retr_smoke", "retrieval",
+                               {"batch": 1, "n_candidates": 128}),
+    },
+}
+
+ALL_ARCHS = list_archs()
+
+
+def _smoke_cfg(spec, cell):
+    cfg = spec.smoke_config
+    if spec.family == "gnn":
+        from repro.configs.gat_cora import adapt_config
+        cfg = adapt_config(cfg, cell)
+    return cfg
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_arch_registry_complete(arch_id):
+    spec = get_arch(arch_id)
+    assert spec.arch_id == arch_id
+    assert len(spec.shapes) == 4
+    assert spec.source
+
+
+@pytest.mark.parametrize("arch_id", ALL_ARCHS)
+def test_train_step_smoke(arch_id):
+    spec = get_arch(arch_id)
+    cell = _SMOKE_CELLS[spec.family]["train"]
+    cfg = _smoke_cfg(spec, cell)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    inputs = api.make_inputs(rng, cfg, cell)
+    lf = api.loss_fn(cfg)
+    (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+        params, inputs["batch"])
+    assert np.isfinite(float(loss)), arch_id
+    gsq = jax.tree.reduce(
+        lambda a, g: a + float(jnp.sum(jnp.square(g.astype(jnp.float32)))),
+        grads, 0.0)
+    assert np.isfinite(gsq) and gsq > 0, arch_id
+
+
+@pytest.mark.parametrize("arch_id",
+                         [a for a in ALL_ARCHS
+                          if get_arch(a).family == "lm"])
+def test_lm_serve_smoke(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.smoke_config
+    rng = np.random.default_rng(1)
+    for kind in ("prefill", "decode"):
+        cell = _SMOKE_CELLS["lm"][kind]
+        inputs = api.make_inputs(rng, cfg, cell)
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        fn = api.serve_fn(cfg, cell)
+        logits, caches = fn(params, inputs["caches"], inputs["tokens"])
+        assert np.isfinite(np.asarray(logits, np.float32)).all(), arch_id
+        assert logits.shape[-1] == cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch_id",
+                         [a for a in ALL_ARCHS
+                          if get_arch(a).family == "recsys"])
+def test_recsys_serve_and_retrieval_smoke(arch_id):
+    spec = get_arch(arch_id)
+    cfg = spec.smoke_config
+    rng = np.random.default_rng(2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    for kind in ("serve", "retrieval"):
+        cell = _SMOKE_CELLS["recsys"][kind]
+        inputs = api.make_inputs(rng, cfg, cell)
+        fn = api.serve_fn(cfg, cell)
+        out = fn(params, inputs["batch"])
+        flat = jax.tree.leaves(out)
+        for leaf in flat:
+            arr = np.asarray(leaf, np.float32)
+            assert np.isfinite(arr).all(), (arch_id, kind)
+
+
+def test_full_configs_match_assignment():
+    """The full configs must carry the exact assigned hyperparameters."""
+    c = get_arch("granite-3-8b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 4096, 32, 8, 12800, 49155)
+    c = get_arch("qwen3-8b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.qk_norm) == (36, 4096, 32, 8, 12288, 151936, True)
+    c = get_arch("h2o-danube-1.8b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (24, 2560, 32, 8, 6912, 32000)
+    assert c.window > 0
+    c = get_arch("mixtral-8x22b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+            c.vocab_size) == (56, 6144, 48, 8, 32768)
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.d_ff) == (8, 2, 16384)
+    c = get_arch("qwen2-moe-a2.7b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+            c.vocab_size) == (24, 2048, 16, 16, 151936)
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.d_ff) == (60, 4, 1408)
+    c = get_arch("gat-cora").config
+    assert (c.n_layers, c.d_hidden, c.n_heads) == (2, 8, 8)
+    c = get_arch("bst").config
+    assert (c.embed_dim, c.seq_len, c.n_blocks, c.n_heads,
+            c.mlp_dims) == (32, 20, 1, 8, (1024, 512, 256))
+    c = get_arch("xdeepfm").config
+    assert (c.n_fields, c.embed_dim, c.cin_layers,
+            c.dnn_dims) == (39, 10, (200, 200, 200), (400, 400))
+    c = get_arch("bert4rec").config
+    assert (c.embed_dim, c.n_blocks, c.n_heads, c.seq_len) == (64, 2, 2, 200)
+    c = get_arch("two-tower-retrieval").config
+    assert (c.embed_dim, c.tower_mlp) == (256, (1024, 512, 256))
+
+
+def test_long_500k_skip_annotations():
+    """Pure full-attention archs must skip long_500k with a reason; SWA archs
+    must run it."""
+    for a in ("granite-3-8b", "qwen3-8b", "qwen2-moe-a2.7b"):
+        assert get_arch(a).cell("long_500k").skip
+    for a in ("h2o-danube-1.8b", "mixtral-8x22b"):
+        assert get_arch(a).cell("long_500k").skip is None
+
+
+def test_cell_count_is_40():
+    n = sum(len(get_arch(a).shapes) for a in ALL_ARCHS)
+    assert n == 40

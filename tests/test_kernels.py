@@ -1,0 +1,146 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decay_prune import decay_prune
+from repro.kernels.assoc_score import assoc_score
+from repro.kernels.edit_distance import edit_distance
+from repro.kernels.flash_attention import flash_attention
+from repro.core.spelling import encode_strings
+from proptest import property_test
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("C", [1024, 4096, 32768])
+@pytest.mark.parametrize("factor,thresh", [(0.5, 0.1), (0.99, 0.0), (0.1, 2.0)])
+def test_decay_prune_sweep(C, factor, thresh):
+    rng = np.random.default_rng(C + int(factor * 100))
+    kh = rng.integers(0, 2**32, C, dtype=np.uint32)
+    kl = rng.integers(0, 2**32, C, dtype=np.uint32)
+    dead = rng.random(C) < 0.4
+    kh[dead] = 0
+    kl[dead] = 0
+    w = (rng.random(C) * 3).astype(np.float32)
+    got = decay_prune(jnp.asarray(kh), jnp.asarray(kl), jnp.asarray(w),
+                      jnp.float32(factor), jnp.float32(thresh), interpret=True)
+    exp = ref.decay_prune_ref(jnp.asarray(kh), jnp.asarray(kl), jnp.asarray(w),
+                              jnp.float32(factor), jnp.float32(thresh))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(exp[1]))
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(exp[2]), rtol=1e-6)
+    assert int(got[3]) == int(exp[4])
+    np.testing.assert_allclose(float(got[4]), float(exp[5]), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("C", [1024, 8192])
+@pytest.mark.parametrize("coefs", [(1.0, 0.15, 0.02, 0.0), (0.5, 1.0, 0.0, 0.3)])
+def test_assoc_score_sweep(C, coefs):
+    rng = np.random.default_rng(C)
+    mk = lambda s: jnp.asarray((rng.random(C) * s).astype(np.float32))
+    w_ab, c_ab = mk(5), jnp.floor(mk(20))
+    w_a, w_b = mk(50) + 1, mk(50) + 1
+    c_a = jnp.maximum(c_ab, jnp.floor(mk(100)))
+    c_b = jnp.maximum(c_ab, jnp.floor(mk(100)))
+    tw, tc = jnp.float32(1e4), jnp.float32(2e4)
+    got = assoc_score(w_ab, c_ab, w_a, w_b, c_a, c_b, tw, tc,
+                      coefs=coefs, interpret=True)
+    exp = ref.assoc_score_ref(w_ab, c_ab, w_a, w_b, c_a, c_b, tw, tc, coefs)
+    # LLR's xlogx cancellation amplifies f32 rounding differences between
+    # the fused kernel and XLA's op ordering; 5e-3 rel is the honest bound.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=5e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+def _brute_osa(a, b, fc=1.5):
+    la, lb = len(a), len(b)
+    D = np.zeros((la + 1, lb + 1))
+    for i in range(1, la + 1):
+        D[i][0] = fc + (i - 1)
+    for j in range(1, lb + 1):
+        D[0][j] = fc + (j - 1)
+    for i in range(1, la + 1):
+        for j in range(1, lb + 1):
+            sw = fc if (i == 1 or j == 1) else 1.0
+            iw = fc if j == 1 else 1.0
+            dw = fc if i == 1 else 1.0
+            d = min(D[i - 1][j - 1] + (0 if a[i - 1] == b[j - 1] else sw),
+                    D[i][j - 1] + iw, D[i - 1][j] + dw)
+            if i >= 2 and j >= 2 and a[i - 2] == b[j - 1] and a[i - 1] == b[j - 2]:
+                tw = fc if (i == 2 or j == 2) else 1.0
+                d = min(d, D[i - 2][j - 2] + tw)
+            D[i][j] = d
+    return D[la][lb]
+
+
+@property_test(n_cases=4)
+def test_edit_distance_property(rng):
+    L = 16
+    pairs = []
+    for _ in range(48):
+        n1, n2 = rng.integers(0, 13), rng.integers(0, 13)
+        a = "".join(chr(97 + c) for c in rng.integers(0, 6, n1))
+        b = "".join(chr(97 + c) for c in rng.integers(0, 6, n2))
+        pairs.append((a, b))
+    pairs += [("justin bieber", "justin beiber"), ("same", "same"), ("", "")]
+    A, B = zip(*pairs)
+    ac, al = encode_strings(list(A), L)
+    bc, bl = encode_strings(list(B), L)
+    for fc in (1.0, 1.5):
+        d_k = np.asarray(edit_distance(jnp.asarray(ac), jnp.asarray(al),
+                                       jnp.asarray(bc), jnp.asarray(bl),
+                                       first_char_cost=fc, interpret=True))
+        d_r = np.asarray(ref.edit_distance_ref(jnp.asarray(ac), jnp.asarray(al),
+                                               jnp.asarray(bc), jnp.asarray(bl), fc))
+        d_b = np.array([_brute_osa(a, b, fc) for a, b in pairs])
+        np.testing.assert_allclose(d_r, d_b, atol=1e-5)
+        np.testing.assert_allclose(d_k, d_b, atol=1e-5)
+
+
+def test_edit_distance_identity_and_symmetry_of_cost():
+    ac, al = encode_strings(["hello world"], 16)
+    d = edit_distance(jnp.asarray(ac), jnp.asarray(al), jnp.asarray(ac),
+                      jnp.asarray(al), interpret=True)
+    assert float(d[0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [
+    # (B, Hq, Hkv, Tq, Tk, D, causal, window)
+    (2, 4, 2, 64, 64, 32, True, 0),
+    (1, 8, 8, 128, 128, 16, True, 16),
+    (2, 4, 1, 1, 64, 32, True, 0),       # decode: single query token
+    (1, 2, 2, 37, 61, 8, False, 0),       # ragged, bidirectional
+    (1, 4, 2, 96, 96, 64, True, 32),      # GQA + SWA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(shape, dtype):
+    B, Hq, Hkv, Tq, Tk, D, causal, window = shape
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    q = jnp.asarray(rng.standard_normal((B, Hq, Tq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Tk, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Tk, D)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_custom_vjp_matches_ref_grad():
+    from repro.kernels import ops
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), jnp.float32)
+    f_k = lambda q, k, v: jnp.sum(ops.flash_attention(q, k, v, True, 0) ** 2)
+    f_r = lambda q, k, v: jnp.sum(ref.flash_attention_ref(q, k, v, causal=True) ** 2)
+    g_k = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+    g_r = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_k, g_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-4)

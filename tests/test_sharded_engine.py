@@ -1,0 +1,70 @@
+"""Sharded (beyond-paper) engine == unsharded engine, on 8 virtual devices.
+
+Runs in a subprocess because the 8-device XLA flag must be set before jax
+initializes (the main pytest process keeps the default 1 device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core.engine import EngineConfig, SearchAssistanceEngine
+    from repro.core import sharded_engine as se
+    from repro.core.hashing import split_fp
+    from repro.data.stream import StreamConfig, SyntheticStream
+
+    assert len(jax.devices()) == 8
+    mesh = Mesh(np.array(jax.devices()).reshape(8), ("shard",))
+    ecfg = EngineConfig(query_capacity=1<<12, cooc_capacity=1<<15,
+                        session_capacity=1<<12, session_window=4,
+                        decay_every=4, rank_every=0)
+    scfg = se.ShardedConfig(base=ecfg, n_salts=2, hot_threshold=30.0,
+                            route_capacity=1024)
+    step = se.make_sharded_step(scfg, mesh)
+    decay = se.make_sharded_decay(scfg, mesh)
+    rank = se.make_sharded_rank(scfg, mesh)
+    state = se.init_sharded_state(scfg, mesh)
+    stream = SyntheticStream(StreamConfig(vocab_size=256, n_users=200,
+                                          queries_per_tick=192,
+                                          tweets_per_tick=0), seed=5)
+    eng = SearchAssistanceEngine(ecfg)
+    for t in range(6):
+        ev, tw = stream.gen_tick(t)
+        s_hi, s_lo = split_fp(ev.sess_fp); q_hi, q_lo = split_fp(ev.q_fp)
+        state = step(state, jnp.asarray(s_hi), jnp.asarray(s_lo),
+                     jnp.asarray(q_hi), jnp.asarray(q_lo),
+                     jnp.asarray(ev.src, jnp.int32), jnp.asarray(ev.valid))
+        eng.step(ev, None)
+        if t > 0 and t % ecfg.decay_every == 0:
+            state = decay(state, jnp.int32(ecfg.decay_every))
+        state = state._replace(tick=state.tick + 1)
+    assert np.asarray(state.n_route_drop).sum() == 0, "routing overflow"
+    merged = se.merge_sharded_suggestions(rank(state), ecfg.rank.top_k)
+    eng.run_rank_cycle()
+    ref = eng.suggestions
+    assert set(merged) == set(ref), (len(merged), len(ref))
+    n_score_ok = 0
+    for f in merged:
+        ms = sorted([s for _, s in merged[f]], reverse=True)[:3]
+        rs = sorted([s for _, s in ref[f]], reverse=True)[:3]
+        np.testing.assert_allclose(ms, rs, rtol=5e-3, atol=1e-4)
+        n_score_ok += 1
+    print(f"SHARDED_OK {len(merged)} keys, {n_score_ok} score-matched")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_engine_matches_unsharded_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTEST_ALLOW_DEVICES"] = "1"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "SHARDED_OK" in r.stdout

@@ -1,0 +1,78 @@
+"""Spelling correction, count-min sketch, background interpolation."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.background import interpolate
+from repro.core.hashing import fingerprint, split_fp
+from repro.core.spelling import SpellConfig, normalize_query, spelling_cycle
+from proptest import property_test
+
+
+def test_spelling_finds_planted_misspellings():
+    texts = ["justin bieber", "justin beiber", "justin biber",
+             "hadoop", "hadop", "big data", "lady gaga", "lady gagga",
+             "world cup", "wrold cup"]
+    fps = np.array([fingerprint(t) for t in texts], np.uint64)
+    # correct forms are much more frequent
+    weights = np.array([1000, 5, 3, 800, 4, 500, 900, 6, 700, 2], np.float64)
+    out = spelling_cycle(fps, texts, weights, SpellConfig(freq_boost=3.0))
+    def corr(m):
+        return out.get(int(fingerprint(m)), (None, None))[0]
+    assert corr("justin beiber") == fingerprint("justin bieber")
+    assert corr("justin biber") == fingerprint("justin bieber")
+    assert corr("hadop") == fingerprint("hadoop")
+    assert corr("lady gagga") == fingerprint("lady gaga")
+    assert corr("wrold cup") == fingerprint("world cup")
+    # correct forms must NOT be "corrected"
+    assert int(fingerprint("justin bieber")) not in out
+    assert int(fingerprint("hadoop")) not in out
+
+
+def test_normalize_strips_sigils():
+    assert normalize_query("#SCOTUS") == "scotus"
+    assert normalize_query("@Obama  news") == "obama news"
+
+
+@property_test(n_cases=5)
+def test_sketch_never_underestimates(rng):
+    s = sk.make_sketch(depth=4, width=1 << 10)
+    keys = rng.integers(1, 5000, size=512).astype(np.uint64)
+    w = rng.random(512).astype(np.float32)
+    hi, lo = split_fp(keys)
+    s = sk.sketch_update(s, jnp.asarray(hi), jnp.asarray(lo),
+                         jnp.asarray(w), jnp.ones(512, bool))
+    truth = {}
+    for k, ww in zip(keys, w):
+        truth[int(k)] = truth.get(int(k), 0.0) + float(ww)
+    uk = np.array(sorted(truth), np.uint64)
+    uh, ul = split_fp(uk)
+    est = np.asarray(sk.sketch_query(s, jnp.asarray(uh), jnp.asarray(ul)))
+    exact = np.array([truth[int(k)] for k in uk])
+    assert (est >= exact - 1e-4).all()          # CMS never underestimates
+    # with this load factor the majority should be near-exact
+    assert np.mean(np.abs(est - exact) < 1e-3) > 0.5
+
+
+def test_sketch_decay():
+    s = sk.make_sketch(depth=2, width=1 << 8)
+    hi, lo = split_fp(np.array([42], np.uint64))
+    s = sk.sketch_update(s, jnp.asarray(hi), jnp.asarray(lo),
+                         jnp.asarray([10.0], jnp.float32), jnp.ones(1, bool))
+    s = sk.sketch_decay(s, 0.5)
+    est = float(sk.sketch_query(s, jnp.asarray(hi), jnp.asarray(lo))[0])
+    np.testing.assert_allclose(est, 5.0, rtol=1e-6)
+
+
+def test_interpolation_union_and_weights():
+    rt = {1: [(10, 1.0), (11, 0.5)]}
+    bg = {1: [(11, 1.0), (12, 0.8)], 2: [(20, 0.3)]}
+    out = interpolate(rt, bg, alpha=0.75, k=8)
+    d = dict(out[1])
+    np.testing.assert_allclose(d[10], 0.75)
+    np.testing.assert_allclose(d[11], 0.75 * 0.5 + 0.25 * 1.0)
+    np.testing.assert_allclose(d[12], 0.25 * 0.8)
+    assert out[2] == [(20, 0.3 * 0.25)]
+    # sorted descending
+    scores = [s for _, s in out[1]]
+    assert scores == sorted(scores, reverse=True)

@@ -1,0 +1,165 @@
+"""Unit + property tests for the hash-table stores."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import stores
+from repro.core.hashing import split_fp, join_fp, combine_fp_np
+from proptest import property_test
+
+MODES = (("weight", "add"), ("count", "add"), ("last_tick", "set"))
+
+
+def _mk(capacity=1 << 12):
+    return stores.make_table(capacity, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32})
+
+
+def _ins(t, fps, w, tick=0, valid=None):
+    hi, lo = split_fp(np.asarray(fps, np.uint64))
+    n = len(fps)
+    valid = np.ones(n, bool) if valid is None else valid
+    return stores.insert_accumulate(
+        t, jnp.asarray(hi), jnp.asarray(lo),
+        {"weight": jnp.asarray(w, jnp.float32),
+         "count": jnp.ones(n, jnp.float32),
+         "last_tick": jnp.full(n, tick, jnp.int32)},
+        jnp.asarray(valid), modes=MODES)
+
+
+def _get(t, fps):
+    hi, lo = split_fp(np.asarray(fps, np.uint64))
+    vals, found, _ = stores.lookup(t, jnp.asarray(hi), jnp.asarray(lo))
+    return vals, np.asarray(found)
+
+
+@property_test(n_cases=6)
+def test_insert_accumulate_matches_dict(rng):
+    """Weights/counts must equal a dict-accumulated oracle (conservation)."""
+    t = _mk()
+    oracle = {}
+    for _ in range(4):
+        keys = rng.integers(1, 500, size=256).astype(np.uint64) * 2654435761
+        w = rng.random(256).astype(np.float32)
+        valid = rng.random(256) < 0.9
+        t = _ins(t, keys, w, valid=valid)
+        for k, ww, v in zip(keys, w, valid):
+            if v:
+                e = oracle.setdefault(int(k), [0.0, 0])
+                e[0] += float(ww)
+                e[1] += 1
+    assert int(t.n_dropped) == 0
+    exp = stores.export_live(t)
+    fps = join_fp(exp["key_hi"], exp["key_lo"])
+    assert set(int(f) for f in fps) == set(oracle)
+    for f, w, c in zip(fps, exp["weight"], exp["count"]):
+        ow, oc = oracle[int(f)]
+        np.testing.assert_allclose(w, ow, rtol=1e-5)
+        assert int(c) == oc
+
+
+def test_lookup_missing():
+    t = _mk()
+    t = _ins(t, [111, 222], [1.0, 2.0])
+    vals, found = _get(t, [111, 333, 222])
+    assert list(found) == [True, False, True]
+    assert float(vals["weight"][1]) == 0.0
+
+
+def test_prune_then_reinsert_no_duplicates():
+    """A pruned slot must be reusable without creating duplicate entries."""
+    from repro.core.decay import DecayConfig, sweep_decay_prune
+    t = _mk(1 << 10)
+    keys = (np.arange(1, 400, dtype=np.uint64) * 0x9E3779B97F4A7C15) | 1
+    t = _ins(t, keys, np.ones(len(keys)))
+    # decay everything below threshold -> all pruned
+    cfg = DecayConfig(half_life_ticks=1.0, prune_threshold=0.9)
+    t, live, _ = sweep_decay_prune(t, jnp.int32(2), cfg=cfg)
+    assert int(live) == 0
+    # reinsert the same keys twice; counts must be exactly 2, live == N
+    t = _ins(t, keys, np.ones(len(keys)))
+    t = _ins(t, keys, np.ones(len(keys)))
+    assert int(t.live_count()) == len(keys)
+    vals, found = _get(t, keys)
+    assert found.all()
+    np.testing.assert_array_equal(np.asarray(vals["count"]), 2.0)
+
+
+def test_probe_overflow_drops_counted():
+    t = _mk(1 << 10)  # capacity 1024, probe_rounds 16
+    keys = (np.arange(1, 2000, dtype=np.uint64) * 2654435761) | 1
+    t = _ins(t, keys, np.ones(len(keys)))
+    # more keys than capacity -> must drop and count, never corrupt
+    assert int(t.n_dropped) > 0
+    assert int(t.live_count()) <= 1024
+    exp = stores.export_live(t)
+    assert (exp["count"] == 1.0).all()
+
+
+@property_test(n_cases=6)
+def test_sessions_match_deque_model(rng):
+    """Session pair emission == a python deque sliding-window model."""
+    from collections import deque
+    W = int(rng.integers(2, 6))
+    st = stores.make_session_table(1 << 10, W)
+    model = {}
+    expected = []
+    got = []
+    for batch in range(3):
+        B = 128
+        sess = rng.integers(1, 20, size=B).astype(np.uint64) * 7919
+        q = rng.integers(1, 50, size=B).astype(np.uint64) * 104729
+        src = rng.integers(0, 3, size=B).astype(np.int32)
+        valid = rng.random(B) < 0.95
+        # python model (batch order per session)
+        for s, qq, sc, v in zip(sess, q, src, valid):
+            if not v:
+                continue
+            d = model.setdefault(int(s), deque(maxlen=W))
+            for (p, psc) in d:
+                if p != int(qq):
+                    expected.append((p, int(qq)))
+            d.append((int(qq), int(sc)))
+        s_hi, s_lo = split_fp(sess)
+        q_hi, q_lo = split_fp(q)
+        st, pairs = stores.update_sessions(
+            st, jnp.asarray(s_hi), jnp.asarray(s_lo), jnp.asarray(q_hi),
+            jnp.asarray(q_lo), jnp.asarray(src), jnp.int32(batch),
+            jnp.asarray(valid))
+        pv = np.asarray(pairs.valid)
+        sfp = join_fp(np.asarray(pairs.src_hi), np.asarray(pairs.src_lo))[pv]
+        dfp = join_fp(np.asarray(pairs.dst_hi), np.asarray(pairs.dst_lo))[pv]
+        got.extend(zip(sfp.tolist(), dfp.tolist()))
+    assert sorted(got) == sorted(expected)
+
+
+def test_set_lane_last_writer_wins():
+    t = _mk()
+    hi, lo = split_fp(np.array([7, 7, 7], dtype=np.uint64))
+    t = stores.insert_accumulate(
+        t, jnp.asarray(hi), jnp.asarray(lo),
+        {"weight": jnp.ones(3, jnp.float32), "count": jnp.ones(3, jnp.float32),
+         "last_tick": jnp.asarray([5, 9, 3], jnp.int32)},
+        jnp.ones(3, bool), modes=MODES)
+    vals, found = _get(t, [7])
+    assert found.all()
+    assert int(vals["last_tick"][0]) == 3  # batch-order last
+
+
+def test_combine_fp_np_device_agree():
+    import jax
+    from repro.core.hashing import combine_fp_device
+    rng = np.random.default_rng(0)
+    a_hi = rng.integers(0, 2**32, 64, dtype=np.uint32)
+    a_lo = rng.integers(0, 2**32, 64, dtype=np.uint32)
+    b_hi = rng.integers(0, 2**32, 64, dtype=np.uint32)
+    b_lo = rng.integers(0, 2**32, 64, dtype=np.uint32)
+    d_hi, d_lo = combine_fp_device(jnp.asarray(a_hi), jnp.asarray(a_lo),
+                                   jnp.asarray(b_hi), jnp.asarray(b_lo))
+    n_hi, n_lo = combine_fp_np(a_hi, a_lo, b_hi, b_lo)
+    np.testing.assert_array_equal(np.asarray(d_hi), n_hi)
+    np.testing.assert_array_equal(np.asarray(d_lo), n_lo)
+    # order sensitivity (directed pairs)
+    r_hi, _ = combine_fp_device(jnp.asarray(b_hi), jnp.asarray(b_lo),
+                                jnp.asarray(a_hi), jnp.asarray(a_lo))
+    assert (np.asarray(d_hi) != np.asarray(r_hi)).any()
