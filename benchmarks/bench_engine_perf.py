@@ -6,8 +6,11 @@ collector (see EXPERIMENTS.md §Perf for the narrative):
   P1 probe_rounds 16 -> 8   (hash probe gathers dominate the update pass)
   P2 micro-batch size sweep (amortize fixed dispatch/sort overheads)
   P3 session window 5 -> 3  (pair volume ~ W; quality/coverage tradeoff)
-  P4 fused kernels          (decay sweep + scoring fusions; structural on
-                             TPU, measured in interpret mode here)
+  P4 fused find-or-claim    (before/after: two-pass probe + [C] scatter-max
+                             claim race vs single-sweep probe with
+                             batch-local claim resolution + early exit)
+  P5 ranking compaction     (before/after: full-capacity 3-key lexsort vs
+                             compacting gated rows first)
 """
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ from typing import List
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import stores
 from repro.core.engine import EngineConfig, init_state, ingest_queries
 from repro.core.hashing import split_fp
 from repro.data.stream import StreamConfig, SyntheticStream
@@ -70,4 +74,77 @@ def run() -> List[Row]:
         t = _measure(dataclasses.replace(base, session_window=w), 4096)
         rows.append((f"perf_P3_window{w}", t,
                      f"{4096/(t/1e6):,.0f} ev/s (pairs/event ~ {w})"))
+
+    rows += _bench_insert_paths()
+    rows += _bench_ranking_compaction()
+    return rows
+
+
+_MODES = (("weight", "add"), ("count", "add"), ("last_tick", "set"))
+
+
+def _bench_insert_paths() -> List[Row]:
+    """P4: the store-insert hot path, before (two-pass, [C] scatter-max
+    claims) vs after (single fused sweep, batch-local claims)."""
+    rng = np.random.default_rng(7)
+    C, B = 1 << 17, 20480          # cooc-store shape of the P2 workload
+    t0 = stores.make_table(C, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32})
+
+    def batch(seed):
+        r = np.random.default_rng(seed)
+        fps = (r.integers(1, 40000, size=B).astype(np.uint64)
+               * np.uint64(0x9E3779B97F4A7C15)) | np.uint64(1)
+        hi, lo = split_fp(fps)
+        upd = {"weight": jnp.asarray(r.random(B), jnp.float32),
+               "count": jnp.ones((B,), jnp.float32),
+               "last_tick": jnp.zeros((B,), jnp.int32)}
+        return jnp.asarray(hi), jnp.asarray(lo), upd, jnp.ones((B,), bool)
+
+    # warm the table to a realistic mixed found/new load (~30% full)
+    for s in range(2):
+        hi, lo, upd, valid = batch(s)
+        t0 = stores.insert_accumulate(t0, hi, lo, upd, valid, modes=_MODES)
+    hi, lo, upd, valid = batch(5)
+
+    rows: List[Row] = []
+    t_old = time_fn(lambda t: stores.insert_accumulate_twopass(
+        t, hi, lo, upd, valid, modes=_MODES), t0)
+    t_new = time_fn(lambda t: stores.insert_accumulate(
+        t, hi, lo, upd, valid, modes=_MODES), t0)
+    rows.append(("perf_P4_insert_twopass", t_old,
+                 f"{B/(t_old/1e6):,.0f} upd/s (pre-fusion reference)"))
+    rows.append(("perf_P4_insert_fused", t_new,
+                 f"{B/(t_new/1e6):,.0f} upd/s; x{t_old/max(t_new,1e-9):.2f} "
+                 f"vs twopass"))
+    return rows
+
+
+def _bench_ranking_compaction() -> List[Row]:
+    """P5: ranking cycle with/without pre-sort compaction of gated rows."""
+    from repro.core import ranking
+    from repro.core.ranking import RankConfig
+
+    ecfg = EngineConfig(query_capacity=1 << 14, cooc_capacity=1 << 17,
+                        session_capacity=1 << 13)
+    stream = SyntheticStream(StreamConfig(vocab_size=2048,
+                                          queries_per_tick=4096,
+                                          tweets_per_tick=0), seed=1)
+    state = init_state(ecfg)
+    for t in range(4):
+        ev, _ = stream.gen_tick(t)
+        sh, sl = split_fp(ev.sess_fp)
+        qh, ql = split_fp(ev.q_fp)
+        state = ingest_queries(state, jnp.asarray(sh), jnp.asarray(sl),
+                               jnp.asarray(qh), jnp.asarray(ql),
+                               jnp.asarray(ev.src, jnp.int32),
+                               jnp.asarray(ev.valid), cfg=ecfg)
+    rows: List[Row] = []
+    t_full = time_fn(lambda: ranking.ranking_cycle(
+        state.cooc, state.qstore, RankConfig(compact_frac=1.0)))
+    t_cmp = time_fn(lambda: ranking.ranking_cycle(
+        state.cooc, state.qstore, RankConfig(compact_frac=0.5)))
+    rows.append(("perf_P5_rank_full", t_full, "full-capacity lexsort"))
+    rows.append(("perf_P5_rank_compact", t_cmp,
+                 f"compact_frac=0.5; x{t_full/max(t_cmp,1e-9):.2f} vs full"))
     return rows

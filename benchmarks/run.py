@@ -1,12 +1,18 @@
 """Benchmark harness — one module per paper table/claim (see DESIGN.md §0).
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; optionally writes the same rows as
+JSON (name -> {us_per_call, derived}) so the perf trajectory is
+machine-readable across PRs.
 
-  PYTHONPATH=src python -m benchmarks.run              # all
+  PYTHONPATH=src python -m benchmarks.run                # all
   PYTHONPATH=src python -m benchmarks.run churn latency  # subset
+  PYTHONPATH=src python -m benchmarks.run --json results/BENCH_engine.json engine_perf
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -16,9 +22,18 @@ BENCHES = ["churn", "ingest", "latency", "ranking", "spelling",
 
 
 def main() -> None:
-    names = sys.argv[1:] or BENCHES
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON: name -> "
+                         "{us_per_call, derived}")
+    ap.add_argument("benches", nargs="*", default=[],
+                    help=f"subset of: {', '.join(BENCHES)} (default: all)")
+    args = ap.parse_args()
+
+    names = args.benches or BENCHES
     print("name,us_per_call,derived")
     failed = []
+    rows = {}
     for name in names:
         mod_name = f"benchmarks.bench_{name}"
         t0 = time.time()
@@ -26,11 +41,21 @@ def main() -> None:
             mod = __import__(mod_name, fromlist=["run"])
             for row_name, us, derived in mod.run():
                 print(f"{row_name},{us:.1f},{derived}", flush=True)
+                rows[row_name] = {"us_per_call": round(us, 1),
+                                  "derived": derived}
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             print(f"{name},nan,ERROR: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
         print(f"# bench_{name} took {time.time() - t0:.1f}s", flush=True)
+
+    if args.json:
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
+        print(f"# wrote {args.json} ({len(rows)} rows)", flush=True)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

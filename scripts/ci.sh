@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a fast benchmark smoke pass.
+#
+#   scripts/ci.sh             # full tier-1 + engine_perf smoke (~2 min)
+#   SKIP_BENCH=1 scripts/ci.sh  # tests only
+#
+# Exits nonzero on any test failure or benchmark error. The smoke bench
+# also writes machine-readable rows to results/BENCH_engine.json so the
+# perf trajectory is comparable across PRs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -x -q
+
+if [ "${SKIP_BENCH:-0}" != "1" ]; then
+    mkdir -p results
+    python -m benchmarks.run --json results/BENCH_engine.json engine_perf
+fi

@@ -252,6 +252,7 @@ class SearchAssistanceEngine:
         self.n_rank_cycles += 1
         return {"tick": self.last_rank_tick,
                 "n_rows": int(table.n_rows),
+                "n_overflow": int(table.n_overflow),
                 "n_suggest": len(self.suggestions)}
 
     # ---- serving-side reads (the frontend cache pulls these) ----

@@ -39,6 +39,13 @@ class RankConfig:
     min_src_weight: float = 0.5
     min_pair_count: float = 1.0
     use_kernel: bool = False   # route scoring through the Pallas kernel
+    # compact gated rows before the (expensive) 3-key lexsort: the sort then
+    # runs over compact_frac * capacity rows instead of the full table. The
+    # prune policy keeps stores <= 50% live (§4.4), so 0.5 is lossless in
+    # steady state; if more rows pass the gates, the globally lowest-scoring
+    # pairs are cut and counted in SuggestionTable.n_overflow. >= 1.0
+    # disables compaction entirely.
+    compact_frac: float = 0.5
 
 
 def _xlogx(x):
@@ -97,6 +104,7 @@ class SuggestionTable(NamedTuple):
     dst_lo: jax.Array    # u32[M, K]
     score: jax.Array     # f32[M, K]  (0 => empty slot)
     n_rows: jax.Array    # i32[]
+    n_overflow: jax.Array  # i32[] — gate-passing rows beyond the compaction cap
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -137,35 +145,64 @@ def ranking_cycle(
           & (src_vals["weight"] >= cfg.min_src_weight))
     score = jnp.where(ok, score, -jnp.inf)
 
+    # ---- compact gate-passing rows so the 3-key lexsort runs over M << C
+    # rows. Evidence gates + the <=50% prune policy keep the survivor count
+    # far below capacity; overflow beyond M is counted, not silent. ----
+    if cfg.compact_frac >= 1.0:
+        M = C
+        c_src_hi, c_src_lo = src_hi, src_lo
+        c_dst_hi, c_dst_lo = dst_hi, dst_lo
+        c_score, c_ok = score, ok
+        n_overflow = jnp.zeros((), jnp.int32)
+    else:
+        M = min(C, max(cfg.top_k, int(C * cfg.compact_frac)))
+        # single-key sort by descending score: gate-passing rows (finite
+        # score) land before gated rows (-inf), so sel = the M *best* rows.
+        # If more than M rows pass the gates, the overflow cut removes the
+        # globally lowest-scoring pairs — counted, and never a source's top
+        # suggestion before its worse ones.
+        sel = jnp.argsort(-score)[:M]
+        c_score = score[sel]
+        c_ok = c_score > -jnp.inf
+        gath = lambda a, fill: jnp.where(c_ok, a[sel], fill)
+        # filler rows get an all-ones src key so they cluster in their own
+        # (never-emitted) run after the sort instead of merging with a real
+        # source's run.
+        c_src_hi = gath(src_hi, jnp.uint32(0xFFFFFFFF))
+        c_src_lo = gath(src_lo, jnp.uint32(0xFFFFFFFF))
+        c_dst_hi = gath(dst_hi, jnp.uint32(0))
+        c_dst_lo = gath(dst_lo, jnp.uint32(0))
+        n_overflow = jnp.maximum(jnp.sum(ok.astype(jnp.int32)) - M, 0)
+
     # group by src, descending score: stable lexsort, last key is primary.
-    order = jnp.lexsort((-score, src_lo, src_hi))
-    s_hi, s_lo = src_hi[order], src_lo[order]
-    s_dhi, s_dlo = dst_hi[order], dst_lo[order]
-    s_score = score[order]
-    s_ok = ok[order]
+    order = jnp.lexsort((-c_score, c_src_lo, c_src_hi))
+    s_hi, s_lo = c_src_hi[order], c_src_lo[order]
+    s_dhi, s_dlo = c_dst_hi[order], c_dst_lo[order]
+    s_score = c_score[order]
+    s_ok = c_ok[order]
 
     prev_hi = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, jnp.uint32), s_hi[:-1]])
     prev_lo = jnp.concatenate([jnp.full((1,), 0xFFFFFFFF, jnp.uint32), s_lo[:-1]])
     is_new = (s_hi != prev_hi) | (s_lo != prev_lo)
     seg_id = jnp.cumsum(is_new.astype(jnp.int32)) - 1
-    first_idx = jax.ops.segment_min(jnp.arange(C, dtype=jnp.int32), seg_id,
-                                    num_segments=C)
-    pos = jnp.arange(C, dtype=jnp.int32) - first_idx[seg_id]
+    first_idx = jax.ops.segment_min(jnp.arange(M, dtype=jnp.int32), seg_id,
+                                    num_segments=M)
+    pos = jnp.arange(M, dtype=jnp.int32) - first_idx[seg_id]
 
     K = cfg.top_k
     keep = s_ok & (pos < K)
     row = seg_id
-    out_src_hi = jnp.zeros((C,), jnp.uint32).at[jnp.where(is_new & s_ok, row, C)].set(s_hi, mode="drop")
-    out_src_lo = jnp.zeros((C,), jnp.uint32).at[jnp.where(is_new & s_ok, row, C)].set(s_lo, mode="drop")
-    r_idx = jnp.where(keep, row, C)
+    out_src_hi = jnp.zeros((M,), jnp.uint32).at[jnp.where(is_new & s_ok, row, M)].set(s_hi, mode="drop")
+    out_src_lo = jnp.zeros((M,), jnp.uint32).at[jnp.where(is_new & s_ok, row, M)].set(s_lo, mode="drop")
+    r_idx = jnp.where(keep, row, M)
     p_idx = jnp.where(keep, pos, 0)
-    out_dst_hi = jnp.zeros((C, K), jnp.uint32).at[r_idx, p_idx].set(s_dhi, mode="drop")
-    out_dst_lo = jnp.zeros((C, K), jnp.uint32).at[r_idx, p_idx].set(s_dlo, mode="drop")
-    out_score = jnp.zeros((C, K), jnp.float32).at[r_idx, p_idx].set(
+    out_dst_hi = jnp.zeros((M, K), jnp.uint32).at[r_idx, p_idx].set(s_dhi, mode="drop")
+    out_dst_lo = jnp.zeros((M, K), jnp.uint32).at[r_idx, p_idx].set(s_dlo, mode="drop")
+    out_score = jnp.zeros((M, K), jnp.float32).at[r_idx, p_idx].set(
         jnp.where(keep, s_score, 0.0), mode="drop")
     n_rows = jnp.sum((is_new & s_ok).astype(jnp.int32))
     return SuggestionTable(out_src_hi, out_src_lo, out_dst_hi, out_dst_lo,
-                           out_score, n_rows)
+                           out_score, n_rows, n_overflow)
 
 
 def suggestions_to_host(table: SuggestionTable) -> dict:

@@ -212,10 +212,12 @@ def make_sharded_decay(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
     base = cfg.base
 
     def body(state: ShardedState, dticks):
+        # same fast paths as the unsharded engine: cfg.use_kernel routes the
+        # per-shard sweep through the fused multi-lane Pallas kernel.
         qstore, _, _ = sweep_decay_prune(state.qstore, dticks, cfg=base.decay,
-                                         use_kernel=False)
+                                         use_kernel=base.use_kernel)
         cooc, _, _ = sweep_decay_prune(state.cooc, dticks, cfg=base.decay,
-                                       use_kernel=False)
+                                       use_kernel=base.use_kernel)
         sessions = stores.evict_sessions(state.sessions, state.tick,
                                          base.session_ttl)
         return ShardedState(qstore, cooc, sessions, state.tick + 0,
@@ -231,10 +233,12 @@ def make_sharded_decay(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
 def make_sharded_rank(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
     def body(state: ShardedState):
         t = ranking.ranking_cycle(state.cooc, state.qstore, cfg.base.rank)
-        return t._replace(n_rows=t.n_rows[None])  # (1,) per shard
+        # scalars -> (1,) per shard
+        return t._replace(n_rows=t.n_rows[None], n_overflow=t.n_overflow[None])
 
     state_spec = _state_spec(axis)
-    out_spec = SuggestionTable(*([P(axis)] * 5), n_rows=P(axis))
+    out_spec = SuggestionTable(*([P(axis)] * 5), n_rows=P(axis),
+                               n_overflow=P(axis))
     fn = shard_map(body, mesh=mesh, in_specs=(state_spec,),
                    out_specs=out_spec, check_rep=False)
     return jax.jit(fn)

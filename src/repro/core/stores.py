@@ -9,11 +9,15 @@ tables laid out as dense JAX arrays** updated by *micro-batches* of events:
   * keys are 64-bit fingerprints stored as two uint32 lanes (no jax x64),
   * a batch of updates is deduplicated with a stable lexsort + segment-sum,
   * existing keys are found with a K-round triangular probe (all rounds are
-    always scanned, which makes lookups correct in the presence of pruned
-    slots without tombstones),
-  * new keys claim the first empty slot on their probe sequence through a
-    scatter-max "claim" race (unique keys after dedup => at most one winner
-    per key, losers retry the next round),
+    scanned when a key may be absent, which makes lookups correct in the
+    presence of pruned slots without tombstones; the sweep early-exits the
+    moment every key is resolved),
+  * finds and claims share ONE fused sweep (``_find_or_claim``): the find
+    rounds also record each row's empty-slot candidates as a bitmask, then
+    claim rounds resolve conflicts *batch-locally* — contenders for a slot
+    are sorted by slot id and the first of each run wins, O(B log B) per
+    round instead of a capacity-sized scatter-max race (unique keys after
+    dedup => at most one winner per key, losers fall to their next bit),
   * keys that fail to place after K rounds are *dropped and counted* — the
     paper's engine likewise rate-limits/prunes to bound memory (§4.4).
 
@@ -79,6 +83,106 @@ def _probe_slot(h0: jax.Array, r: int, capacity: int) -> jax.Array:
     return (h0 + jnp.uint32(r * (r + 1) // 2)) & jnp.uint32(capacity - 1)
 
 
+def _probe_slot_dyn(h0: jax.Array, r: jax.Array, capacity: int) -> jax.Array:
+    """`_probe_slot` with a *traced* round index (uint32 scalar or [B])."""
+    r = r.astype(jnp.uint32)
+    return (h0 + ((r * (r + 1)) >> 1)) & jnp.uint32(capacity - 1)
+
+
+def _find_or_claim(
+    key_hi_tab: jax.Array,
+    key_lo_tab: jax.Array,
+    s_hi: jax.Array,
+    s_lo: jax.Array,
+    alive: jax.Array,
+    probe_rounds: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-sweep find-or-claim over unique keys (the store hot path).
+
+    One probe sweep records, per row, the slot already holding its key (the
+    full ``probe_rounds`` sequence is scanned so lookups stay correct in the
+    presence of pruned slots) **and** a bitmask of empty slots along the
+    sequence. A second `while_loop` then resolves insertions *batch-locally*:
+    each round, every unplaced row proposes its next empty-at-snapshot slot,
+    contenders for the same slot are resolved by a stable sort over the
+    proposals (first of each slot-run wins — O(B log B), never O(capacity)),
+    and losers fall through to their next candidate bit. Both loops early-exit
+    the moment every row is served, so the accumulate-heavy steady state costs
+    a couple of probe rounds instead of 2 x ``probe_rounds`` full passes.
+
+    Requires ``alive`` rows to carry *unique* keys (callers dedup first).
+    Returns (key_hi_tab, key_lo_tab, slot, placed, n_dropped); ``slot`` is -1
+    for rows that were not placed.
+    """
+    assert probe_rounds <= 32, "empty-slot bitmask is uint32"
+    C = key_hi_tab.shape[0]
+    B = s_hi.shape[0]
+    h0 = probe_hash(s_hi, s_lo)
+
+    # -- Sweep 1: find existing slots, record empty candidates as bits. --
+    def find_cond(st):
+        r, found, _ = st
+        return (r < probe_rounds) & jnp.any(alive & (found < 0))
+
+    def find_body(st):
+        r, found, emp = st
+        slot = _probe_slot_dyn(h0, r, C)
+        t_hi = key_hi_tab[slot]
+        t_lo = key_lo_tab[slot]
+        hit = alive & (found < 0) & (t_hi == s_hi) & (t_lo == s_lo)
+        found = jnp.where(hit, slot.astype(jnp.int32), found)
+        empty = (t_hi == 0) & (t_lo == 0)
+        bit = jnp.left_shift(jnp.uint32(1), r.astype(jnp.uint32))
+        emp = emp | jnp.where(empty, bit, jnp.uint32(0))
+        return r + 1, found, emp
+
+    _, found_slot, emp_bits = jax.lax.while_loop(
+        find_cond, find_body,
+        (jnp.uint32(0), jnp.full((B,), -1, jnp.int32),
+         jnp.zeros((B,), jnp.uint32)))
+
+    placed = found_slot >= 0
+    write_slot = found_slot
+
+    # -- Sweep 2: claim rounds. Slots empty at snapshot time can only be
+    # consumed (the table never loses keys mid-insert), so re-checking the
+    # proposal against the *current* table keeps claims race-free. --
+    def claim_cond(st):
+        kh, kl, placed, _, emp = st
+        return jnp.any(alive & ~placed & (emp != 0))
+
+    def claim_body(st):
+        kh, kl, placed, wslot, emp = st
+        want = alive & ~placed & (emp != 0)
+        low = emp & (~emp + jnp.uint32(1))                    # lowest candidate bit
+        r = jax.lax.population_count(low - jnp.uint32(1))     # its round index
+        slot = _probe_slot_dyn(h0, jnp.where(want, r, 0), C)
+        still_empty = (kh[slot] == 0) & (kl[slot] == 0)
+        contend = want & still_empty
+        # batch-local conflict resolution: stable sort by proposed slot,
+        # first row of each slot-run wins.
+        skey = jnp.where(contend, slot.astype(jnp.int32), C)
+        order = jnp.argsort(skey)
+        so = skey[order]
+        first = jnp.concatenate([jnp.ones((1,), bool), so[1:] != so[:-1]])
+        won = jnp.zeros((B,), bool).at[order].set(first & (so < C))
+        drop_slot = jnp.where(won, slot.astype(jnp.int32), C)
+        kh = kh.at[drop_slot].set(s_hi, mode="drop")
+        kl = kl.at[drop_slot].set(s_lo, mode="drop")
+        wslot = jnp.where(won, slot.astype(jnp.int32), wslot)
+        placed = placed | won
+        # every examined candidate is consumed (won, lost, or stale)
+        emp = jnp.where(want, emp & ~low, emp)
+        return kh, kl, placed, wslot, emp
+
+    key_hi_tab, key_lo_tab, placed, write_slot, _ = jax.lax.while_loop(
+        claim_cond, claim_body,
+        (key_hi_tab, key_lo_tab, placed, write_slot, emp_bits))
+
+    dropped = jnp.sum((alive & ~placed).astype(jnp.int32))
+    return key_hi_tab, key_lo_tab, write_slot, placed, dropped
+
+
 def _dedup_sorted(key_hi, key_lo, valid):
     """Stable lexsort by (hi, lo); returns (perm, seg_id, rep_mask, run_start).
 
@@ -98,6 +202,52 @@ def _dedup_sorted(key_hi, key_lo, valid):
     return perm, seg_id, rep_mask
 
 
+def _dedup_and_aggregate(key_hi, key_lo, updates, valid, mode_map):
+    """Shared insert prologue: mask invalid rows to the empty key, dedup with
+    a stable lexsort, land per-segment lane reductions on every row of the
+    run. Returns (s_hi, s_lo, agg, alive) in dedup-sorted batch order; alive
+    marks each unique key's representative row."""
+    key_hi = jnp.where(valid, key_hi, 0).astype(jnp.uint32)
+    key_lo = jnp.where(valid, key_lo, 0).astype(jnp.uint32)
+    B = key_hi.shape[0]
+    perm, seg_id, rep_mask = _dedup_sorted(key_hi, key_lo, valid)
+    s_hi, s_lo = key_hi[perm], key_lo[perm]
+    agg: Dict[str, jax.Array] = {}
+    for name, upd in updates.items():
+        upd_s = upd[perm]
+        mode = mode_map[name]
+        if mode == ADD:
+            seg = jax.ops.segment_sum(upd_s, seg_id, num_segments=B)
+            agg[name] = seg[seg_id]
+        elif mode == MAX:
+            seg = jax.ops.segment_max(upd_s, seg_id, num_segments=B)
+            agg[name] = seg[seg_id]
+        else:  # SET — representative row is the last of the run already.
+            agg[name] = upd_s
+    return s_hi, s_lo, agg, rep_mask
+
+
+def _apply_lane_updates(lanes, agg, mode_map, ok, write_slot, C):
+    """Shared insert epilogue: apply aggregated updates at write_slot
+    (unique keys => unique slots; OOB sentinel C drops masked rows)."""
+    safe = jnp.where(ok, write_slot, 0)
+    drop = jnp.where(ok, write_slot, C)
+    new_lanes = dict(lanes)
+    for name, upd in agg.items():
+        lane = new_lanes[name]
+        mode = mode_map[name]
+        if mode == ADD:
+            zeros = jnp.zeros_like(upd)
+            add = jnp.where(_bmask(ok, upd), upd, zeros)
+            new_lanes[name] = lane.at[safe].add(add)
+        elif mode == MAX:
+            cur = lane[safe]
+            new_lanes[name] = lane.at[drop].set(jnp.maximum(cur, upd), mode="drop")
+        else:  # SET
+            new_lanes[name] = lane.at[drop].set(upd, mode="drop")
+    return new_lanes
+
+
 @partial(jax.jit, static_argnames=("modes", "probe_rounds"))
 def insert_accumulate(
     table: HashTable,
@@ -115,32 +265,41 @@ def insert_accumulate(
     """
     C = table.capacity
     mode_map = dict(modes)
-    # Invalid rows get the empty key so they collapse into a masked run.
-    key_hi = jnp.where(valid, key_hi, 0).astype(jnp.uint32)
-    key_lo = jnp.where(valid, key_lo, 0).astype(jnp.uint32)
+    s_hi, s_lo, agg, alive = _dedup_and_aggregate(
+        key_hi, key_lo, updates, valid, mode_map)
 
-    B = key_hi.shape[0]
-    perm, seg_id, rep_mask = _dedup_sorted(key_hi, key_lo, valid)
-    s_hi, s_lo = key_hi[perm], key_lo[perm]
+    key_hi_tab, key_lo_tab, write_slot, placed, dropped = _find_or_claim(
+        table.key_hi, table.key_lo, s_hi, s_lo, alive, probe_rounds)
 
-    # Per-segment reductions of each lane, landed on the representative row.
-    agg: Dict[str, jax.Array] = {}
-    for name, upd in updates.items():
-        upd_s = upd[perm]
-        mode = mode_map[name]
-        if mode == ADD:
-            seg = jax.ops.segment_sum(upd_s, seg_id, num_segments=B)
-            agg[name] = seg[seg_id]
-        elif mode == MAX:
-            seg = jax.ops.segment_max(upd_s, seg_id, num_segments=B)
-            agg[name] = seg[seg_id]
-        else:  # SET — representative row is the last of the run already.
-            agg[name] = upd_s
+    new_lanes = _apply_lane_updates(table.lanes, agg, mode_map,
+                                    placed & alive, write_slot, C)
+    return HashTable(key_hi_tab, key_lo_tab, new_lanes, table.n_dropped + dropped)
 
-    alive = rep_mask
+
+@partial(jax.jit, static_argnames=("modes", "probe_rounds"))
+def insert_accumulate_twopass(
+    table: HashTable,
+    key_hi: jax.Array,
+    key_lo: jax.Array,
+    updates: Dict[str, jax.Array],
+    valid: jax.Array,
+    *,
+    modes: Tuple[Tuple[str, str], ...],
+    probe_rounds: int = 16,
+) -> HashTable:
+    """Pre-fusion reference probe core (two unrolled probe passes, [C]-sized
+    scatter-max claim race), sharing the dedup/aggregate prologue and
+    lane-apply epilogue with ``insert_accumulate`` so parity tests compare
+    ONLY the probe strategies. Kept for parity tests and before/after
+    benchmarking; not used by the engine.
+    """
+    C = table.capacity
+    mode_map = dict(modes)
+    s_hi, s_lo, agg, alive = _dedup_and_aggregate(
+        key_hi, key_lo, updates, valid, mode_map)
+    B = s_hi.shape[0]
     h0 = probe_hash(s_hi, s_lo)
 
-    # -- Pass 1: find existing slots across ALL probe rounds (prune-safe). --
     found_slot = jnp.full((B,), -1, jnp.int32)
     for r in range(probe_rounds):
         slot = _probe_slot(h0, r, C)
@@ -153,7 +312,6 @@ def insert_accumulate(
     placed = found_slot >= 0
     write_slot = found_slot
 
-    # -- Pass 2: unplaced keys claim the first empty slot on their sequence. --
     for r in range(probe_rounds):
         want = alive & ~placed
         slot = _probe_slot(h0, r, C)
@@ -162,8 +320,6 @@ def insert_accumulate(
         claim = jnp.full((C,), -1, jnp.int32)
         claim = claim.at[slot].max(jnp.where(contend, jnp.arange(B, dtype=jnp.int32), -1))
         won = contend & (claim[slot] == jnp.arange(B, dtype=jnp.int32))
-        # OOB sentinel + mode='drop': losers must not scatter at all (a
-        # masked write of the *old* value could race a genuine winner).
         drop_slot = jnp.where(won, slot.astype(jnp.int32), C)
         key_hi_tab = key_hi_tab.at[drop_slot].set(s_hi, mode="drop")
         key_lo_tab = key_lo_tab.at[drop_slot].set(s_lo, mode="drop")
@@ -172,24 +328,8 @@ def insert_accumulate(
 
     dropped = jnp.sum((alive & ~placed).astype(jnp.int32))
 
-    # -- Apply lane updates at write_slot (unique keys => unique slots). --
-    ok = placed & alive
-    safe = jnp.where(ok, write_slot, 0)
-    drop = jnp.where(ok, write_slot, C)
-    new_lanes = dict(table.lanes)
-    for name, upd in agg.items():
-        lane = new_lanes[name]
-        mode = mode_map[name]
-        if mode == ADD:
-            zeros = jnp.zeros_like(upd)
-            add = jnp.where(_bmask(ok, upd), upd, zeros)
-            new_lanes[name] = lane.at[safe].add(add)
-        elif mode == MAX:
-            cur = lane[safe]
-            new_lanes[name] = lane.at[drop].set(jnp.maximum(cur, upd), mode="drop")
-        else:  # SET
-            new_lanes[name] = lane.at[drop].set(upd, mode="drop")
-
+    new_lanes = _apply_lane_updates(table.lanes, agg, mode_map,
+                                    placed & alive, write_slot, C)
     return HashTable(key_hi_tab, key_lo_tab, new_lanes, table.n_dropped + dropped)
 
 
@@ -212,12 +352,23 @@ def lookup(
     key_lo = jnp.asarray(key_lo, jnp.uint32)
     h0 = probe_hash(key_hi, key_lo)
     B = key_hi.shape[0]
-    found_slot = jnp.full((B,), -1, jnp.int32)
-    for r in range(probe_rounds):
-        slot = _probe_slot(h0, r, C)
-        hit = (found_slot < 0) & (table.key_hi[slot] == key_hi) & (table.key_lo[slot] == key_lo) \
-            & ((key_hi != 0) | (key_lo != 0))
-        found_slot = jnp.where(hit, slot.astype(jnp.int32), found_slot)
+    nonzero = (key_hi != 0) | (key_lo != 0)
+
+    # while_loop with early exit: most batches resolve in 1-2 rounds (only
+    # genuinely-absent nonzero keys force the full prune-safe scan).
+    def cond(st):
+        r, found = st
+        return (r < probe_rounds) & jnp.any(nonzero & (found < 0))
+
+    def body(st):
+        r, found = st
+        slot = _probe_slot_dyn(h0, r, C)
+        hit = nonzero & (found < 0) \
+            & (table.key_hi[slot] == key_hi) & (table.key_lo[slot] == key_lo)
+        return r + 1, jnp.where(hit, slot.astype(jnp.int32), found)
+
+    _, found_slot = jax.lax.while_loop(
+        cond, body, (jnp.uint32(0), jnp.full((B,), -1, jnp.int32)))
     found = found_slot >= 0
     safe = jnp.where(found, found_slot, 0)
     out = {}
@@ -328,31 +479,11 @@ def update_sessions(
         jnp.arange(B, dtype=jnp.int32), seg_id, num_segments=B)[seg_id]
     run_len = jax.ops.segment_sum(jnp.ones((B,), jnp.int32), seg_id, num_segments=B)[seg_id]
 
-    # ---- find/create the session row: probe with run representatives. ----
+    # ---- find/create the session row: single fused find-or-claim sweep
+    # over the run representatives (unique session keys). ----
     rep = is_new_run & e_valid
-    h0 = probe_hash(e_shi, e_slo)
-    found_slot = jnp.full((B,), -1, jnp.int32)
-    for r in range(probe_rounds):
-        slot = _probe_slot(h0, r, S)
-        hit = rep & (found_slot < 0) & (table.key_hi[slot] == e_shi) & (table.key_lo[slot] == e_slo)
-        found_slot = jnp.where(hit, slot.astype(jnp.int32), found_slot)
-    key_hi_tab, key_lo_tab = table.key_hi, table.key_lo
-    placed = found_slot >= 0
-    row = found_slot
-    for r in range(probe_rounds):
-        want = rep & ~placed
-        slot = _probe_slot(h0, r, S)
-        empty = (key_hi_tab[slot] == 0) & (key_lo_tab[slot] == 0)
-        contend = want & empty
-        claim = jnp.full((S,), -1, jnp.int32)
-        claim = claim.at[slot].max(jnp.where(contend, jnp.arange(B, dtype=jnp.int32), -1))
-        won = contend & (claim[slot] == jnp.arange(B, dtype=jnp.int32))
-        drop_slot = jnp.where(won, slot.astype(jnp.int32), S)
-        key_hi_tab = key_hi_tab.at[drop_slot].set(e_shi, mode="drop")
-        key_lo_tab = key_lo_tab.at[drop_slot].set(e_slo, mode="drop")
-        row = jnp.where(won, slot.astype(jnp.int32), row)
-        placed = placed | won
-    dropped = jnp.sum((rep & ~placed).astype(jnp.int32))
+    key_hi_tab, key_lo_tab, row, placed, dropped = _find_or_claim(
+        table.key_hi, table.key_lo, e_shi, e_slo, rep, probe_rounds)
     # Broadcast the representative's row to every event in its run.
     rep_row = jax.ops.segment_max(jnp.where(rep, row, -1), seg_id, num_segments=B)
     row = rep_row[seg_id]

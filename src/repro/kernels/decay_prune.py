@@ -7,16 +7,26 @@ this is three full HBM passes over the table (decay write, prune write,
 stats read); the fused kernel does ONE read + ONE write per lane plus a
 per-block stats reduction.
 
+``decay_prune_multi`` sweeps **every** store lane in that single pass: any
+number of weight lanes (decayed then pruned together) plus any number of
+auxiliary lanes (counts, timestamps, endpoint fingerprints — cleared on
+pruned slots, passed through otherwise). The engine's decay cycle therefore
+costs one read + one write of the whole table, with no follow-up jnp passes
+per aux lane.
+
 TPU layout: the 1-D table arrays (capacity C, a power of two) are viewed as
 (C/1024, 8, 128) so each block is an aligned (8, 128) VPU tile; the grid
 walks row-blocks of ROWS_PER_BLOCK tiles. Stats are accumulated per grid
 step into a small (grid,)-shaped output and reduced on the host side of the
 call (one extra tiny pass).
+
+``interpret`` defaults to auto-detection: the kernel compiles for real on a
+TPU backend and falls back to the Pallas interpreter elsewhere (CPU CI).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,35 +38,73 @@ TILE = LANE * SUBLANE            # 1024 elements per tile
 ROWS_PER_BLOCK = 16              # 16 tiles = 16KiB f32 per lane per block
 
 
-def _kernel(key_hi_ref, key_lo_ref, w_ref, f_ref, t_ref,
-            out_hi_ref, out_lo_ref, out_w_ref, live_ref, tot_ref):
-    f = f_ref[0]
-    thresh = t_ref[0]
-    k_hi = key_hi_ref[...]
-    k_lo = key_lo_ref[...]
-    w = w_ref[...]
-    live = (k_hi != 0) | (k_lo != 0)
-    w2 = w * f
-    keep = live & (w2 >= thresh)
-    w_out = jnp.where(keep, w2, 0.0)
-    out_hi_ref[...] = jnp.where(keep, k_hi, jnp.uint32(0))
-    out_lo_ref[...] = jnp.where(keep, k_lo, jnp.uint32(0))
-    out_w_ref[...] = w_out
-    live_ref[0] = jnp.sum(keep.astype(jnp.float32))
-    tot_ref[0] = jnp.sum(w_out)
+def _resolve_interpret(interpret) -> bool:
+    """None -> interpret everywhere except a real TPU backend."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def _make_kernel(n_w: int, n_aux: int):
+    """Build the fused sweep kernel for n_w weight lanes + n_aux aux lanes.
+
+    Ref order: inputs  [f, thresh, key_hi, key_lo, w_0..w_{n_w-1}, a_0..]
+               outputs [key_hi', key_lo', w'_0.., a'_0.., live, tot]
+    """
+    def kernel(*refs):
+        f = refs[0][0]
+        thresh = refs[1][0]
+        k_hi = refs[2][...]
+        k_lo = refs[3][...]
+        w_ins = [refs[4 + i][...] for i in range(n_w)]
+        a_ins = [refs[4 + n_w + i][...] for i in range(n_aux)]
+        o = 4 + n_w + n_aux
+        out_hi_ref, out_lo_ref = refs[o], refs[o + 1]
+        w_out_refs = [refs[o + 2 + i] for i in range(n_w)]
+        a_out_refs = [refs[o + 2 + n_w + i] for i in range(n_aux)]
+        live_ref = refs[o + 2 + n_w + n_aux]
+        tot_ref = refs[o + 3 + n_w + n_aux]
+
+        live = (k_hi != 0) | (k_lo != 0)
+        w0 = w_ins[0] * f
+        keep = live & (w0 >= thresh)
+        w0 = jnp.where(keep, w0, 0.0)
+        out_hi_ref[...] = jnp.where(keep, k_hi, jnp.uint32(0))
+        out_lo_ref[...] = jnp.where(keep, k_lo, jnp.uint32(0))
+        w_out_refs[0][...] = w0
+        for i in range(1, n_w):
+            w_out_refs[i][...] = jnp.where(keep, w_ins[i] * f, 0.0)
+        for a_in, a_out in zip(a_ins, a_out_refs):
+            a_out[...] = jnp.where(keep, a_in, jnp.zeros_like(a_in))
+        live_ref[0] = jnp.sum(keep.astype(jnp.float32))
+        tot_ref[0] = jnp.sum(w0)
+
+    return kernel
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def decay_prune(key_hi: jax.Array, key_lo: jax.Array, weight: jax.Array,
-                decay_factor: jax.Array, threshold: jax.Array,
-                *, interpret: bool = True
-                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Fused sweep over (key_hi, key_lo, weight) table arrays.
+def decay_prune_multi(
+    key_hi: jax.Array,
+    key_lo: jax.Array,
+    weight_lanes: Tuple[jax.Array, ...],
+    aux_lanes: Tuple[jax.Array, ...],
+    decay_factor: jax.Array,
+    threshold: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, ...],
+           Tuple[jax.Array, ...], jax.Array, jax.Array]:
+    """Full-lane fused sweep over a store's dense arrays.
 
-    Returns (key_hi', key_lo', weight', live_count i32[], total_weight f32[]).
-    Auxiliary lanes of the store are cleared by the caller using the
-    returned keys (a pruned slot has key (0,0)).
+    ``weight_lanes[0]`` is the primary lane: it decides pruning against
+    ``threshold`` after decay. Further weight lanes decay by the same factor;
+    ``aux_lanes`` are cleared on pruned slots and passed through otherwise.
+    All lanes must be 1-D of the same capacity (a multiple of 1024).
+
+    Returns (key_hi', key_lo', weight_lanes', aux_lanes',
+             live_count i32[], total_weight f32[]).
     """
+    assert len(weight_lanes) >= 1
     C = key_hi.shape[0]
     assert C % TILE == 0, "table capacity must be a multiple of 1024"
     rows = C // TILE
@@ -65,31 +113,54 @@ def decay_prune(key_hi: jax.Array, key_lo: jax.Array, weight: jax.Array,
     grid = rows // blk
 
     shape3 = (rows, SUBLANE, LANE)
-    kh = key_hi.reshape(shape3)
-    kl = key_lo.reshape(shape3)
-    w = weight.reshape(shape3)
+    view = lambda a: a.reshape(shape3)
     f = jnp.asarray(decay_factor, jnp.float32).reshape(1)
     t = jnp.asarray(threshold, jnp.float32).reshape(1)
 
+    n_w, n_aux = len(weight_lanes), len(aux_lanes)
     spec = pl.BlockSpec((blk, SUBLANE, LANE), lambda i: (i, 0, 0))
-    sspec = pl.BlockSpec((1,), lambda i: (0,), memory_space=pl.ANY) \
-        if False else pl.BlockSpec((1,), lambda i: (0,))
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
     stat_spec = pl.BlockSpec((1,), lambda i: (i,))
 
-    out_hi, out_lo, out_w, live_p, tot_p = pl.pallas_call(
-        _kernel,
+    lane_out = lambda a: jax.ShapeDtypeStruct(shape3, a.dtype)
+    outs = pl.pallas_call(
+        _make_kernel(n_w, n_aux),
         grid=(grid,),
-        in_specs=[spec, spec, spec, sspec, sspec],
-        out_specs=[spec, spec, spec, stat_spec, stat_spec],
+        in_specs=[sspec, sspec, spec, spec] + [spec] * (n_w + n_aux),
+        out_specs=[spec, spec] + [spec] * (n_w + n_aux) + [stat_spec, stat_spec],
         out_shape=[
             jax.ShapeDtypeStruct(shape3, jnp.uint32),
             jax.ShapeDtypeStruct(shape3, jnp.uint32),
-            jax.ShapeDtypeStruct(shape3, jnp.float32),
+            *[lane_out(w) for w in weight_lanes],
+            *[lane_out(a) for a in aux_lanes],
             jax.ShapeDtypeStruct((grid,), jnp.float32),
             jax.ShapeDtypeStruct((grid,), jnp.float32),
         ],
-        interpret=interpret,
-    )(kh, kl, w, f, t)
+        interpret=_resolve_interpret(interpret),
+    )(f, t, view(key_hi), view(key_lo),
+      *[view(w) for w in weight_lanes], *[view(a) for a in aux_lanes])
 
-    return (out_hi.reshape(C), out_lo.reshape(C), out_w.reshape(C),
+    out_hi, out_lo = outs[0], outs[1]
+    w_out = tuple(o.reshape(C) for o in outs[2:2 + n_w])
+    a_out = tuple(o.reshape(C) for o in outs[2 + n_w:2 + n_w + n_aux])
+    live_p, tot_p = outs[-2], outs[-1]
+    return (out_hi.reshape(C), out_lo.reshape(C), w_out, a_out,
             jnp.sum(live_p).astype(jnp.int32), jnp.sum(tot_p))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decay_prune(key_hi: jax.Array, key_lo: jax.Array, weight: jax.Array,
+                decay_factor: jax.Array, threshold: jax.Array,
+                *, interpret: bool | None = None
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-lane sweep over (key_hi, key_lo, weight) table arrays.
+
+    Returns (key_hi', key_lo', weight', live_count i32[], total_weight f32[]).
+    Auxiliary lanes of the store are cleared by the caller using the
+    returned keys (a pruned slot has key (0,0)) — or fused directly via
+    :func:`decay_prune_multi`.
+    """
+    kh, kl, (w,), _, live, tot = decay_prune_multi(
+        key_hi, key_lo, (weight,), (), decay_factor, threshold,
+        interpret=interpret)
+    return kh, kl, w, live, tot

@@ -24,26 +24,42 @@ _TILE = _dp.TILE
 
 
 def decay_prune_table(table, dticks, *, cfg, weight_lanes: Tuple[str, ...]):
-    """Fused decay/prune sweep over a HashTable (engine decay cycle)."""
-    from ..core.stores import HashTable
+    """Fused decay/prune sweep over a HashTable (engine decay cycle).
+
+    Every 1-D lane rides the single Pallas read+write pass: weight lanes are
+    decayed+pruned, aux lanes cleared on pruned slots, all in-kernel. Only
+    ragged capacities or multi-dim lanes fall back to jnp masking.
+    """
     primary = weight_lanes[0]
     f = cfg.factor(dticks)
+    lanes = dict(table.lanes)
+    aux_1d = [n for n, lane in table.lanes.items()
+              if n not in weight_lanes and lane.ndim == 1]
     if table.capacity % _TILE:
         # ragged capacity: fall back to the jnp path semantics
         kh, kl, w, keep, live, tot = ref.decay_prune_ref(
             table.key_hi, table.key_lo, table.lanes[primary], f,
             cfg.prune_threshold)
+        lanes[primary] = w
+        for name in weight_lanes[1:]:
+            lanes[name] = jnp.where(keep, lanes[name] * f, 0.0)
+        for name in aux_1d:
+            lanes[name] = jnp.where(keep, lanes[name],
+                                    jnp.zeros_like(lanes[name]))
     else:
-        kh, kl, w, live, tot = _dp.decay_prune(
-            table.key_hi, table.key_lo, table.lanes[primary], f,
-            jnp.float32(cfg.prune_threshold), interpret=_INTERPRET)
+        kh, kl, w_out, a_out, live, tot = _dp.decay_prune_multi(
+            table.key_hi, table.key_lo,
+            tuple(table.lanes[n] for n in weight_lanes),
+            tuple(table.lanes[n] for n in aux_1d),
+            f, jnp.float32(cfg.prune_threshold), interpret=_INTERPRET)
         keep = (kh != 0) | (kl != 0)
-    lanes = dict(table.lanes)
-    lanes[primary] = w
-    for name in weight_lanes[1:]:
-        lanes[name] = jnp.where(keep, lanes[name] * f, 0.0)
+        for name, w in zip(weight_lanes, w_out):
+            lanes[name] = w
+        for name, a in zip(aux_1d, a_out):
+            lanes[name] = a
+    # multi-dim lanes (none in the engine stores today) still need a mask
     for name, lane in lanes.items():
-        if name not in weight_lanes:
+        if name not in weight_lanes and lane.ndim > 1:
             kb = keep.reshape(keep.shape + (1,) * (lane.ndim - 1))
             lanes[name] = jnp.where(kb, lane, jnp.zeros_like(lane))
     return table._replace(key_hi=kh, key_lo=kl, lanes=lanes), live, tot

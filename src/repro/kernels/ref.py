@@ -27,6 +27,22 @@ def decay_prune_ref(key_hi, key_lo, weight, decay_factor, threshold):
             jnp.sum(keep.astype(jnp.int32)), jnp.sum(w))
 
 
+def decay_prune_multi_ref(key_hi, key_lo, weight_lanes, aux_lanes,
+                          decay_factor, threshold):
+    """Multi-lane oracle: decay every weight lane, prune on the primary,
+    clear aux lanes on pruned slots. Mirrors ``decay_prune_multi``.
+
+    Returns (key_hi', key_lo', weight_lanes', aux_lanes', live_count, total_w).
+    """
+    live = (key_hi != 0) | (key_lo != 0)
+    w0 = weight_lanes[0] * decay_factor
+    keep = live & (w0 >= threshold)
+    w_out = tuple(jnp.where(keep, w * decay_factor, 0.0) for w in weight_lanes)
+    a_out = tuple(jnp.where(keep, a, jnp.zeros_like(a)) for a in aux_lanes)
+    return (jnp.where(keep, key_hi, 0), jnp.where(keep, key_lo, 0),
+            w_out, a_out, jnp.sum(keep.astype(jnp.int32)), jnp.sum(w_out[0]))
+
+
 # ---------------------------------------------------------------------------
 # assoc_score: fused association scoring (ranking-cycle hot loop).
 # ---------------------------------------------------------------------------

@@ -122,7 +122,12 @@ def _compile_for(cfg, spec, cell, mesh, accum=None):
 
 
 def _costs(compiled, chips):
-    ca = compiled.cost_analysis() or {}
+    ca = compiled.cost_analysis()
+    # jaxlib has returned both a dict and a per-device *list* of dicts from
+    # cost_analysis() across versions; normalize to one flat dict.
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    ca = ca or {}
     txt = compiled.as_text()
     coll, by_kind, counts = rl.collective_bytes(txt)
     # fusion-aware HBM traffic (see roofline.fusion_aware_bytes): XLA's raw
