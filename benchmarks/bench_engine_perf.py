@@ -9,14 +9,20 @@ collector (see EXPERIMENTS.md §Perf for the narrative):
   P4 fused find-or-claim    (before/after: two-pass probe + [C] scatter-max
                              claim race vs single-sweep probe with
                              batch-local claim resolution + early exit)
-  P5 ranking compaction     (before/after: full-capacity 3-key lexsort vs
-                             compacting gated rows first)
+  P5 ranking selection      (before/after: lexsort reference pipeline —
+                             with/without argsort compaction — vs the
+                             segmented top-k fast path)
+  P6 decay policy           (before/after: eager full sweeps every
+                             decay_every ticks vs lazy read-time decay with
+                             prune-only sweeps at prune_every)
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -77,6 +83,7 @@ def run() -> List[Row]:
 
     rows += _bench_insert_paths()
     rows += _bench_ranking_compaction()
+    rows += _bench_decay_policies()
     return rows
 
 
@@ -121,7 +128,8 @@ def _bench_insert_paths() -> List[Row]:
 
 
 def _bench_ranking_compaction() -> List[Row]:
-    """P5: ranking cycle with/without pre-sort compaction of gated rows."""
+    """P5: the lexsort reference with/without argsort compaction, and the
+    segmented top-k fast path on the same stores."""
     from repro.core import ranking
     from repro.core.ranking import RankConfig
 
@@ -140,11 +148,70 @@ def _bench_ranking_compaction() -> List[Row]:
                                jnp.asarray(ev.src, jnp.int32),
                                jnp.asarray(ev.valid), cfg=ecfg)
     rows: List[Row] = []
-    t_full = time_fn(lambda: ranking.ranking_cycle(
+    t_full = time_fn(lambda: ranking.ranking_cycle_lexsort(
         state.cooc, state.qstore, RankConfig(compact_frac=1.0)))
-    t_cmp = time_fn(lambda: ranking.ranking_cycle(
+    t_cmp = time_fn(lambda: ranking.ranking_cycle_lexsort(
         state.cooc, state.qstore, RankConfig(compact_frac=0.5)))
+    t_seg = time_fn(lambda: ranking.ranking_cycle(
+        state.cooc, state.qstore, RankConfig()))
     rows.append(("perf_P5_rank_full", t_full, "full-capacity lexsort"))
     rows.append(("perf_P5_rank_compact", t_cmp,
                  f"compact_frac=0.5; x{t_full/max(t_cmp,1e-9):.2f} vs full"))
+    rows.append(("perf_P5_rank_segtopk", t_seg,
+                 f"segmented top-k; x{t_cmp/max(t_seg,1e-9):.2f} vs "
+                 f"compacted lexsort"))
+    return rows
+
+
+def _bench_decay_policies() -> List[Row]:
+    """P6: steady-state per-tick engine cost, eager decay sweeps every
+    ``decay_every`` ticks vs the lazy policy (read-time decay; prune-only
+    sweep at ``prune_every``). 48 measured ticks cover 8 eager sweeps and
+    exactly one lazy prune, so both amortization schedules are priced in."""
+    from repro.core.engine import SearchAssistanceEngine
+
+    base = EngineConfig(query_capacity=1 << 15, cooc_capacity=1 << 17,
+                        session_capacity=1 << 14, rank_every=0,
+                        decay_every=6, prune_every=48)
+    lazy = dataclasses.replace(
+        base, decay=dataclasses.replace(base.decay, policy="lazy"))
+    stream = SyntheticStream(StreamConfig(vocab_size=4096,
+                                          queries_per_tick=4096,
+                                          tweets_per_tick=0), seed=3)
+    ticks = [stream.gen_tick(t)[0] for t in range(52)]
+    rows: List[Row] = []
+    times = {}
+    for name, cfg in (("eager", base), ("lazy", lazy)):
+        eng = SearchAssistanceEngine(cfg)
+        for t in range(4):                      # warm tables + compile
+            eng.step(ticks[t], None)
+        jax.block_until_ready(eng.state.qstore.key_hi)
+        t0 = time.perf_counter()
+        for t in range(4, 52):
+            eng.step(ticks[t], None)
+        jax.block_until_ready(eng.state.qstore.key_hi)
+        times[name] = (time.perf_counter() - t0) / 48 * 1e6
+        sweeps = (f"{eng.n_decay_cycles} full sweeps" if name == "eager"
+                  else f"{eng.n_prune_cycles} prune-only sweeps")
+        rows.append((f"perf_P6_decay_{name}", times[name],
+                     f"per-tick steady state, {sweeps} in 48 ticks"
+                     + (f"; x{times['eager']/max(times[name],1e-9):.2f}"
+                        f" vs eager" if name == "lazy" else "")))
+
+    # maintenance path in isolation: the amortized per-tick cost of the
+    # cycles themselves (full sweep every decay_every vs prune-only sweep
+    # every prune_every) — the component the lazy policy removes.
+    from repro.core.engine import decay_cycle, prune_cycle
+    eng = SearchAssistanceEngine(base)
+    for t in range(4):
+        eng.step(ticks[t], None)
+    st = eng.state
+    t_sweep = time_fn(lambda s: decay_cycle(s, jnp.int32(6), cfg=base)[0], st)
+    t_prune = time_fn(lambda s: prune_cycle(s, cfg=lazy)[0], st)
+    rows.append(("perf_P6_maint_eager", t_sweep / base.decay_every,
+                 f"full sweep {t_sweep:,.0f}us / {base.decay_every} ticks"))
+    rows.append(("perf_P6_maint_lazy", t_prune / base.prune_every,
+                 f"prune-only {t_prune:,.0f}us / {base.prune_every} ticks; "
+                 f"x{(t_sweep / base.decay_every) / max(t_prune / base.prune_every, 1e-9):.2f}"
+                 f" vs eager"))
     return rows

@@ -1,5 +1,6 @@
-"""C4 (§4.3 "Ranking cycles"): full ranking-cycle cost vs store size, and
-the fused association-scoring kernel vs the jnp path."""
+"""C4 (§4.3 "Ranking cycles"): full ranking-cycle cost vs store size, the
+sort-free segmented top-k vs the lexsort reference pipeline, and the fused
+score/gate kernel vs the jnp path."""
 from __future__ import annotations
 
 import dataclasses
@@ -14,7 +15,7 @@ from repro.core.ranking import RankConfig
 from .common import Row, time_fn
 
 
-def _filled_stores(n_pairs: int, n_queries: int, seed=0):
+def _filled_stores(n_pairs: int, n_queries: int, seed=0, cooc_capacity=None):
     rng = np.random.default_rng(seed)
     q = stores.make_table(max(n_queries * 4, 1024), {
         "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32})
@@ -27,7 +28,7 @@ def _filled_stores(n_pairs: int, n_queries: int, seed=0):
          "last_tick": jnp.zeros(n_queries, jnp.int32)},
         jnp.ones(n_queries, bool),
         modes=(("weight", "add"), ("count", "add"), ("last_tick", "set")))
-    c = stores.make_table(max(n_pairs * 4, 1024), {
+    c = stores.make_table(cooc_capacity or max(n_pairs * 4, 1024), {
         "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
         "src_hi": jnp.uint32, "src_lo": jnp.uint32,
         "dst_hi": jnp.uint32, "dst_lo": jnp.uint32})
@@ -62,5 +63,29 @@ def run() -> List[Row]:
         cfg_k = dataclasses.replace(cfg, use_kernel=True)
         t_k = time_fn(lambda: ranking.ranking_cycle(c, q, cfg_k))
         rows.append((f"ranking_cycle_{n_pairs}p_pallas", t_k,
-                     f"fused scoring; x{t / max(t_k, 1e-9):.2f}"))
+                     f"fused score/gate; x{t / max(t_k, 1e-9):.2f}"))
+    rows += _bench_lexsort_vs_segmented()
+    return rows
+
+
+def _bench_lexsort_vs_segmented() -> List[Row]:
+    """The sort-free claim: segmented top-k vs the lexsort reference at
+    fixed cooccurrence capacities with <= 25% live rows (the paper's
+    steady-state load under the <= 50% prune policy)."""
+    rows: List[Row] = []
+    for logc in (16, 18, 20):
+        cap = 1 << logc
+        q, c = _filled_stores(cap // 4, 4096, seed=logc, cooc_capacity=cap)
+        cfg = RankConfig()
+        iters = 3 if logc >= 20 else 5
+        t_lex = time_fn(lambda: ranking.ranking_cycle_lexsort(c, q, cfg),
+                        iters=iters)
+        t_seg = time_fn(lambda: ranking.ranking_cycle(c, q, cfg),
+                        iters=iters)
+        live_pct = 100.0 * int(c.live_count()) / cap
+        rows.append((f"rank_lexsort_c2e{logc}", t_lex,
+                     f"argsort+3-key lexsort, {live_pct:.0f}% live"))
+        rows.append((f"rank_segtopk_c2e{logc}", t_seg,
+                     f"segmented top-k (flat-key grouping); "
+                     f"x{t_lex / max(t_seg, 1e-9):.2f} vs lexsort"))
     return rows

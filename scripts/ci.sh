@@ -16,4 +16,6 @@ python -m pytest -x -q
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
     mkdir -p results
     python -m benchmarks.run --json results/BENCH_engine.json engine_perf
+    # ranking smoke: lexsort-vs-segmented rows (the PR 2 fast path) must run
+    python -m benchmarks.run --json results/BENCH_ranking.json ranking
 fi

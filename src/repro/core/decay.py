@@ -15,6 +15,24 @@ Two execution policies:
     ``w * factor(now - last_tick)`` at read time; the sweep then only needs
     to run for pruning at a much lower cadence. Turns O(capacity) work per
     cycle into O(touched entries).
+
+Lazy cadence model (wired end to end since the segmented-top-k PR):
+
+  * **reads** (``stores.lookup``, ``ranking_cycle``) pass ``decay_cfg`` +
+    ``now`` and see the decayed view per row — no table writes;
+  * **writes** (``stores.insert_accumulate``) rebase the stored weight to
+    its decayed value before adding, then re-anchor ``last_tick = now``;
+  * the engine's per-``decay_every`` full sweep disappears; only
+    :func:`prune_sweep` runs, at the much longer ``EngineConfig.prune_every``
+    cadence, to reclaim slots whose decayed weight fell under the threshold
+    (and to stop f32 underflow by materializing the decay it observed).
+
+Exactness: exponential decay is memoryless (``f(a)*f(b) == f(a+b)``), so
+read-time views, write-time rebases and prune-time materialization compose
+to exactly the eager sweep sequence. ``linear``/``step`` decay are *not*
+memoryless — under the lazy policy they decay by total elapsed ticks since
+the last touch, which is a (documented) semantic difference from repeated
+eager sweeps.
 """
 from __future__ import annotations
 
@@ -63,6 +81,42 @@ class DecayConfig:
         raise ValueError(self.kind)
 
 
+def _apply_decay_prune(table: HashTable, f, cfg: DecayConfig,
+                       weight_lanes: Tuple[str, ...],
+                       tick_override=None, tick_lane: str = "last_tick"):
+    """Shared sweep epilogue: decay the weight lanes by ``f`` (scalar or
+    per-row), prune below ``cfg.prune_threshold`` on the primary lane,
+    clear every other lane and the keys on pruned slots; optionally
+    re-anchor ``tick_lane`` to ``tick_override`` on survivors (the lazy
+    prune sweep). Returns (table, live_count, total_weight-after)."""
+    lanes = dict(table.lanes)
+    primary = weight_lanes[0]
+    decayed = {name: lanes[name] * f for name in weight_lanes}
+    live = table.live_mask
+    keep = live & (decayed[primary] >= cfg.prune_threshold)
+    for name in weight_lanes:
+        lanes[name] = jnp.where(keep, decayed[name], 0.0)
+    if tick_override is not None:
+        lanes[tick_lane] = jnp.where(
+            keep,
+            jnp.broadcast_to(
+                jnp.asarray(tick_override, lanes[tick_lane].dtype),
+                keep.shape),
+            jnp.zeros_like(lanes[tick_lane]))
+    for name, lane in lanes.items():
+        if name in weight_lanes or (tick_override is not None
+                                    and name == tick_lane):
+            continue
+        keep_b = keep.reshape(keep.shape + (1,) * (lane.ndim - 1))
+        lanes[name] = jnp.where(keep_b, lane, jnp.zeros_like(lane))
+    new = table._replace(
+        key_hi=jnp.where(keep, table.key_hi, 0),
+        key_lo=jnp.where(keep, table.key_lo, 0),
+        lanes=lanes,
+    )
+    return new, jnp.sum(keep.astype(jnp.int32)), jnp.sum(lanes[primary])
+
+
 @partial(jax.jit, static_argnames=("weight_lanes", "cfg", "use_kernel"))
 def sweep_decay_prune(
     table: HashTable,
@@ -82,28 +136,37 @@ def sweep_decay_prune(
         from ..kernels import ops as kops
         return kops.decay_prune_table(table, dticks, cfg=cfg, weight_lanes=weight_lanes)
 
-    f = cfg.factor(dticks)
-    lanes = dict(table.lanes)
-    primary = weight_lanes[0]
-    decayed = {name: lanes[name] * f for name in weight_lanes}
-    live = table.live_mask
-    keep = live & (decayed[primary] >= cfg.prune_threshold)
-    for name in weight_lanes:
-        lanes[name] = jnp.where(keep, decayed[name], 0.0)
-    # clear every other lane on pruned slots so reuse starts clean
-    for name, lane in lanes.items():
-        if name not in weight_lanes:
-            keep_b = keep.reshape(keep.shape + (1,) * (lane.ndim - 1))
-            lanes[name] = jnp.where(keep_b, lane, jnp.zeros_like(lane))
-    new = table._replace(
-        key_hi=jnp.where(keep, table.key_hi, 0),
-        key_lo=jnp.where(keep, table.key_lo, 0),
-        lanes=lanes,
-    )
-    return new, jnp.sum(keep.astype(jnp.int32)), jnp.sum(lanes[primary])
+    return _apply_decay_prune(table, cfg.factor(dticks), cfg, weight_lanes)
 
 
 def lazy_decayed(cfg: DecayConfig, weight: jax.Array, last_tick: jax.Array,
                  now: jax.Array) -> jax.Array:
     """Read-time decayed view of a weight lane under the lazy policy."""
     return weight * cfg.factor(jnp.maximum(now - last_tick, 0))
+
+
+@partial(jax.jit, static_argnames=("weight_lanes", "tick_lane", "cfg"))
+def prune_sweep(
+    table: HashTable,
+    now: jax.Array,
+    *,
+    cfg: DecayConfig,
+    weight_lanes: Tuple[str, ...] = ("weight",),
+    tick_lane: str = "last_tick",
+) -> Tuple[HashTable, jax.Array, jax.Array]:
+    """Prune-only sweep for the **lazy** policy (runs at ``prune_every``).
+
+    Materializes each entry's read-time decayed view (per-row factor from
+    ``tick_lane``), prunes entries whose decayed primary weight fell under
+    ``cfg.prune_threshold``, and re-anchors ``tick_lane = now`` on the
+    survivors so future reads decay from the materialized base. For
+    exponential decay this is exactly equivalent to never sweeping at all
+    (modulo f32 rounding); it exists to reclaim slots and bound the
+    store's memory footprint (§4.4), not to apply decay.
+
+    Returns (table, live_count, total_weight-after), mirroring
+    :func:`sweep_decay_prune` so engines can swap cadences transparently.
+    """
+    f = cfg.factor(jnp.maximum(now - table.lanes[tick_lane], 0))
+    return _apply_decay_prune(table, f, cfg, weight_lanes,
+                              tick_override=now, tick_lane=tick_lane)

@@ -19,6 +19,11 @@ as standalone queries) are processed like the query path, with the tweet
 itself as the session (all ordered pairs among its query-like n-grams).
 
 Decay/prune cycles and ranking cycles run at configurable tick cadences.
+
+Under the lazy decay policy (``DecayConfig.policy == "lazy"``) the
+per-``decay_every`` full sweep disappears entirely: reads (ranking, lookup)
+apply the decayed view per row, writes rebase-then-add, and only a
+prune-only sweep runs, every ``prune_every`` ticks (see ``decay.py``).
 """
 from __future__ import annotations
 
@@ -31,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ranking, stores
-from .decay import DecayConfig, sweep_decay_prune
+from .decay import DecayConfig, prune_sweep, sweep_decay_prune
 from .hashing import combine_fp_device, split_fp
 from .ranking import RankConfig, SuggestionTable
 from .stores import HashTable, SessionTable
@@ -53,10 +58,18 @@ class EngineConfig:
     # cycles (in ticks; a tick is one micro-batch ~ cfg.tick_seconds of data)
     decay_every: int = 6
     rank_every: int = 30               # ~5 sim-minutes at 10 s ticks (§2.3)
+    # lazy decay policy only: full sweeps leave the per-``decay_every`` path
+    # entirely (reads decay themselves); a prune-only sweep reclaims slots
+    # at this much longer cadence.
+    prune_every: int = 48
     session_ttl: int = 360
     decay: DecayConfig = DecayConfig()
     rank: RankConfig = RankConfig()
     use_kernel: bool = False           # fused Pallas decay/prune + scoring
+
+    @property
+    def lazy_decay(self) -> bool:
+        return self.decay.policy == "lazy"
 
 
 class EngineState(NamedTuple):
@@ -102,11 +115,13 @@ def ingest_queries(
     w = sw[jnp.clip(src, 0, len(cfg.source_weights) - 1)]
     B = q_hi.shape[0]
     tick_vec = jnp.full((B,), state.tick, jnp.int32)
+    # lazy policy: rebase-on-write so refreshing last_tick never un-decays
+    dkw = dict(decay_cfg=cfg.decay, now=state.tick) if cfg.lazy_decay else {}
 
     qstore = stores.insert_accumulate(
         state.qstore, q_hi, q_lo,
         {"weight": w, "count": jnp.ones((B,), jnp.float32), "last_tick": tick_vec},
-        valid, modes=_Q_MODES, probe_rounds=cfg.probe_rounds)
+        valid, modes=_Q_MODES, probe_rounds=cfg.probe_rounds, **dkw)
 
     sessions, pairs = stores.update_sessions(
         state.sessions, sess_hi, sess_lo, q_hi, q_lo, src, state.tick, valid,
@@ -125,7 +140,7 @@ def ingest_queries(
          "last_tick": jnp.full((P,), state.tick, jnp.int32),
          "src_hi": pairs.src_hi, "src_lo": pairs.src_lo,
          "dst_hi": pairs.dst_hi, "dst_lo": pairs.dst_lo},
-        pairs.valid, modes=_C_MODES, probe_rounds=cfg.probe_rounds)
+        pairs.valid, modes=_C_MODES, probe_rounds=cfg.probe_rounds, **dkw)
 
     return EngineState(qstore, cooc, sessions, state.tick)
 
@@ -147,10 +162,11 @@ def ingest_tweets(
     B = T * G
     tick_vec = jnp.full((B,), state.tick, jnp.int32)
     w = jnp.full((B,), cfg.tweet_weight, jnp.float32)
+    dkw = dict(decay_cfg=cfg.decay, now=state.tick) if cfg.lazy_decay else {}
     qstore = stores.insert_accumulate(
         state.qstore, flat_hi, flat_lo,
         {"weight": w, "count": jnp.ones((B,), jnp.float32), "last_tick": tick_vec},
-        querylike, modes=_Q_MODES, probe_rounds=cfg.probe_rounds)
+        querylike, modes=_Q_MODES, probe_rounds=cfg.probe_rounds, **dkw)
 
     # all ordered pairs among query-like grams of the same tweet
     ql = querylike.reshape(T, G)
@@ -169,7 +185,7 @@ def ingest_tweets(
          "count": jnp.ones((P,), jnp.float32),
          "last_tick": jnp.full((P,), state.tick, jnp.int32),
          "src_hi": src_hi, "src_lo": src_lo, "dst_hi": dst_hi, "dst_lo": dst_lo},
-        ok, modes=_C_MODES, probe_rounds=cfg.probe_rounds)
+        ok, modes=_C_MODES, probe_rounds=cfg.probe_rounds, **dkw)
     return EngineState(qstore, cooc, state.sessions, state.tick)
 
 
@@ -177,13 +193,39 @@ def ingest_tweets(
 def decay_cycle(state: EngineState, dticks: jax.Array, *, cfg: EngineConfig
                 ) -> Tuple[EngineState, Dict[str, jax.Array]]:
     """Decay/prune cycle (§4.3): decay all weights, prune small entries and
-    stale sessions."""
+    stale sessions. Runs every ``decay_every`` ticks under the (paper
+    faithful) eager "sweep" policy only."""
     qstore, q_live, q_tot = sweep_decay_prune(
         state.qstore, dticks, cfg=cfg.decay, weight_lanes=("weight",),
         use_kernel=cfg.use_kernel)
     cooc, c_live, c_tot = sweep_decay_prune(
         state.cooc, dticks, cfg=cfg.decay, weight_lanes=("weight",),
         use_kernel=cfg.use_kernel)
+    sessions = stores.evict_sessions(state.sessions, state.tick, cfg.session_ttl)
+    stats = {"q_live": q_live, "q_total_w": q_tot,
+             "c_live": c_live, "c_total_w": c_tot}
+    return EngineState(qstore, cooc, sessions, state.tick), stats
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def evict_sessions_cycle(state: EngineState, *, cfg: EngineConfig
+                         ) -> EngineState:
+    """Session-TTL eviction alone — an O(session_capacity) mask, no weight
+    sweep. Under the lazy policy this keeps eviction on the ``decay_every``
+    cadence (TTL semantics are unrelated to weight-decay laziness) while
+    the store sweeps move to ``prune_every``."""
+    sessions = stores.evict_sessions(state.sessions, state.tick,
+                                     cfg.session_ttl)
+    return state._replace(sessions=sessions)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def prune_cycle(state: EngineState, *, cfg: EngineConfig
+                ) -> Tuple[EngineState, Dict[str, jax.Array]]:
+    """Lazy policy's slow-cadence maintenance: prune-only sweep (decay is
+    amortized into reads/writes), every ``prune_every`` ticks."""
+    qstore, q_live, q_tot = prune_sweep(state.qstore, state.tick, cfg=cfg.decay)
+    cooc, c_live, c_tot = prune_sweep(state.cooc, state.tick, cfg=cfg.decay)
     sessions = stores.evict_sessions(state.sessions, state.tick, cfg.session_ttl)
     stats = {"q_live": q_live, "q_total_w": q_tot,
              "c_live": c_live, "c_total_w": c_tot}
@@ -215,6 +257,7 @@ class SearchAssistanceEngine:
         self.last_rank_tick: int = -1
         self.n_rank_cycles = 0
         self.n_decay_cycles = 0
+        self.n_prune_cycles = 0
 
     # ---- ingestion ----
     def step(self, query_events=None, tweets=None) -> Optional[Dict]:
@@ -235,7 +278,20 @@ class SearchAssistanceEngine:
                 jnp.asarray(tweets.valid), cfg=self.cfg)
 
         tick = int(self.state.tick)
-        if self.cfg.decay_every > 0 and tick > 0 and tick % self.cfg.decay_every == 0:
+        if self.cfg.lazy_decay:
+            # decay is amortized into reads/writes; only the prune-only
+            # sweep remains, at the (much longer) prune cadence. Session
+            # TTL eviction stays on the decay_every cadence — it is a
+            # cheap mask, and its semantics are time-based, not decay.
+            pruning = (self.cfg.prune_every > 0 and tick > 0
+                       and tick % self.cfg.prune_every == 0)
+            if (not pruning and self.cfg.decay_every > 0 and tick > 0
+                    and tick % self.cfg.decay_every == 0):
+                self.state = evict_sessions_cycle(self.state, cfg=self.cfg)
+            if pruning:   # prune_cycle evicts sessions itself
+                self.state, stats = prune_cycle(self.state, cfg=self.cfg)
+                self.n_prune_cycles += 1
+        elif self.cfg.decay_every > 0 and tick > 0 and tick % self.cfg.decay_every == 0:
             self.state, stats = decay_cycle(
                 self.state, jnp.int32(self.cfg.decay_every), cfg=self.cfg)
             self.n_decay_cycles += 1
@@ -245,8 +301,10 @@ class SearchAssistanceEngine:
         return out
 
     def run_rank_cycle(self) -> Dict:
+        dkw = (dict(decay_cfg=self.cfg.decay, now=self.state.tick)
+               if self.cfg.lazy_decay else {})
         table = ranking.ranking_cycle(self.state.cooc, self.state.qstore,
-                                      self.cfg.rank)
+                                      self.cfg.rank, **dkw)
         self.suggestions = ranking.suggestions_to_host(table)
         self.last_rank_tick = int(self.state.tick)
         self.n_rank_cycles += 1

@@ -11,6 +11,39 @@ Score lanes (all named in §2.4):
   * pointwise mutual information     log( w_ab * T / (W_a * W_b) )
   * log-likelihood ratio             Dunning's G² over the 2x2 count table
   * chi-squared                      χ² over the same 2x2 table
+
+Selection — two implementations of the same per-source top-k contract:
+
+  * :func:`ranking_cycle` (default) — **segmented top-k**. Every
+    gate-passing pair is bucketed by its *source query's qstore slot* (the
+    open-addressing placement is a hash-derived bucket that is collision-free
+    across live keys, so no two sources share a bucket). Gate-passing rows
+    are stream-compacted (prefix-sum scatter, no sort) into a selection
+    arena, grouped by ONE flat u32 key — bucket id in the high bits, coarse
+    inverted score bits below, so each bucket's best rows lead its run —
+    and laid out as a dense ``[buckets, L]`` grid by pure gathers. The
+    per-bucket partial selection (top-k / iterated masked argmax along the
+    L axis, Pallas kernel variant in ``kernels/topk_select.py``) then runs
+    fully vectorized. The capacity-sized f32 ``argsort`` and the 3-key
+    lexsort of the old pipeline are both gone: the only remaining sort is
+    the single flat u32 grouping key over the compacted arena, so cycle
+    cost scales with gate-passing rows, not table capacity.
+  * :func:`ranking_cycle_lexsort` — the pre-segmented reference pipeline
+    (compact-by-argsort + 3-key lexsort + run extraction), kept verbatim for
+    parity tests and before/after benchmark rows.
+
+Exactness: selection within a bucket uses exact scores (``lax.top_k`` over
+the gathered grid). Rows beyond the per-bucket arena ``L`` are cut by
+*coarse-score* order, so a true top-k member is lost only when >= L rows of
+one bucket land in the same coarse-score quantum — and every cut row is
+counted in ``SuggestionTable.n_overflow``, never silent.
+
+Cadence model under the **lazy** decay policy (``DecayConfig.policy ==
+"lazy"``): the ranking cycle is a *read*, so it applies the read-time decayed
+view per row — ``w * factor(now - last_tick)`` for pair weights, source and
+destination marginals, and the query-store totals — instead of relying on a
+periodic full decay sweep. The engine then only runs a prune-only sweep at
+the much longer ``EngineConfig.prune_every`` cadence (see ``decay.py``).
 """
 from __future__ import annotations
 
@@ -23,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import stores
+from .decay import lazy_decayed
 from .stores import HashTable
 
 
@@ -38,14 +72,25 @@ class RankConfig:
     min_pair_weight: float = 0.25
     min_src_weight: float = 0.5
     min_pair_count: float = 1.0
-    use_kernel: bool = False   # route scoring through the Pallas kernel
-    # compact gated rows before the (expensive) 3-key lexsort: the sort then
-    # runs over compact_frac * capacity rows instead of the full table. The
-    # prune policy keeps stores <= 50% live (§4.4), so 0.5 is lossless in
-    # steady state; if more rows pass the gates, the globally lowest-scoring
-    # pairs are cut and counted in SuggestionTable.n_overflow. >= 1.0
-    # disables compaction entirely.
+    use_kernel: bool = False   # route score/gate + selection through Pallas
+    # lexsort path only: compact gated rows by argsort before the 3-key
+    # lexsort; cuts the globally lowest-scoring pairs on overflow (counted).
+    # >= 1.0 disables compaction entirely.
     compact_frac: float = 0.5
+    # segmented path: the selection arena holds seg_arena_frac * capacity
+    # gate-passing rows (sort-free prefix-sum compaction). Unlike the
+    # lexsort path's score-ordered cut, arena overflow is cut by table
+    # position — so the default matches the <=50% prune policy (§4.4):
+    # positional cuts can only happen when more than half the table passes
+    # the gates, the same regime where the old default overflowed. Always
+    # counted in n_overflow. >= 1.0 disables compaction.
+    seg_arena_frac: float = 0.5
+    # segmented path: per-bucket arena width L — a source's gate-passing
+    # rows beyond its L coarse-score-best are cut and counted.
+    bucket_rows: int = 64
+    # segmented path: max sources emitted per cycle (grid height cap;
+    # sources beyond it are cut and counted).
+    max_sources: int = 1 << 14
 
 
 def _xlogx(x):
@@ -107,14 +152,13 @@ class SuggestionTable(NamedTuple):
     n_overflow: jax.Array  # i32[] — gate-passing rows beyond the compaction cap
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def ranking_cycle(
-    cooc: HashTable,
-    qstore: HashTable,
-    cfg: RankConfig,
-) -> SuggestionTable:
-    """One full ranking cycle over the cooccurrence store."""
-    C = cooc.capacity
+def _score_and_gate(cooc: HashTable, qstore: HashTable, cfg: RankConfig,
+                    decay_cfg, now):
+    """Shared ranking prologue: marginals lookup, association scoring and
+    evidence gating — with the read-time decayed view under the lazy policy.
+
+    Returns (score [-inf where gated], ok mask, src qstore slot, key lanes).
+    """
     live = cooc.live_mask
     src_hi = cooc.lanes["src_hi"]
     src_lo = cooc.lanes["src_lo"]
@@ -123,27 +167,168 @@ def ranking_cycle(
     w_ab = cooc.lanes["weight"]
     c_ab = cooc.lanes["count"]
 
-    src_vals, src_found, _ = stores.lookup(qstore, src_hi, src_lo)
-    dst_vals, dst_found, _ = stores.lookup(qstore, dst_hi, dst_lo)
-    total_w = jnp.sum(qstore.lanes["weight"])
+    dkw = dict(decay_cfg=decay_cfg, now=now) if decay_cfg is not None else {}
+    src_vals, src_found, src_slot = stores.lookup(qstore, src_hi, src_lo, **dkw)
+    dst_vals, dst_found, _ = stores.lookup(qstore, dst_hi, dst_lo, **dkw)
+    if decay_cfg is not None:
+        total_w = jnp.sum(lazy_decayed(decay_cfg, qstore.lanes["weight"],
+                                       qstore.lanes["last_tick"], now))
+    else:
+        total_w = jnp.sum(qstore.lanes["weight"])
     total_c = jnp.sum(qstore.lanes["count"])
 
+    base_ok = live & src_found & dst_found
     if cfg.use_kernel:
         from ..kernels import ops as kops
-        score = kops.assoc_score(
+        score = kops.score_gate(
             w_ab, c_ab, src_vals["weight"], dst_vals["weight"],
-            src_vals["count"], dst_vals["count"], total_w, total_c,
-            coefs=(cfg.coef_condprob, cfg.coef_pmi, cfg.coef_llr, cfg.coef_chi2))
+            src_vals["count"], dst_vals["count"], base_ok, total_w, total_c,
+            coefs=(cfg.coef_condprob, cfg.coef_pmi, cfg.coef_llr, cfg.coef_chi2),
+            min_pair_weight=cfg.min_pair_weight,
+            min_src_weight=cfg.min_src_weight,
+            min_pair_count=cfg.min_pair_count,
+            decay_cfg=decay_cfg, last_tick=cooc.lanes["last_tick"], now=now)
+        ok = score > -jnp.inf
     else:
-        lanes = assoc_scores_jnp(w_ab, c_ab, src_vals["weight"], dst_vals["weight"],
-                                 src_vals["count"], dst_vals["count"], total_w, total_c)
+        if decay_cfg is not None:
+            w_ab = lazy_decayed(decay_cfg, w_ab, cooc.lanes["last_tick"], now)
+        lanes = assoc_scores_jnp(w_ab, c_ab, src_vals["weight"],
+                                 dst_vals["weight"], src_vals["count"],
+                                 dst_vals["count"], total_w, total_c)
         score = combine_scores(cfg, *lanes)
+        ok = (base_ok
+              & (w_ab >= cfg.min_pair_weight)
+              & (c_ab >= cfg.min_pair_count)
+              & (src_vals["weight"] >= cfg.min_src_weight))
+        score = jnp.where(ok, score, -jnp.inf)
+    return score, ok, src_slot, (src_hi, src_lo, dst_hi, dst_lo)
 
-    ok = (live & src_found & dst_found
-          & (w_ab >= cfg.min_pair_weight)
-          & (c_ab >= cfg.min_pair_count)
-          & (src_vals["weight"] >= cfg.min_src_weight))
-    score = jnp.where(ok, score, -jnp.inf)
+
+def _sortable_f32(x: jax.Array) -> jax.Array:
+    """Monotonic f32 -> u32 bit transform (IEEE total order)."""
+    sb = jax.lax.bitcast_convert_type(x, jnp.int32)
+    return jnp.where(sb >= 0, sb.astype(jnp.uint32) + jnp.uint32(0x80000000),
+                     (~sb).astype(jnp.uint32))
+
+
+@partial(jax.jit, static_argnames=("cfg", "decay_cfg"))
+def ranking_cycle(
+    cooc: HashTable,
+    qstore: HashTable,
+    cfg: RankConfig,
+    *,
+    decay_cfg=None,
+    now=None,
+) -> SuggestionTable:
+    """One full ranking cycle — segmented top-k (the fast path).
+
+    Pipeline (see module docstring): score+gate -> prefix-sum compaction of
+    gate-passing row ids into an arena of M rows -> ONE flat u32 grouping
+    sort (bucket id | coarse inverted score) -> dense [R, L] bucket grid by
+    gathers -> exact per-bucket top-k. Output rows are indexed by bucket
+    run, so the table has ``min(Q, M, cfg.max_sources)`` rows; empty rows
+    keep the (0, 0) src key and are skipped by :func:`suggestions_to_host`.
+    Pass ``decay_cfg``/``now`` under the lazy decay policy to rank against
+    the read-time decayed view.
+    """
+    C = cooc.capacity
+    Q = qstore.capacity
+    K = cfg.top_k
+    L = max(cfg.bucket_rows, K)
+    score, ok, src_slot, keys = _score_and_gate(cooc, qstore, cfg,
+                                                decay_cfg, now)
+    src_hi, src_lo, dst_hi, dst_lo = keys
+
+    # ---- sort-free stream compaction of gate-passing ROW IDS (one scatter;
+    # payloads stay in place and are gathered on demand). Overflow beyond
+    # the arena is cut by table position — counted, never silent. ----
+    if cfg.seg_arena_frac >= 1.0:
+        M = C
+        idx = jnp.arange(C, dtype=jnp.int32)
+        arena_spill = jnp.zeros((), jnp.int32)
+        s = jnp.where(ok, score, -jnp.inf)
+        seg = jnp.where(ok, src_slot, Q)
+    else:
+        M = min(C, max(K, int(C * cfg.seg_arena_frac)))
+        pos = jnp.cumsum(ok.astype(jnp.int32)) - 1
+        tgt = jnp.where(ok & (pos < M), pos, M)
+        idx = jnp.full((M,), C, jnp.int32).at[tgt].set(
+            jnp.arange(C, dtype=jnp.int32), mode="drop")
+        arena_spill = jnp.maximum(jnp.sum(ok.astype(jnp.int32)) - M, 0)
+        filled = idx < C
+        safe_idx = jnp.clip(idx, 0, C - 1)
+        s = jnp.where(filled, score[safe_idx], -jnp.inf)
+        seg = jnp.where(filled, src_slot[safe_idx], Q)
+
+    # ---- ONE flat u32 grouping key: bucket id (with one extra bit for the
+    # empty/gated sentinel Q) above coarse inverted score bits, so each
+    # bucket's rows are contiguous, best-first by coarse score. ----
+    bbits = Q.bit_length()            # log2(Q) + 1: room for the sentinel
+    qbits = 32 - bbits
+    key = (seg.astype(jnp.uint32) << jnp.uint32(qbits)) \
+        | ((~_sortable_f32(s)) >> jnp.uint32(bbits))
+    skey, sidx = jax.lax.sort((key, idx), num_keys=1, is_stable=True)
+    sseg = skey >> jnp.uint32(qbits)
+    valid_row = sseg < Q
+    is_new = jnp.concatenate(
+        [jnp.ones((1,), bool), sseg[1:] != sseg[:-1]]) & valid_row
+    run_id = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    ar = jnp.arange(M, dtype=jnp.int32)
+    pos_in_run = ar - jax.lax.cummax(jnp.where(is_new, ar, 0))
+
+    # ---- dense [R, L] bucket grid, built by gathers only. run_id is
+    # non-decreasing, so run starts come from a vectorized binary search. --
+    R = min(Q, M, max(cfg.max_sources, 1))
+    run_start = jnp.searchsorted(run_id, jnp.arange(R + 1, dtype=jnp.int32)
+                                 ).astype(jnp.int32)
+    cell = run_start[:R, None] + jnp.arange(L, dtype=jnp.int32)[None, :]
+    in_run = cell < run_start[1:, None]   # next run's start bounds this run
+    cell_c = jnp.clip(cell, 0, M - 1)
+    # sorted position -> original table row (sidx carries the permuted row
+    # ids; C is the empty-arena-slot sentinel) -> exact score.
+    cell_orig = sidx[cell_c]
+    grid = jnp.where(in_run & (cell_orig < C),
+                     score[jnp.clip(cell_orig, 0, C - 1)], -jnp.inf)
+    if cfg.use_kernel:
+        from ..kernels import ops as kops
+        vals, args = kops.bucket_topk(grid, K)
+    else:
+        vals, args = jax.lax.top_k(grid, K)
+    good = vals > -jnp.inf
+
+    win_sorted = jnp.clip(run_start[:R, None] + args, 0, M - 1)
+    win_orig = jnp.clip(sidx[win_sorted], 0, C - 1)
+    out_dst_hi = jnp.where(good, dst_hi[win_orig], jnp.uint32(0))
+    out_dst_lo = jnp.where(good, dst_lo[win_orig], jnp.uint32(0))
+    out_score = jnp.where(good, vals, 0.0)
+    has_run = run_start[:R] < M
+    head_orig = jnp.clip(sidx[jnp.clip(run_start[:R], 0, M - 1)], 0, C - 1)
+    out_src_hi = jnp.where(has_run, src_hi[head_orig], jnp.uint32(0))
+    out_src_lo = jnp.where(has_run, src_lo[head_orig], jnp.uint32(0))
+
+    n_rows = jnp.sum(has_run.astype(jnp.int32))   # rows actually emitted
+    select_spill = jnp.sum(
+        (valid_row & ((pos_in_run >= L) | (run_id >= R))).astype(jnp.int32))
+    return SuggestionTable(out_src_hi, out_src_lo, out_dst_hi, out_dst_lo,
+                           out_score, n_rows, arena_spill + select_spill)
+
+
+@partial(jax.jit, static_argnames=("cfg", "decay_cfg"))
+def ranking_cycle_lexsort(
+    cooc: HashTable,
+    qstore: HashTable,
+    cfg: RankConfig,
+    *,
+    decay_cfg=None,
+    now=None,
+) -> SuggestionTable:
+    """Pre-segmented reference ranking cycle (compact-by-argsort + 3-key
+    lexsort). Kept for parity tests and before/after benchmark rows,
+    mirroring the ``insert_accumulate_twopass`` pattern; not used by the
+    engine."""
+    C = cooc.capacity
+    score, ok, _, keys = _score_and_gate(cooc, qstore, cfg, decay_cfg, now)
+    src_hi, src_lo, dst_hi, dst_lo = keys
 
     # ---- compact gate-passing rows so the 3-key lexsort runs over M << C
     # rows. Evidence gates + the <=50% prune policy keep the survivor count
@@ -206,11 +391,17 @@ def ranking_cycle(
 
 
 def suggestions_to_host(table: SuggestionTable) -> dict:
-    """Export a SuggestionTable to host numpy dict keyed by src fp64."""
+    """Export a SuggestionTable to host numpy dict keyed by src fp64.
+
+    Skips empty rows (src key (0, 0)) AND the all-ones filler src key that
+    the lexsort path assigns to compaction-overflow filler rows — explicitly,
+    rather than relying on every filler entry carrying score 0.
+    """
     from .hashing import join_fp
     src_hi = np.asarray(table.src_hi)
     src_lo = np.asarray(table.src_lo)
-    mask = (src_hi != 0) | (src_lo != 0)
+    mask = ((src_hi != 0) | (src_lo != 0)) \
+        & ~((src_hi == 0xFFFFFFFF) & (src_lo == 0xFFFFFFFF))
     out = {}
     dst_fp = join_fp(np.asarray(table.dst_hi), np.asarray(table.dst_lo))
     score = np.asarray(table.score)

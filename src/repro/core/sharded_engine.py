@@ -38,7 +38,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import ranking, stores
-from .decay import sweep_decay_prune
+from .decay import prune_sweep, sweep_decay_prune
 from .engine import EngineConfig, _Q_MODES, _C_MODES
 from .hashing import combine_fp_device, probe_hash, split_fp
 from .ranking import RankConfig, SuggestionTable
@@ -150,13 +150,16 @@ def make_sharded_step(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
         tick_vec = jnp.full((B,), state.tick, jnp.int32)
         sw = jnp.asarray(base.source_weights, jnp.float32)
         w = sw[jnp.clip(src, 0, len(base.source_weights) - 1)]
+        # lazy decay policy: same rebase-on-write as the unsharded engine
+        dkw = (dict(decay_cfg=base.decay, now=state.tick)
+               if base.lazy_decay else {})
 
         # --- replicated query store: every shard applies the full batch ---
         qstore = stores.insert_accumulate(
             state.qstore, q_hi, q_lo,
             {"weight": w, "count": jnp.ones((B,), jnp.float32),
              "last_tick": tick_vec},
-            valid, modes=_Q_MODES, probe_rounds=base.probe_rounds)
+            valid, modes=_Q_MODES, probe_rounds=base.probe_rounds, **dkw)
 
         # --- sessions: filter to my shard (owner = hash(sess) % n) ---
         sess_owner = (probe_hash(s_hi, s_lo) % jnp.uint32(n)).astype(jnp.int32)
@@ -194,7 +197,7 @@ def make_sharded_step(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
              "last_tick": jnp.full((Pn,), state.tick, jnp.int32),
              "src_hi": r_pl["src_hi"], "src_lo": r_pl["src_lo"],
              "dst_hi": r_pl["dst_hi"], "dst_lo": r_pl["dst_lo"]},
-            r_valid, modes=_C_MODES, probe_rounds=base.probe_rounds)
+            r_valid, modes=_C_MODES, probe_rounds=base.probe_rounds, **dkw)
 
         return ShardedState(qstore, cooc, sessions, state.tick,
                             state.n_route_drop + drop[None])
@@ -213,11 +216,20 @@ def make_sharded_decay(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
 
     def body(state: ShardedState, dticks):
         # same fast paths as the unsharded engine: cfg.use_kernel routes the
-        # per-shard sweep through the fused multi-lane Pallas kernel.
-        qstore, _, _ = sweep_decay_prune(state.qstore, dticks, cfg=base.decay,
-                                         use_kernel=base.use_kernel)
-        cooc, _, _ = sweep_decay_prune(state.cooc, dticks, cfg=base.decay,
-                                       use_kernel=base.use_kernel)
+        # per-shard sweep through the fused multi-lane Pallas kernel; under
+        # the lazy policy this degrades to the prune-only sweep (run it at
+        # the prune_every cadence, not decay_every).
+        if base.lazy_decay:
+            qstore, _, _ = prune_sweep(state.qstore, state.tick,
+                                       cfg=base.decay)
+            cooc, _, _ = prune_sweep(state.cooc, state.tick, cfg=base.decay)
+        else:
+            qstore, _, _ = sweep_decay_prune(
+                state.qstore, dticks, cfg=base.decay,
+                use_kernel=base.use_kernel)
+            cooc, _, _ = sweep_decay_prune(
+                state.cooc, dticks, cfg=base.decay,
+                use_kernel=base.use_kernel)
         sessions = stores.evict_sessions(state.sessions, state.tick,
                                          base.session_ttl)
         return ShardedState(qstore, cooc, sessions, state.tick + 0,
@@ -232,7 +244,10 @@ def make_sharded_decay(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
 
 def make_sharded_rank(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
     def body(state: ShardedState):
-        t = ranking.ranking_cycle(state.cooc, state.qstore, cfg.base.rank)
+        dkw = (dict(decay_cfg=cfg.base.decay, now=state.tick)
+               if cfg.base.lazy_decay else {})
+        t = ranking.ranking_cycle(state.cooc, state.qstore, cfg.base.rank,
+                                  **dkw)
         # scalars -> (1,) per shard
         return t._replace(n_rows=t.n_rows[None], n_overflow=t.n_overflow[None])
 
@@ -273,7 +288,10 @@ def merge_sharded_suggestions(table: SuggestionTable, top_k: int
     dst_lo = np.asarray(table.dst_lo).reshape(-1, K)
     score = np.asarray(table.score).reshape(-1, K)
     merged: Dict[int, Dict[int, float]] = {}
-    mask = (src_hi != 0) | (src_lo != 0)
+    # skip empty rows AND the lexsort path's all-ones filler src key
+    # explicitly (same guard as suggestions_to_host)
+    mask = ((src_hi != 0) | (src_lo != 0)) \
+        & ~((src_hi == 0xFFFFFFFF) & (src_lo == 0xFFFFFFFF))
     src_fp = join_fp(src_hi, src_lo)
     dst_fp = join_fp(dst_hi, dst_lo)
     for i in np.nonzero(mask)[0]:

@@ -15,9 +15,12 @@ tables laid out as dense JAX arrays** updated by *micro-batches* of events:
   * finds and claims share ONE fused sweep (``_find_or_claim``): the find
     rounds also record each row's empty-slot candidates as a bitmask, then
     claim rounds resolve conflicts *batch-locally* — contenders for a slot
-    are sorted by slot id and the first of each run wins, O(B log B) per
-    round instead of a capacity-sized scatter-max race (unique keys after
-    dedup => at most one winner per key, losers fall to their next bit),
+    are ordered by a single packed (slot, batch idx) key and the first of
+    each slot-run wins, O(B log B) per round instead of a capacity-sized
+    scatter-max race (unique keys after dedup => at most one winner per
+    key, losers fall to their next bit); packing the batch index into the
+    sort key makes the winner *deterministic-by-arrival* rather than a
+    property of the sort's stability,
   * keys that fail to place after K rounds are *dropped and counted* — the
     paper's engine likewise rate-limits/prunes to bound memory (§4.4).
 
@@ -89,6 +92,38 @@ def _probe_slot_dyn(h0: jax.Array, r: jax.Array, capacity: int) -> jax.Array:
     return (h0 + ((r * (r + 1)) >> 1)) & jnp.uint32(capacity - 1)
 
 
+def _claim_winners(slot: jax.Array, contend: jax.Array, B: int, C: int
+                   ) -> jax.Array:
+    """First-of-each-slot-run claim resolution, deterministic-by-arrival.
+
+    Packs ``(slot, batch idx)`` into ONE uint32 sort key whenever
+    ``log2(C) + ceil_log2(B) <= 31`` (the common case), so the winner of
+    every contended slot is the lowest batch index *by key value* — no
+    reliance on sort stability. When the packed key would overflow 31 bits,
+    falls back to a two-key lexsort over (idx, slot); the (slot, idx) pairs
+    are unique, so any correct sort yields the same winners.
+
+    Returns a [B] bool mask of winning rows (at most one per slot).
+    """
+    idx = jnp.arange(B, dtype=jnp.uint32)
+    bits_b = max((B - 1).bit_length(), 1)
+    if (C - 1).bit_length() + bits_b <= 31:
+        sent = jnp.uint32(0xFFFFFFFF)
+        packed = jnp.where(
+            contend, (slot << jnp.uint32(bits_b)) | idx, sent)
+        order = jnp.argsort(packed)
+        po = packed[order]
+        pslot = po >> jnp.uint32(bits_b)
+        first = jnp.concatenate(
+            [jnp.ones((1,), bool), pslot[1:] != pslot[:-1]])
+        return jnp.zeros((B,), bool).at[order].set(first & (po != sent))
+    skey = jnp.where(contend, slot.astype(jnp.int32), C)
+    order = jnp.lexsort((idx.astype(jnp.int32), skey))
+    so = skey[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), so[1:] != so[:-1]])
+    return jnp.zeros((B,), bool).at[order].set(first & (so < C))
+
+
 def _find_or_claim(
     key_hi_tab: jax.Array,
     key_lo_tab: jax.Array,
@@ -104,8 +139,9 @@ def _find_or_claim(
     presence of pruned slots) **and** a bitmask of empty slots along the
     sequence. A second `while_loop` then resolves insertions *batch-locally*:
     each round, every unplaced row proposes its next empty-at-snapshot slot,
-    contenders for the same slot are resolved by a stable sort over the
-    proposals (first of each slot-run wins — O(B log B), never O(capacity)),
+    contenders for the same slot are resolved by sorting a single packed
+    (slot, batch idx) key (first of each slot-run wins — O(B log B), never
+    O(capacity), and deterministic-by-arrival; see ``_claim_winners``),
     and losers fall through to their next candidate bit. Both loops early-exit
     the moment every row is served, so the accumulate-heavy steady state costs
     a couple of probe rounds instead of 2 x ``probe_rounds`` full passes.
@@ -159,13 +195,9 @@ def _find_or_claim(
         slot = _probe_slot_dyn(h0, jnp.where(want, r, 0), C)
         still_empty = (kh[slot] == 0) & (kl[slot] == 0)
         contend = want & still_empty
-        # batch-local conflict resolution: stable sort by proposed slot,
-        # first row of each slot-run wins.
-        skey = jnp.where(contend, slot.astype(jnp.int32), C)
-        order = jnp.argsort(skey)
-        so = skey[order]
-        first = jnp.concatenate([jnp.ones((1,), bool), so[1:] != so[:-1]])
-        won = jnp.zeros((B,), bool).at[order].set(first & (so < C))
+        # batch-local conflict resolution: one packed (slot, idx) sort key,
+        # first row of each slot-run wins (deterministic-by-arrival).
+        won = _claim_winners(slot, contend, B, C)
         drop_slot = jnp.where(won, slot.astype(jnp.int32), C)
         kh = kh.at[drop_slot].set(s_hi, mode="drop")
         kl = kl.at[drop_slot].set(s_lo, mode="drop")
@@ -227,16 +259,24 @@ def _dedup_and_aggregate(key_hi, key_lo, updates, valid, mode_map):
     return s_hi, s_lo, agg, rep_mask
 
 
-def _apply_lane_updates(lanes, agg, mode_map, ok, write_slot, C):
+def _apply_lane_updates(lanes, agg, mode_map, ok, write_slot, C, rebase=None):
     """Shared insert epilogue: apply aggregated updates at write_slot
-    (unique keys => unique slots; OOB sentinel C drops masked rows)."""
+    (unique keys => unique slots; OOB sentinel C drops masked rows).
+
+    ``rebase`` (lazy decay policy): name -> decayed-current-value [B] for
+    ADD lanes that must be *rebased* on write — the slot's stored value is
+    replaced by ``decayed_current + update`` instead of accumulated raw, so
+    read-time decay from the refreshed ``last_tick`` stays exact.
+    """
     safe = jnp.where(ok, write_slot, 0)
     drop = jnp.where(ok, write_slot, C)
     new_lanes = dict(lanes)
     for name, upd in agg.items():
         lane = new_lanes[name]
         mode = mode_map[name]
-        if mode == ADD:
+        if rebase is not None and name in rebase:
+            new_lanes[name] = lane.at[drop].set(rebase[name] + upd, mode="drop")
+        elif mode == ADD:
             zeros = jnp.zeros_like(upd)
             add = jnp.where(_bmask(ok, upd), upd, zeros)
             new_lanes[name] = lane.at[safe].add(add)
@@ -248,7 +288,8 @@ def _apply_lane_updates(lanes, agg, mode_map, ok, write_slot, C):
     return new_lanes
 
 
-@partial(jax.jit, static_argnames=("modes", "probe_rounds"))
+@partial(jax.jit, static_argnames=("modes", "probe_rounds", "decay_cfg",
+                                   "decay_lanes", "tick_lane"))
 def insert_accumulate(
     table: HashTable,
     key_hi: jax.Array,
@@ -258,10 +299,21 @@ def insert_accumulate(
     *,
     modes: Tuple[Tuple[str, str], ...],
     probe_rounds: int = 16,
+    decay_cfg=None,
+    decay_lanes: Tuple[str, ...] = ("weight",),
+    tick_lane: str = "last_tick",
+    now=None,
 ) -> HashTable:
     """Batched insert-or-accumulate of (key -> lane updates).
 
     modes: tuple of (lane_name, ADD|SET|MAX) — a hashable static spec.
+
+    Lazy decay policy (``decay_cfg`` + ``now``): ``decay_lanes`` are rebased
+    on write — the stored value is decayed from the slot's ``tick_lane`` to
+    ``now`` *before* the update is added, and the caller's SET of the tick
+    lane to ``now`` re-anchors subsequent read-time decay. Without the
+    rebase, refreshing ``last_tick`` would silently un-decay the elapsed
+    gap. Exact for exponential decay (the factor is memoryless).
     """
     C = table.capacity
     mode_map = dict(modes)
@@ -271,8 +323,16 @@ def insert_accumulate(
     key_hi_tab, key_lo_tab, write_slot, placed, dropped = _find_or_claim(
         table.key_hi, table.key_lo, s_hi, s_lo, alive, probe_rounds)
 
+    ok = placed & alive
+    rebase = None
+    if decay_cfg is not None:
+        safe = jnp.where(ok, write_slot, 0)
+        f = decay_cfg.factor(jnp.maximum(now - table.lanes[tick_lane][safe], 0))
+        rebase = {name: table.lanes[name][safe] * f for name in decay_lanes
+                  if mode_map.get(name) == ADD}
+
     new_lanes = _apply_lane_updates(table.lanes, agg, mode_map,
-                                    placed & alive, write_slot, C)
+                                    ok, write_slot, C, rebase=rebase)
     return HashTable(key_hi_tab, key_lo_tab, new_lanes, table.n_dropped + dropped)
 
 
@@ -338,15 +398,25 @@ def _bmask(mask: jax.Array, ref: jax.Array) -> jax.Array:
     return mask.reshape(mask.shape + (1,) * (ref.ndim - 1))
 
 
-@partial(jax.jit, static_argnames=("probe_rounds",))
+@partial(jax.jit, static_argnames=("probe_rounds", "decay_cfg", "decay_lanes",
+                                   "tick_lane"))
 def lookup(
     table: HashTable,
     key_hi: jax.Array,
     key_lo: jax.Array,
     *,
     probe_rounds: int = 16,
+    decay_cfg=None,
+    decay_lanes: Tuple[str, ...] = ("weight",),
+    tick_lane: str = "last_tick",
+    now=None,
 ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
-    """Batched lookup. Returns (lanes_at_key, found_mask, slot)."""
+    """Batched lookup. Returns (lanes_at_key, found_mask, slot).
+
+    Lazy decay policy (``decay_cfg`` + ``now``): the returned ``decay_lanes``
+    are the *read-time decayed view* ``w * factor(now - last_tick)`` — the
+    store itself is untouched; maintenance is amortized into reads.
+    """
     C = table.capacity
     key_hi = jnp.asarray(key_hi, jnp.uint32)
     key_lo = jnp.asarray(key_lo, jnp.uint32)
@@ -371,9 +441,14 @@ def lookup(
         cond, body, (jnp.uint32(0), jnp.full((B,), -1, jnp.int32)))
     found = found_slot >= 0
     safe = jnp.where(found, found_slot, 0)
+    f = None
+    if decay_cfg is not None:
+        f = decay_cfg.factor(jnp.maximum(now - table.lanes[tick_lane][safe], 0))
     out = {}
     for name, lane in table.lanes.items():
         v = lane[safe]
+        if f is not None and name in decay_lanes:
+            v = v * f
         out[name] = jnp.where(_bmask(found, v), v, jnp.zeros_like(v))
     return out, found, found_slot
 

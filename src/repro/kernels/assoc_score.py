@@ -20,50 +20,57 @@ from jax.experimental import pallas as pl
 from .decay_prune import LANE, SUBLANE, TILE, ROWS_PER_BLOCK
 
 
-def _make_kernel(coefs: Tuple[float, float, float, float]):
-    c0, c1, c2, c3 = [float(c) for c in coefs]  # python literals, not arrays
+def _xlogx(x):
+    return jnp.where(x > 0, x * jnp.log(jnp.maximum(x, 1e-30)), 0.0)
 
-    def _xlogx(x):
-        return jnp.where(x > 0, x * jnp.log(jnp.maximum(x, 1e-30)), 0.0)
+
+def score_body(w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c,
+               coefs: Tuple[float, float, float, float]):
+    """The fused association-scoring body, on block *values* (not refs).
+
+    Shared by this kernel and the segmented-top-k select kernel
+    (``topk_select.py``), which folds gating and lazy decay around it.
+    ``coefs`` must be python floats so they stay compile-time literals.
+    """
+    c0, c1, c2, c3 = coefs
+    eps = jnp.float32(1e-9)
+    w_a = jnp.maximum(w_a, 0.0)
+    w_b = jnp.maximum(w_b, 0.0)
+    condprob = jnp.where(w_a > 0, w_ab / jnp.maximum(w_a, eps), 0.0)
+    pmi = jnp.where(
+        (w_ab > 0) & (w_a > 0) & (w_b > 0),
+        jnp.log(jnp.maximum(w_ab * jnp.maximum(total_w, eps), eps)
+                / jnp.maximum(w_a * w_b, eps)),
+        0.0)
+    k11 = c_ab
+    k12 = jnp.maximum(c_a - c_ab, 0.0)
+    k21 = jnp.maximum(c_b - c_ab, 0.0)
+    k22 = jnp.maximum(total_c - c_a - c_b + c_ab, 0.0)
+    n = jnp.maximum(k11 + k12 + k21 + k22, eps)
+    r1, r2 = k11 + k12, k21 + k22
+    q1, q2 = k11 + k21, k12 + k22
+    llr = 2.0 * (_xlogx(k11) + _xlogx(k12) + _xlogx(k21) + _xlogx(k22)
+                 - _xlogx(r1) - _xlogx(r2) - _xlogx(q1) - _xlogx(q2)
+                 + _xlogx(n))
+    llr = jnp.maximum(llr, 0.0)
+    chi2 = n * (k11 * k22 - k12 * k21) ** 2 / jnp.maximum(r1 * r2 * q1 * q2, eps)
+    valid = c_ab > 0
+    condprob = jnp.where(valid, condprob, 0.0)
+    pmi = jnp.where(valid, pmi, 0.0)
+    llr = jnp.where(valid, llr, 0.0)
+    chi2 = jnp.where(valid, chi2, 0.0)
+    return (c0 * condprob + c1 * jax.nn.sigmoid(pmi)
+            + c2 * jnp.log1p(llr) + c3 * jnp.log1p(chi2))
+
+
+def _make_kernel(coefs: Tuple[float, float, float, float]):
+    coefs = tuple(float(c) for c in coefs)  # python literals, not arrays
 
     def kernel(w_ab_ref, c_ab_ref, w_a_ref, w_b_ref, c_a_ref, c_b_ref,
                tw_ref, tc_ref, out_ref):
-        eps = jnp.float32(1e-9)
-        w_ab = w_ab_ref[...]
-        c_ab = c_ab_ref[...]
-        w_a = jnp.maximum(w_a_ref[...], 0.0)
-        w_b = jnp.maximum(w_b_ref[...], 0.0)
-        c_a = c_a_ref[...]
-        c_b = c_b_ref[...]
-        total_w = tw_ref[0]
-        total_c = tc_ref[0]
-
-        condprob = jnp.where(w_a > 0, w_ab / jnp.maximum(w_a, eps), 0.0)
-        pmi = jnp.where(
-            (w_ab > 0) & (w_a > 0) & (w_b > 0),
-            jnp.log(jnp.maximum(w_ab * jnp.maximum(total_w, eps), eps)
-                    / jnp.maximum(w_a * w_b, eps)),
-            0.0)
-        k11 = c_ab
-        k12 = jnp.maximum(c_a - c_ab, 0.0)
-        k21 = jnp.maximum(c_b - c_ab, 0.0)
-        k22 = jnp.maximum(total_c - c_a - c_b + c_ab, 0.0)
-        n = jnp.maximum(k11 + k12 + k21 + k22, eps)
-        r1, r2 = k11 + k12, k21 + k22
-        q1, q2 = k11 + k21, k12 + k22
-        llr = 2.0 * (_xlogx(k11) + _xlogx(k12) + _xlogx(k21) + _xlogx(k22)
-                     - _xlogx(r1) - _xlogx(r2) - _xlogx(q1) - _xlogx(q2)
-                     + _xlogx(n))
-        llr = jnp.maximum(llr, 0.0)
-        chi2 = n * (k11 * k22 - k12 * k21) ** 2 / jnp.maximum(r1 * r2 * q1 * q2, eps)
-        valid = c_ab > 0
-        condprob = jnp.where(valid, condprob, 0.0)
-        pmi = jnp.where(valid, pmi, 0.0)
-        llr = jnp.where(valid, llr, 0.0)
-        chi2 = jnp.where(valid, chi2, 0.0)
-        score = (c0 * condprob + c1 * jax.nn.sigmoid(pmi)
-                 + c2 * jnp.log1p(llr) + c3 * jnp.log1p(chi2))
-        out_ref[...] = score
+        out_ref[...] = score_body(
+            w_ab_ref[...], c_ab_ref[...], w_a_ref[...], w_b_ref[...],
+            c_a_ref[...], c_b_ref[...], tw_ref[0], tc_ref[0], coefs)
 
     return kernel
 

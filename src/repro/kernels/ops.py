@@ -17,6 +17,7 @@ from . import decay_prune as _dp
 from . import assoc_score as _as
 from . import edit_distance as _ed
 from . import flash_attention as _fa
+from . import topk_select as _tk
 
 _INTERPRET = jax.default_backend() != "tpu"
 # The blocked sweeps require 1024-multiple capacities.
@@ -74,6 +75,48 @@ def assoc_score(w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c, *,
     return _as.assoc_score(w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c,
                            coefs=tuple(float(c) for c in coefs),
                            interpret=_INTERPRET)
+
+
+def score_gate(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, total_w, total_c, *,
+               coefs: Tuple[float, float, float, float],
+               min_pair_weight: float, min_src_weight: float,
+               min_pair_count: float,
+               decay_cfg=None, last_tick=None, now=None):
+    """Fused (lazy decay +) scoring + gating — the elementwise stage of the
+    segmented-top-k ranking cycle.
+
+    One Pallas pass per table tile: optional read-time exponential decay of
+    ``w_ab`` from ``last_tick``, the four association lanes + linear
+    combination, and the evidence gates, emitting one gated score lane
+    (``-inf`` where gated). Non-exp decay kinds and ragged capacities
+    pre-decay / fall back in jnp with identical semantics.
+    """
+    coefs = tuple(float(c) for c in coefs)
+    C = w_ab.shape[0]
+    half_life = None
+    if decay_cfg is not None:
+        if decay_cfg.kind == "exp" and C % _TILE == 0:
+            half_life = float(decay_cfg.half_life_ticks)
+        else:
+            w_ab = w_ab * decay_cfg.factor(jnp.maximum(now - last_tick, 0))
+    if C % _TILE:
+        return ref.score_gate_ref(w_ab, c_ab, w_a, w_b, c_a, c_b, ok,
+                                  total_w, total_c, coefs,
+                                  min_pair_weight, min_src_weight,
+                                  min_pair_count)
+    return _tk.score_gate(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, last_tick,
+                          total_w, total_c, now, coefs=coefs,
+                          min_pair_weight=float(min_pair_weight),
+                          min_src_weight=float(min_src_weight),
+                          min_pair_count=float(min_pair_count),
+                          half_life=half_life, interpret=_INTERPRET)
+
+
+def bucket_topk(grid, k: int):
+    """Per-bucket top-k over the segmented-ranking [R, L] grid (values +
+    in-bucket columns), via K rounds of in-VMEM masked argmax. Same tie
+    rule as ``lax.top_k`` (lowest column wins)."""
+    return _tk.bucket_topk(grid, int(k), interpret=_INTERPRET)
 
 
 def edit_distance(a_chars, a_len, b_chars, b_len, *,

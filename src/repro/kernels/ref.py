@@ -57,6 +57,33 @@ def assoc_score_ref(w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c,
 
 
 # ---------------------------------------------------------------------------
+# score_gate: fused (lazy decay +) scoring + evidence gating — the
+# elementwise stage of the segmented-top-k ranking cycle (topk_select.py).
+# ---------------------------------------------------------------------------
+
+def score_gate_ref(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, total_w, total_c,
+                   coefs: Tuple[float, float, float, float],
+                   min_pair_weight: float, min_src_weight: float,
+                   min_pair_count: float):
+    """Gated combined score; ``-inf`` where any evidence gate fails.
+
+    ``w_ab`` is the *effective* pair weight — under the lazy decay policy
+    the caller decays it to `now` first (the kernel fuses that in-pass).
+    """
+    score = assoc_score_ref(w_ab, c_ab, w_a, w_b, c_a, c_b,
+                            total_w, total_c, coefs)
+    gate = (ok & (w_ab >= min_pair_weight) & (c_ab >= min_pair_count)
+            & (w_a >= min_src_weight))
+    return jnp.where(gate, score, -jnp.inf)
+
+
+def bucket_topk_ref(grid, k: int):
+    """Per-bucket top-k oracle: ``lax.top_k`` row-wise (lowest column wins
+    ties — the same rule as the kernel's min-iota masked argmax)."""
+    return jax.lax.top_k(grid, k)
+
+
+# ---------------------------------------------------------------------------
 # edit_distance: batched weighted Damerau (OSA) distance, first-char penalty.
 # ---------------------------------------------------------------------------
 

@@ -56,6 +56,60 @@ def test_assoc_score_sweep(C, coefs):
 
 
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("C", [1024, 8192])
+@pytest.mark.parametrize("half_life", [None, 6.0])
+def test_score_gate_sweep(C, half_life):
+    """Fused decay+scoring+gating kernel == jnp oracle (incl. -inf gates)."""
+    from repro.kernels.topk_select import score_gate
+    rng = np.random.default_rng(C + int(half_life or 0))
+    mk = lambda s: jnp.asarray((rng.random(C) * s).astype(np.float32))
+    w_ab, c_ab = mk(5), jnp.floor(mk(20))
+    w_a, w_b = mk(50), mk(50)
+    c_a = jnp.maximum(c_ab, jnp.floor(mk(100)))
+    c_b = jnp.maximum(c_ab, jnp.floor(mk(100)))
+    ok = jnp.asarray(rng.random(C) < 0.8)
+    lt = jnp.asarray(rng.integers(0, 20, C).astype(np.int32))
+    now = jnp.float32(25.0)
+    tw, tc = jnp.float32(1e4), jnp.float32(2e4)
+    coefs = (1.0, 0.15, 0.02, 0.0)
+    gates = dict(min_pair_weight=0.25, min_src_weight=0.5, min_pair_count=1.0)
+    got = score_gate(w_ab, c_ab, w_a, w_b, c_a, c_b, ok.astype(jnp.float32),
+                     lt, tw, tc, now, coefs=coefs, half_life=half_life,
+                     interpret=True, **gates)
+    w_eff = w_ab if half_life is None else \
+        w_ab * jnp.exp2(-jnp.maximum(now - lt, 0) / half_life)
+    exp = ref.score_gate_ref(w_eff, c_ab, w_a, w_b, c_a, c_b, ok, tw, tc,
+                             coefs, **gates)
+    got_np, exp_np = np.asarray(got), np.asarray(exp)
+    np.testing.assert_array_equal(np.isneginf(got_np), np.isneginf(exp_np))
+    fin = ~np.isneginf(exp_np)
+    np.testing.assert_allclose(got_np[fin], exp_np[fin], rtol=5e-3, atol=1e-4)
+    assert np.isneginf(got_np).any() and fin.any()
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape,k", [((256, 64), 8), ((1000, 32), 4),
+                                     ((7, 130), 8)])
+def test_bucket_topk_matches_lax_top_k(shape, k):
+    """Iterated masked-argmax kernel == lax.top_k, incl. duplicate values,
+    all--inf rows and rows with fewer than k finite entries."""
+    from repro.kernels.topk_select import bucket_topk
+    R, L = shape
+    rng = np.random.default_rng(R)
+    g = np.floor(rng.random((R, L)).astype(np.float32) * 20)  # many ties
+    g[rng.random((R, L)) < 0.3] = -np.inf
+    g[0, :] = -np.inf
+    g[-1, : max(L - 2, 0)] = -np.inf                           # < k finite
+    grid = jnp.asarray(g)
+    vals, args = bucket_topk(grid, k, interpret=True)
+    ref_vals, ref_args = ref.bucket_topk_ref(grid, k)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(ref_vals))
+    fin = ~np.isneginf(np.asarray(ref_vals))
+    np.testing.assert_array_equal(np.asarray(args)[fin],
+                                  np.asarray(ref_args)[fin])
+
+
+# ---------------------------------------------------------------------------
 def _brute_osa(a, b, fc=1.5):
     la, lb = len(a), len(b)
     D = np.zeros((la + 1, lb + 1))

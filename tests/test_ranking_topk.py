@@ -1,0 +1,411 @@
+"""Segmented top-k ranking + read-time lazy decay: parity and properties.
+
+* ``ranking_cycle`` (sort-free segmented top-k) must emit the same
+  suggestion tables as ``ranking_cycle_lexsort`` (the pre-segmented
+  reference) up to tie order — including duplicate scores, near-empty and
+  near-full stores.
+* The lazy decay policy must be observationally equivalent to eager sweeps
+  for exponential decay: read-time decayed lookups, rebase-on-write
+  accumulation, prune-only sweeps, and the lazy engine end to end.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ranking, stores
+from repro.core.decay import DecayConfig, lazy_decayed, prune_sweep, \
+    sweep_decay_prune
+from repro.core.hashing import combine_fp_np, join_fp, split_fp
+from repro.core.ranking import RankConfig
+from proptest import property_test
+
+Q_MODES = (("weight", "add"), ("count", "add"), ("last_tick", "set"))
+C_MODES = Q_MODES + (("src_hi", "set"), ("src_lo", "set"),
+                     ("dst_hi", "set"), ("dst_lo", "set"))
+
+
+def _mk_stores(rng, n_queries, n_pairs, qcap, ccap, *, discrete=False,
+               tick=0):
+    """Random qstore + cooc pair store. ``discrete=True`` draws pair stats
+    from a tiny value set so exact duplicate scores are common."""
+    q = stores.make_table(qcap, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32})
+    qf = (rng.integers(1, 2**63, n_queries).astype(np.uint64)) | 1
+    qh, ql = split_fp(qf)
+    if discrete:
+        qw = np.full(n_queries, 10.0, np.float32)
+        qc = np.full(n_queries, 20.0, np.float32)
+    else:
+        qw = (rng.random(n_queries) * 50 + 1).astype(np.float32)
+        qc = np.floor(rng.random(n_queries) * 100 + 1).astype(np.float32)
+    q = stores.insert_accumulate(
+        q, jnp.asarray(qh), jnp.asarray(ql),
+        {"weight": jnp.asarray(qw), "count": jnp.asarray(qc),
+         "last_tick": jnp.full(n_queries, tick, jnp.int32)},
+        jnp.ones(n_queries, bool), modes=Q_MODES)
+
+    c = stores.make_table(ccap, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
+        "src_hi": jnp.uint32, "src_lo": jnp.uint32,
+        "dst_hi": jnp.uint32, "dst_lo": jnp.uint32})
+    if n_pairs == 0:
+        return q, c
+    a = qf[rng.integers(0, n_queries, n_pairs)]
+    b = qf[rng.integers(0, n_queries, n_pairs)]
+    ah, al = split_fp(a)
+    bh, bl = split_fp(b)
+    ph, pl = combine_fp_np(ah, al, bh, bl)
+    if discrete:
+        pw = rng.choice([1.0, 2.0], n_pairs).astype(np.float32)
+        pc = rng.choice([2.0, 3.0], n_pairs).astype(np.float32)
+    else:
+        pw = (rng.random(n_pairs) * 5 + 0.5).astype(np.float32)
+        pc = np.floor(rng.random(n_pairs) * 20 + 1).astype(np.float32)
+    c = stores.insert_accumulate(
+        c, jnp.asarray(ph), jnp.asarray(pl),
+        {"weight": jnp.asarray(pw), "count": jnp.asarray(pc),
+         "last_tick": jnp.full(n_pairs, tick, jnp.int32),
+         "src_hi": jnp.asarray(ah), "src_lo": jnp.asarray(al),
+         "dst_hi": jnp.asarray(bh), "dst_lo": jnp.asarray(bl)},
+        jnp.ones(n_pairs, bool), modes=C_MODES)
+    return q, c
+
+
+def _assert_tables_match_up_to_ties(ta, tb):
+    """Same sources, same score multisets per source; destinations must
+    agree except within the score group tied at the top-k boundary (both
+    paths may legitimately keep different members of a cut tie group).
+    Scores compare within f32 tolerance: the two pipelines are jitted
+    separately, so XLA's fusion reorders float ops, and the LLR lane's
+    xlogx cancellation amplifies that to ~1e-3 relative (same bound as the
+    assoc kernel tests)."""
+    sa = ranking.suggestions_to_host(ta)
+    sb = ranking.suggestions_to_host(tb)
+    assert set(sa) == set(sb)
+    assert int(ta.n_rows) == int(tb.n_rows)
+    for f in sa:
+        ra, rb = sa[f], sb[f]
+        assert len(ra) == len(rb)
+        scores_a = sorted((s for _, s in ra), reverse=True)
+        scores_b = sorted((s for _, s in rb), reverse=True)
+        np.testing.assert_allclose(scores_a, scores_b, rtol=2e-3, atol=1e-5)
+        min_s = scores_a[-1]
+        band = min_s + 2e-3 * abs(min_s) + 1e-5
+        da = {d for d, s in ra if s > band}
+        db = {d for d, s in rb if s > band}
+        assert da == db
+
+
+@property_test(n_cases=4)
+def test_segmented_matches_lexsort_randomized(rng):
+    """Random stores at <=50% load: segmented top-k == lexsort reference."""
+    n_queries = int(rng.integers(64, 512))
+    n_pairs = int(rng.integers(256, 2048))
+    q, c = _mk_stores(rng, n_queries, n_pairs, 1 << 11, 1 << 13)
+    cfg = RankConfig(top_k=int(rng.integers(2, 10)))
+    seg = ranking.ranking_cycle(c, q, cfg)
+    lex = ranking.ranking_cycle_lexsort(c, q, cfg)
+    assert int(seg.n_overflow) == 0 and int(lex.n_overflow) == 0
+    _assert_tables_match_up_to_ties(seg, lex)
+
+
+@property_test(n_cases=3)
+def test_segmented_matches_lexsort_duplicate_scores(rng):
+    """Discrete-valued stats => many exact score ties, incl. tie groups cut
+    at the top-k boundary."""
+    q, c = _mk_stores(rng, 48, 1200, 1 << 10, 1 << 13, discrete=True)
+    cfg = RankConfig(top_k=4)
+    seg = ranking.ranking_cycle(c, q, cfg)
+    lex = ranking.ranking_cycle_lexsort(c, q, cfg)
+    _assert_tables_match_up_to_ties(seg, lex)
+
+
+def test_segmented_matches_lexsort_near_empty_and_near_full():
+    rng = np.random.default_rng(9)
+    # near-empty: a single pair, and zero pairs
+    q0, c0 = _mk_stores(rng, 8, 0, 1 << 10, 1 << 12)
+    cfg = RankConfig()
+    t0 = ranking.ranking_cycle(c0, q0, cfg)
+    assert int(t0.n_rows) == 0
+    assert ranking.suggestions_to_host(t0) == {}
+    q1, c1 = _mk_stores(rng, 8, 1, 1 << 10, 1 << 12)
+    _assert_tables_match_up_to_ties(
+        ranking.ranking_cycle(c1, q1, cfg),
+        ranking.ranking_cycle_lexsort(c1, q1, cfg))
+    # near-full: >50% of capacity live, so gate-passing rows exceed any
+    # 0.5-compaction cap — disable compaction on both paths for exactness.
+    qf, cf = _mk_stores(rng, 256, 3400, 1 << 11, 1 << 12)
+    assert int(cf.live_count()) > (1 << 11)
+    cfg_full = RankConfig(compact_frac=1.0, seg_arena_frac=1.0)
+    _assert_tables_match_up_to_ties(
+        ranking.ranking_cycle(cf, qf, cfg_full),
+        ranking.ranking_cycle_lexsort(cf, qf, cfg_full))
+    # with a tiny selection arena the segmented path must COUNT its cut
+    over = ranking.ranking_cycle(cf, qf, RankConfig(seg_arena_frac=0.05))
+    assert int(over.n_overflow) > 0
+    # a max_sources cut must also be counted, and n_rows must report the
+    # rows actually emitted, not every source seen in the arena
+    capped = ranking.ranking_cycle(cf, qf, RankConfig(max_sources=4))
+    assert int(capped.n_rows) == 4
+    assert len(ranking.suggestions_to_host(capped)) == 4
+    assert int(capped.n_overflow) > 0
+
+
+def test_segmented_kernel_path_matches_jnp_path():
+    rng = np.random.default_rng(3)
+    q, c = _mk_stores(rng, 256, 1500, 1 << 11, 1 << 13)
+    cfg = RankConfig()
+    a = ranking.ranking_cycle(c, q, cfg)
+    b = ranking.ranking_cycle(c, q, dataclasses.replace(cfg, use_kernel=True))
+    sa = ranking.suggestions_to_host(a)
+    sb = ranking.suggestions_to_host(b)
+    assert set(sa) == set(sb)
+    for f in sa:
+        np.testing.assert_allclose(sorted(s for _, s in sa[f]),
+                                   sorted(s for _, s in sb[f]),
+                                   rtol=5e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Read-time lazy decay == eager sweeps (exponential kind)
+# ---------------------------------------------------------------------------
+
+@property_test(n_cases=6)
+def test_lazy_lookup_matches_eager_sweeps_arbitrary_gaps(rng):
+    """lookup(decay_cfg, now) == lookup after n eager sweeps, any tick gap."""
+    de = int(rng.integers(1, 6))
+    n_sweeps = int(rng.integers(1, 9))
+    cfg = DecayConfig(half_life_ticks=float(rng.uniform(2.0, 40.0)),
+                      prune_threshold=0.0)
+    cap = 1 << 9
+    n = 200
+    keys = (rng.integers(1, 2**63, n).astype(np.uint64)) | 1
+    hi, lo = split_fp(keys)
+    t = stores.make_table(cap, {"weight": jnp.float32, "count": jnp.float32,
+                                "last_tick": jnp.int32})
+    t = stores.insert_accumulate(
+        t, jnp.asarray(hi), jnp.asarray(lo),
+        {"weight": jnp.asarray(rng.random(n).astype(np.float32) * 5 + 0.1),
+         "count": jnp.ones(n, jnp.float32),
+         "last_tick": jnp.zeros(n, jnp.int32)},
+        jnp.ones(n, bool), modes=Q_MODES)
+
+    eager = t
+    for _ in range(n_sweeps):
+        eager, _, _ = sweep_decay_prune(eager, jnp.int32(de), cfg=cfg)
+    now = jnp.int32(de * n_sweeps)
+
+    v_lazy, f_lazy, _ = stores.lookup(t, jnp.asarray(hi), jnp.asarray(lo),
+                                      decay_cfg=cfg, now=now)
+    v_eager, f_eager, _ = stores.lookup(eager, jnp.asarray(hi),
+                                        jnp.asarray(lo))
+    np.testing.assert_array_equal(np.asarray(f_lazy), np.asarray(f_eager))
+    np.testing.assert_allclose(np.asarray(v_lazy["weight"]),
+                               np.asarray(v_eager["weight"]), rtol=1e-4)
+    # non-decay lanes are untouched by the lazy view
+    np.testing.assert_array_equal(np.asarray(v_lazy["count"]),
+                                  np.asarray(v_eager["count"]))
+
+
+@property_test(n_cases=4)
+def test_lazy_rebase_on_write_matches_eager_accumulation(rng):
+    """insert_accumulate under the lazy policy rebases the stored weight
+    before adding; the decayed views must track eager sweeps exactly."""
+    de = 3
+    cfg = DecayConfig(half_life_ticks=float(rng.uniform(3.0, 20.0)),
+                      prune_threshold=0.0)
+    cap = 1 << 9
+    n = 150
+    keys = (rng.integers(1, 400, n).astype(np.uint64)
+            * np.uint64(0x9E3779B97F4A7C15)) | np.uint64(1)
+    hi, lo = split_fp(keys)
+
+    def batch(seed, tick):
+        r = np.random.default_rng(seed)
+        return {"weight": jnp.asarray(r.random(n).astype(np.float32) + 0.1),
+                "count": jnp.ones(n, jnp.float32),
+                "last_tick": jnp.full(n, tick, jnp.int32)}
+
+    lanes = {"weight": jnp.float32, "count": jnp.float32,
+             "last_tick": jnp.int32}
+    lazy_t = stores.make_table(cap, lanes)
+    eager_t = stores.make_table(cap, lanes)
+    ones = jnp.ones(n, bool)
+    hi_j, lo_j = jnp.asarray(hi), jnp.asarray(lo)
+
+    # tick 0: both ingest raw
+    lazy_t = stores.insert_accumulate(lazy_t, hi_j, lo_j, batch(1, 0), ones,
+                                      modes=Q_MODES, decay_cfg=cfg,
+                                      now=jnp.int32(0))
+    eager_t = stores.insert_accumulate(eager_t, hi_j, lo_j, batch(1, 0),
+                                       ones, modes=Q_MODES)
+    # eager sweeps up to tick 2*de, then both ingest a second batch there
+    for _ in range(2):
+        eager_t, _, _ = sweep_decay_prune(eager_t, jnp.int32(de), cfg=cfg)
+    now1 = jnp.int32(2 * de)
+    lazy_t = stores.insert_accumulate(lazy_t, hi_j, lo_j, batch(2, 2 * de),
+                                      ones, modes=Q_MODES, decay_cfg=cfg,
+                                      now=now1)
+    eager_t = stores.insert_accumulate(eager_t, hi_j, lo_j, batch(2, 2 * de),
+                                       ones, modes=Q_MODES)
+    # one more eager sweep; lazy just reads at tick 3*de
+    eager_t, _, _ = sweep_decay_prune(eager_t, jnp.int32(de), cfg=cfg)
+    now2 = jnp.int32(3 * de)
+
+    v_lazy, found, _ = stores.lookup(lazy_t, hi_j, lo_j, decay_cfg=cfg,
+                                     now=now2)
+    v_eager, _, _ = stores.lookup(eager_t, hi_j, lo_j)
+    assert bool(np.asarray(found).all())
+    np.testing.assert_allclose(np.asarray(v_lazy["weight"]),
+                               np.asarray(v_eager["weight"]), rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(v_lazy["count"]),
+                                  np.asarray(v_eager["count"]))
+
+
+def test_prune_sweep_materializes_and_prunes():
+    rng = np.random.default_rng(5)
+    cfg = DecayConfig(half_life_ticks=4.0, prune_threshold=0.3)
+    cap = 1 << 9
+    n = 220
+    keys = (rng.integers(1, 2**63, n).astype(np.uint64)) | 1
+    hi, lo = split_fp(keys)
+    w = rng.random(n).astype(np.float32) * 2
+    t = stores.make_table(cap, {"weight": jnp.float32, "count": jnp.float32,
+                                "last_tick": jnp.int32})
+    t = stores.insert_accumulate(
+        t, jnp.asarray(hi), jnp.asarray(lo),
+        {"weight": jnp.asarray(w), "count": jnp.ones(n, jnp.float32),
+         "last_tick": jnp.zeros(n, jnp.int32)},
+        jnp.ones(n, bool), modes=Q_MODES)
+    now = jnp.int32(8)   # two half lives -> w/4
+    pruned, live, total = prune_sweep(t, now, cfg=cfg)
+    exp_keep = (w * 0.25) >= cfg.prune_threshold
+    assert int(live) == int(exp_keep.sum())
+    assert 0 < int(live) < n
+    # survivors are re-anchored at `now` with the materialized weight
+    v, found, _ = stores.lookup(pruned, jnp.asarray(hi), jnp.asarray(lo))
+    np.testing.assert_array_equal(np.asarray(found), exp_keep)
+    np.testing.assert_allclose(np.asarray(v["weight"])[exp_keep],
+                               (w * 0.25)[exp_keep], rtol=1e-5)
+    lt = np.asarray(v["last_tick"])[exp_keep]
+    assert (lt == 8).all()
+    # reading the pruned table lazily at a later tick continues the decay
+    v2, _, _ = stores.lookup(pruned, jnp.asarray(hi), jnp.asarray(lo),
+                             decay_cfg=cfg, now=jnp.int32(12))
+    np.testing.assert_allclose(np.asarray(v2["weight"])[exp_keep],
+                               (w * 0.125)[exp_keep], rtol=1e-5)
+
+
+def test_lazy_ranking_cycle_matches_materialized_decay():
+    """ranking_cycle(decay_cfg, now) == ranking_cycle over a table whose
+    decay was materialized by the prune sweep (threshold 0)."""
+    rng = np.random.default_rng(11)
+    q, c = _mk_stores(rng, 256, 1500, 1 << 11, 1 << 13)
+    cfg = RankConfig()
+    dcfg = DecayConfig(half_life_ticks=10.0, prune_threshold=0.0)
+    now = jnp.int32(7)
+    lazy = ranking.ranking_cycle(c, q, cfg, decay_cfg=dcfg, now=now)
+    q_mat, _, _ = prune_sweep(q, now, cfg=dcfg)
+    c_mat, _, _ = prune_sweep(c, now, cfg=dcfg)
+    mat = ranking.ranking_cycle(c_mat, q_mat, cfg)
+    _assert_tables_match_up_to_ties(lazy, mat)
+
+
+def test_lazy_engine_matches_eager_engine_on_aligned_ingest():
+    """End to end: with ingestion at tick 0 only (so eager sweep counts and
+    true elapsed ticks agree), the lazy engine — no decay sweeps at all,
+    prune-only at prune_every — ranks identically to the eager engine."""
+    from repro.core.engine import EngineConfig, SearchAssistanceEngine
+    from repro.data.stream import StreamConfig, SyntheticStream
+
+    base = dict(query_capacity=1 << 12, cooc_capacity=1 << 14,
+                session_capacity=1 << 11, session_window=4,
+                decay_every=4, rank_every=8, prune_every=8)
+    dc = DecayConfig(half_life_ticks=12.0, prune_threshold=1e-4)
+    eager = SearchAssistanceEngine(EngineConfig(**base, decay=dc))
+    lazy = SearchAssistanceEngine(EngineConfig(
+        **base, decay=dataclasses.replace(dc, policy="lazy")))
+
+    stream = SyntheticStream(StreamConfig(vocab_size=256, n_users=150,
+                                          queries_per_tick=512,
+                                          tweets_per_tick=0), seed=4)
+    ev, _ = stream.gen_tick(0)
+    for t in range(17):
+        eager.step(ev if t == 0 else None, None)
+        lazy.step(ev if t == 0 else None, None)
+
+    assert eager.n_decay_cycles > 0 and eager.n_prune_cycles == 0
+    assert lazy.n_decay_cycles == 0 and lazy.n_prune_cycles > 0
+    assert set(lazy.suggestions) == set(eager.suggestions)
+    assert len(lazy.suggestions) > 0
+    for f in lazy.suggestions:
+        ls = sorted((s for _, s in lazy.suggestions[f]), reverse=True)
+        es = sorted((s for _, s in eager.suggestions[f]), reverse=True)
+        np.testing.assert_allclose(ls, es, rtol=1e-4, atol=1e-6)
+
+
+def test_lazy_engine_prune_reclaims_slots():
+    """Idle lazy engine: live entries persist untouched between prune
+    sweeps, then the prune-only sweep reclaims decayed-out slots."""
+    from repro.core.engine import EngineConfig, SearchAssistanceEngine
+    from repro.data.stream import StreamConfig, SyntheticStream
+
+    cfg = EngineConfig(query_capacity=1 << 12, cooc_capacity=1 << 14,
+                       session_capacity=1 << 11, decay_every=2,
+                       rank_every=0, prune_every=10,
+                       decay=DecayConfig(half_life_ticks=2.0,
+                                         prune_threshold=0.05,
+                                         policy="lazy"))
+    eng = SearchAssistanceEngine(cfg)
+    stream = SyntheticStream(StreamConfig(vocab_size=128, n_users=80,
+                                          queries_per_tick=256,
+                                          tweets_per_tick=0), seed=8)
+    ev, _ = stream.gen_tick(0)
+    eng.step(ev, None)
+    live0 = int(eng.state.qstore.live_count())
+    assert live0 > 0
+    for _ in range(1, 10):
+        eng.step(None, None)
+    # ticks 1..9: no sweep ran, stored weights untouched
+    assert eng.n_prune_cycles == 0
+    assert int(eng.state.qstore.live_count()) == live0
+    eng.step(None, None)   # tick 10 -> prune sweep
+    assert eng.n_prune_cycles == 1
+    # 10 ticks = 5 half-lives: everything is far below the threshold
+    assert int(eng.state.qstore.live_count()) < live0
+
+
+# ---------------------------------------------------------------------------
+# suggestions_to_host: explicit filler-key skip
+# ---------------------------------------------------------------------------
+
+def test_suggestions_to_host_skips_filler_src_key():
+    """A row carrying the all-ones filler src key must be skipped even if a
+    positive score leaked into it."""
+    K = 4
+    ones = np.uint32(0xFFFFFFFF)
+    src_hi = jnp.asarray(np.array([1, ones, 0], np.uint32))
+    src_lo = jnp.asarray(np.array([2, ones, 0], np.uint32))
+    dst_hi = jnp.asarray(np.full((3, K), 3, np.uint32))
+    dst_lo = jnp.asarray(np.full((3, K), 4, np.uint32))
+    score = jnp.asarray(np.full((3, K), 0.5, np.float32))
+    table = ranking.SuggestionTable(src_hi, src_lo, dst_hi, dst_lo, score,
+                                    jnp.int32(1), jnp.int32(0))
+    out = ranking.suggestions_to_host(table)
+    assert set(out) == {int(join_fp(np.uint32(1), np.uint32(2)))}
+
+
+def test_suggestions_to_host_on_overflowing_compaction():
+    """Lexsort path with a pathologically small compaction buffer: the
+    exported dict must contain neither the empty key nor the filler key."""
+    rng = np.random.default_rng(2)
+    q, c = _mk_stores(rng, 128, 2000, 1 << 11, 1 << 13)
+    tiny = ranking.ranking_cycle_lexsort(
+        c, q, RankConfig(compact_frac=1e-4))
+    assert int(tiny.n_overflow) > 0
+    out = ranking.suggestions_to_host(tiny)
+    assert len(out) > 0
+    filler_fp = int(join_fp(np.uint32(0xFFFFFFFF), np.uint32(0xFFFFFFFF)))
+    assert 0 not in out and filler_fp not in out

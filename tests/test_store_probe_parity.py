@@ -275,6 +275,7 @@ def test_decay_prune_multi_kernel_vs_ref_oracle():
 # ---------------------------------------------------------------------------
 
 def test_ranking_compaction_parity_and_overflow_counting():
+    """Lexsort-path compaction machinery (the pre-segmented reference)."""
     import dataclasses
     from repro.core import ranking
     from repro.core.engine import EngineConfig, SearchAssistanceEngine
@@ -291,10 +292,10 @@ def test_ranking_compaction_parity_and_overflow_counting():
         ev, _ = stream.gen_tick(t)
         eng.step(ev, None)
 
-    full = ranking.ranking_cycle(
+    full = ranking.ranking_cycle_lexsort(
         eng.state.cooc, eng.state.qstore,
         dataclasses.replace(cfg.rank, compact_frac=1.0))
-    comp = ranking.ranking_cycle(
+    comp = ranking.ranking_cycle_lexsort(
         eng.state.cooc, eng.state.qstore,
         dataclasses.replace(cfg.rank, compact_frac=0.5))
     assert int(full.n_overflow) == 0
@@ -313,7 +314,7 @@ def test_ranking_compaction_parity_and_overflow_counting():
     # a pathologically small compaction buffer must COUNT what it cuts, and
     # the cut must remove the globally LOWEST-scoring pairs — the best
     # suggestion always survives compaction.
-    tiny = ranking.ranking_cycle(
+    tiny = ranking.ranking_cycle_lexsort(
         eng.state.cooc, eng.state.qstore,
         dataclasses.replace(cfg.rank, compact_frac=1e-4))
     assert int(tiny.n_overflow) > 0
@@ -321,3 +322,57 @@ def test_ranking_compaction_parity_and_overflow_counting():
     best_full = max(s for row in s_full.values() for _, s in row)
     best_tiny = max(s for row in s_tiny.values() for _, s in row)
     np.testing.assert_allclose(best_tiny, best_full, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Claim-sort key packing: winners deterministic-by-arrival
+# ---------------------------------------------------------------------------
+
+@property_test(n_cases=4)
+def test_claim_winners_invariant_under_batch_permutation(rng):
+    """Permuting a batch must leave the resulting table bit-identical: the
+    packed (slot, batch idx) claim key makes winners a function of the
+    deduped (sorted) key set, not of the input order or sort stability."""
+    cap = 1 << 8
+    n = 180
+    # clustered keys -> heavy probe collisions -> many contended claims
+    keys = (rng.integers(1, 90, size=n).astype(np.uint64)
+            * np.uint64(0x9E3779B97F4A7C15)) | np.uint64(1)
+    w = rng.random(n).astype(np.float32)
+    # permutation-invariant updates: ADD lanes + a constant SET tick
+    tables = []
+    for perm in (np.arange(n), rng.permutation(n), rng.permutation(n)):
+        t = _mk(cap)
+        t = _ins(stores.insert_accumulate, t, keys[perm], w[perm], tick=7)
+        tables.append(t)
+    for t in tables[1:]:
+        np.testing.assert_array_equal(np.asarray(tables[0].key_hi),
+                                      np.asarray(t.key_hi))
+        np.testing.assert_array_equal(np.asarray(tables[0].key_lo),
+                                      np.asarray(t.key_lo))
+        for name in tables[0].lanes:
+            np.testing.assert_allclose(np.asarray(tables[0].lanes[name]),
+                                       np.asarray(t.lanes[name]), rtol=1e-6)
+
+
+def test_claim_winners_lexsort_fallback_matches_packed():
+    """When log2(C) + log2(B) > 31 the packed key cannot fit u32; the
+    lexsort fallback must pick the same winners (lowest batch index)."""
+    from repro.core.stores import _claim_winners
+    rng = np.random.default_rng(0)
+    B = 1 << 12
+    slots = jnp.asarray(rng.integers(0, 1 << 10, size=B), jnp.uint32)
+    contend = jnp.asarray(rng.random(B) < 0.7)
+    # C small enough to pack vs C huge enough to force the fallback
+    won_packed = _claim_winners(slots, contend, B, 1 << 10)
+    won_fallback = _claim_winners(slots, contend, B, 1 << 24)
+    np.testing.assert_array_equal(np.asarray(won_packed),
+                                  np.asarray(won_fallback))
+    # exactly one winner per contended slot, and it is the first arrival
+    sl = np.asarray(slots)
+    cn = np.asarray(contend)
+    wn = np.asarray(won_packed)
+    for s in np.unique(sl[cn]):
+        contenders = np.nonzero(cn & (sl == s))[0]
+        winners = np.nonzero(wn & (sl == s))[0]
+        assert len(winners) == 1 and winners[0] == contenders.min()
