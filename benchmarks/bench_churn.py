@@ -4,6 +4,12 @@ Paper: ~17% of the top-1000 terms churn hour-over-hour; ~13% day-over-day
 (daily churn is LOWER than hourly — aggregation smooths bursts). We verify
 the synthetic stream reproduces the qualitative structure: substantial
 hourly churn, lower daily churn.
+
+``python -m benchmarks.bench_churn --sweep`` additionally sweeps the lazy
+policy's maintenance cadences (``prune_every`` x ``decay_every``) against
+*suggestion* churn between consecutive rank cycles — the quality-drift
+check the lazy-decay ROADMAP item asked for (pair with the coverage sweep
+in ``bench_memory_coverage.py``).
 """
 from __future__ import annotations
 
@@ -50,3 +56,80 @@ def run() -> List[Row]:
             ("churn_daily_topK", 0.0,
              f"churn={daily:.3f} (paper: 0.13; must be < hourly: "
              f"{daily < h_mean})")]
+
+
+# ---------------------------------------------------------------------------
+# --sweep: lazy-cadence tuning against suggestion churn (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+def _sugg_churn(prune_every: int, decay_every: int, n_ticks: int = 48,
+                seed: int = 3) -> tuple:
+    """Run the lazy-policy engine under capacity pressure and measure mean
+    churn of the suggestion key set between consecutive rank cycles, the
+    final cooc live-slot load, and probe-failure drops.
+
+    Decay is fast (half life 6 ticks) so entries actually cross the prune
+    threshold within the horizon — otherwise every cadence ties trivially.
+    """
+    from repro.core.decay import DecayConfig
+    from repro.core.engine import EngineConfig, SearchAssistanceEngine
+
+    events = tuple(
+        EventSpec(name=f"ev{i}", terms=(f"breaking {i}", f"story {i}"),
+                  t_start=12 * i + 4, ramp_ticks=4.0, plateau_ticks=10.0,
+                  decay_ticks=12.0, peak_share=0.12)
+        for i in range(3))
+    cfg = StreamConfig(vocab_size=1024, queries_per_tick=1024,
+                       tweets_per_tick=64, zipf_s=1.03, events=events)
+    stream = SyntheticStream(cfg, seed=seed)
+    ecfg = EngineConfig(query_capacity=1 << 13, cooc_capacity=1 << 15,
+                        session_capacity=1 << 12, rank_every=6,
+                        decay_every=decay_every, prune_every=prune_every,
+                        decay=DecayConfig(policy="lazy",
+                                          half_life_ticks=6.0))
+    eng = SearchAssistanceEngine(ecfg)
+    churns, prev = [], None
+    for t in range(n_ticks):
+        ev, tw = stream.gen_tick(t)
+        if eng.step(ev, tw) is not None:
+            cur = set(eng.suggestions)
+            if prev:
+                churns.append(1.0 - len(cur & prev) / max(len(prev), 1))
+            prev = cur
+    live_frac = float(np.asarray(eng.state.cooc.live_count())) \
+        / eng.cfg.cooc_capacity
+    drops = int(eng.state.cooc.n_dropped)
+    return float(np.mean(churns)) if churns else 0.0, live_frac, drops
+
+
+def run_sweep() -> List[Row]:
+    """Sweep (prune_every, decay_every) under the lazy policy.
+
+    Measured verdict (recorded in ROADMAP + EngineConfig defaults):
+    suggestion churn is IDENTICAL across every cadence (0.122 at this
+    sweep's settings) — read-time decay means pruning only reclaims slots,
+    it never changes scores — and the paired coverage sweep is flat too
+    (0.658). What moves is cooc live-slot load (0.244 at p12 -> 0.310 at
+    p48/p96) and, under capacity pressure, probe-failure drops (4 -> 34).
+    ``decay_every`` (session-eviction cadence under lazy) moves nothing.
+    So the cadence is a pure memory-headroom/sweep-cost tradeoff:
+    ``prune_every=24`` (the tuned EngineConfig default) matches 48's
+    quality with visibly lower table load; ``decay_every=6`` stands.
+    """
+    rows: List[Row] = []
+    for prune_every in (12, 24, 48, 96):
+        for decay_every in (3, 6, 12):
+            churn, live, drops = _sugg_churn(prune_every, decay_every)
+            rows.append((f"churn_sweep_p{prune_every}_d{decay_every}", 0.0,
+                         f"sugg_churn={churn:.3f} cooc_live={live:.3f} "
+                         f"drops={drops}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", action="store_true",
+                    help="sweep lazy (prune_every, decay_every) cadences")
+    rows = run_sweep() if ap.parse_args().sweep else run()
+    print("\n".join(f"{n},{t:.1f},{d}" for n, t, d in rows))

@@ -17,7 +17,7 @@ import sys
 import time
 import traceback
 
-BENCHES = ["churn", "ingest", "latency", "ranking", "spelling",
+BENCHES = ["churn", "ingest", "latency", "ranking", "recovery", "spelling",
            "memory_coverage", "engine_perf", "roofline"]
 
 

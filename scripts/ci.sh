@@ -18,4 +18,6 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
     python -m benchmarks.run --json results/BENCH_engine.json engine_perf
     # ranking smoke: lexsort-vs-segmented rows (the PR 2 fast path) must run
     python -m benchmarks.run --json results/BENCH_ranking.json ranking
+    # recovery smoke: crash -> restore -> catch-up replay must beat real time
+    python -m benchmarks.run --json results/BENCH_recovery.json recovery
 fi

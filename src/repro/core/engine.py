@@ -24,6 +24,18 @@ Under the lazy decay policy (``DecayConfig.policy == "lazy"``) the
 per-``decay_every`` full sweep disappears entirely: reads (ranking, lookup)
 apply the decayed view per row, writes rebase-then-add, and only a
 prune-only sweep runs, every ``prune_every`` ticks (see ``decay.py``).
+
+Durability (paper §4.2): the engine itself is deliberately volatile — "the
+importance of individual messages decreases over time, so losing a little
+bit of state is tolerable ... a (re)started instance can rewind to an
+earlier point in the [fire]hose and consume messages at a faster rate than
+real time to catch up to the present". :func:`ingest_many` is the catch-up
+primitive: one ``lax.scan`` over a stack of logged micro-batches (including
+the in-scan decay/prune maintenance at the exact live cadences), one device
+dispatch per chunk instead of one per tick. ``streaming/`` provides the
+durable log and the replay controller built on it; snapshots ride on
+``distributed/fault_tolerance.CheckpointManager`` with the log offset
+recorded in the manifest (snapshot = checkpoint + log offset).
 """
 from __future__ import annotations
 
@@ -60,8 +72,14 @@ class EngineConfig:
     rank_every: int = 30               # ~5 sim-minutes at 10 s ticks (§2.3)
     # lazy decay policy only: full sweeps leave the per-``decay_every`` path
     # entirely (reads decay themselves); a prune-only sweep reclaims slots
-    # at this much longer cadence.
-    prune_every: int = 48
+    # at this much longer cadence. Tuned via the (prune_every, decay_every)
+    # sweeps in bench_churn/bench_memory_coverage: suggestion churn and
+    # coverage are cadence-INVARIANT under the lazy policy (read-time decay
+    # is exact), so the cadence only trades live-slot load / probe-failure
+    # drops against sweep cost — 24 matches 48's quality with lower table
+    # load (0.24 vs 0.31 live at the sweep's pressure point) and ~7x fewer
+    # drops under capacity pressure.
+    prune_every: int = 24
     session_ttl: int = 360
     decay: DecayConfig = DecayConfig()
     rank: RankConfig = RankConfig()
@@ -238,6 +256,132 @@ def advance_tick(state: EngineState) -> EngineState:
 
 
 # ---------------------------------------------------------------------------
+# Fused multi-tick ingestion (the §4.2 catch-up primitive)
+# ---------------------------------------------------------------------------
+
+class TickStack(NamedTuple):
+    """A stack of R consecutive micro-batches (leading dim = tick).
+
+    Shapes: query lanes are [R, B] (B may be 0: no query hose), tweet grams
+    are [R, T, G] with valid [R, T] (T or G may be 0: no firehose).
+    """
+    sess_hi: jax.Array
+    sess_lo: jax.Array
+    q_hi: jax.Array
+    q_lo: jax.Array
+    src: jax.Array
+    q_valid: jax.Array
+    g_hi: jax.Array
+    g_lo: jax.Array
+    t_valid: jax.Array
+
+    @property
+    def n_ticks(self) -> int:
+        return self.sess_hi.shape[0]
+
+
+def cadence_due(cfg: EngineConfig, tick: int) -> Optional[str]:
+    """Which maintenance cycle is due at ``tick`` (host-side, concrete).
+
+    THE single statement of the cadence semantics: ``step()`` branches on
+    it live, ``step_many()`` counts cycle crossings with it, and
+    ``maintenance_cadence`` below is its traced twin for the replay scans
+    (the crash→restore→replay bit-for-bit property test pins the two
+    together). Lazy policy: "prune" at ``prune_every`` wins over "evict"
+    at ``decay_every`` (the prune cycle evicts sessions itself); eager
+    policy: "decay" at ``decay_every``.
+    """
+    if tick <= 0:
+        return None
+    if cfg.lazy_decay:
+        if cfg.prune_every > 0 and tick % cfg.prune_every == 0:
+            return "prune"
+        if cfg.decay_every > 0 and tick % cfg.decay_every == 0:
+            return "evict"
+        return None
+    if cfg.decay_every > 0 and tick % cfg.decay_every == 0:
+        return "decay"
+    return None
+
+
+def maintenance_cadence(state, tick: jax.Array, cfg: EngineConfig,
+                        prune_fn, evict_fn, decay_fn):
+    """Traced twin of :func:`cadence_due` as ``lax.cond``s, shared by the
+    unsharded and sharded replay scans — same prune-wins/evict/decay
+    ladder, same ``tick > 0`` guard. ``state`` may be any pytree the
+    branch callables accept.
+    """
+    ident = lambda s: s
+    if cfg.lazy_decay:
+        prune_on = cfg.prune_every > 0
+        evict_on = cfg.decay_every > 0
+        do_prune = ((tick > 0) & (tick % max(cfg.prune_every, 1) == 0)
+                    if prune_on else None)
+        do_evict = ((tick > 0) & (tick % max(cfg.decay_every, 1) == 0)
+                    if evict_on else None)
+        if prune_on and evict_on:
+            return jax.lax.cond(
+                do_prune, prune_fn,
+                lambda s: jax.lax.cond(do_evict, evict_fn, ident, s), state)
+        if prune_on:
+            return jax.lax.cond(do_prune, prune_fn, ident, state)
+        if evict_on:
+            return jax.lax.cond(do_evict, evict_fn, ident, state)
+        return state
+    if cfg.decay_every > 0:
+        do_decay = (tick > 0) & (tick % cfg.decay_every == 0)
+        return jax.lax.cond(do_decay, decay_fn, ident, state)
+    return state
+
+
+def tick_maintenance(state: EngineState, cfg: EngineConfig) -> EngineState:
+    """Traced equivalent of the host-side cadence logic in ``step()``.
+
+    Runs the decay/prune/evict cycle due at ``state.tick`` (if any) so a
+    replayed tick performs exactly the same state mutations as a live one —
+    the crash→restore→replay == uninterrupted-run property depends on it.
+    Ranking is deliberately absent: rank cycles read state but never mutate
+    it, so replay may suppress them freely (§4.2: serve stale tables while
+    catching up).
+    """
+    return maintenance_cadence(
+        state, state.tick, cfg,
+        prune_fn=lambda s: prune_cycle(s, cfg=cfg)[0],
+        evict_fn=lambda s: evict_sessions_cycle(s, cfg=cfg),
+        decay_fn=lambda s: decay_cycle(s, jnp.int32(cfg.decay_every),
+                                       cfg=cfg)[0])
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ingest_many(state: EngineState, stack: TickStack, *, cfg: EngineConfig
+                ) -> EngineState:
+    """Replay R logged ticks in ONE device dispatch (``lax.scan``).
+
+    Per scan iteration this performs exactly what one live ``step()`` does to
+    ``EngineState`` — query-path ingest, tweet-path ingest, then the cadence
+    maintenance, then the tick advance — so replaying a logged tail is
+    bit-for-bit identical to having lived through it. The win over live
+    stepping is dispatch amortization: no per-tick host sync, one fused XLA
+    program per chunk — which is what lets a restarted instance "consume
+    messages at a faster rate than real time" (§4.2).
+    """
+    have_q = stack.q_hi.shape[1] > 0
+    have_t = stack.g_hi.shape[1] > 0 and stack.g_hi.shape[2] > 0
+
+    def body(st: EngineState, xs: TickStack):
+        if have_q:
+            st = ingest_queries(st, xs.sess_hi, xs.sess_lo, xs.q_hi, xs.q_lo,
+                                xs.src, xs.q_valid, cfg=cfg)
+        if have_t:
+            st = ingest_tweets(st, xs.g_hi, xs.g_lo, xs.t_valid, cfg=cfg)
+        st = tick_maintenance(st, cfg)
+        return advance_tick(st), None
+
+    state, _ = jax.lax.scan(body, state, stack)
+    return state
+
+
+# ---------------------------------------------------------------------------
 # Host orchestrator
 # ---------------------------------------------------------------------------
 
@@ -278,20 +422,17 @@ class SearchAssistanceEngine:
                 jnp.asarray(tweets.valid), cfg=self.cfg)
 
         tick = int(self.state.tick)
-        if self.cfg.lazy_decay:
-            # decay is amortized into reads/writes; only the prune-only
-            # sweep remains, at the (much longer) prune cadence. Session
-            # TTL eviction stays on the decay_every cadence — it is a
-            # cheap mask, and its semantics are time-based, not decay.
-            pruning = (self.cfg.prune_every > 0 and tick > 0
-                       and tick % self.cfg.prune_every == 0)
-            if (not pruning and self.cfg.decay_every > 0 and tick > 0
-                    and tick % self.cfg.decay_every == 0):
-                self.state = evict_sessions_cycle(self.state, cfg=self.cfg)
-            if pruning:   # prune_cycle evicts sessions itself
-                self.state, stats = prune_cycle(self.state, cfg=self.cfg)
-                self.n_prune_cycles += 1
-        elif self.cfg.decay_every > 0 and tick > 0 and tick % self.cfg.decay_every == 0:
+        # one cadence authority for live, counters, and replay: cadence_due
+        # (lazy: decay is amortized into reads/writes, only the prune-only
+        # sweep remains at the longer prune cadence; session TTL eviction
+        # stays on decay_every — a cheap mask with time-based semantics).
+        due = cadence_due(self.cfg, tick)
+        if due == "evict":
+            self.state = evict_sessions_cycle(self.state, cfg=self.cfg)
+        elif due == "prune":   # prune_cycle evicts sessions itself
+            self.state, stats = prune_cycle(self.state, cfg=self.cfg)
+            self.n_prune_cycles += 1
+        elif due == "decay":
             self.state, stats = decay_cycle(
                 self.state, jnp.int32(self.cfg.decay_every), cfg=self.cfg)
             self.n_decay_cycles += 1
@@ -313,11 +454,54 @@ class SearchAssistanceEngine:
                 "n_overflow": int(table.n_overflow),
                 "n_suggest": len(self.suggestions)}
 
+    def step_many(self, stack: TickStack) -> None:
+        """Fused multi-tick ingestion (catch-up replay / bulk live ingest).
+
+        Applies :func:`ingest_many` and keeps the host-side cycle counters
+        consistent with what the equivalent ``step()`` loop would have done.
+        Ranking cycles are NOT run (the caller decides when lag is low
+        enough to resume them — see ``streaming/replay.py``).
+        """
+        t0 = int(self.state.tick)
+        self.state = ingest_many(self.state, stack, cfg=self.cfg)
+        t1 = int(self.state.tick)
+        due = [cadence_due(self.cfg, t) for t in range(t0, t1)]
+        self.n_prune_cycles += sum(d == "prune" for d in due)
+        self.n_decay_cycles += sum(d == "decay" for d in due)
+
     # ---- serving-side reads (the frontend cache pulls these) ----
     def suggest_fp(self, fp: int, k: int = 8) -> List[Tuple[int, float]]:
         return self.suggestions.get(int(fp), [])[:k]
 
     # ---- persistence (every rank cycle the leader persists, §4.2) ----
+    def save_snapshot(self, ckpt, extra_meta: Optional[Dict] = None) -> str:
+        """Snapshot = checkpoint + log offset (§4.2 rewind/catch-up).
+
+        The manifest records ``log_tick`` — the first tick a restarted
+        instance must replay from the firehose log to catch up to where
+        this snapshot left off.
+        """
+        tick = int(self.state.tick)
+        meta = {"log_tick": tick, "engine": self.name}
+        if extra_meta:
+            meta.update(extra_meta)
+        return ckpt.save(tick, self.state, meta=meta)
+
+    @classmethod
+    def restore_from_snapshot(cls, cfg: EngineConfig, ckpt,
+                              step: Optional[int] = None, name: str = "rt"
+                              ) -> Tuple["SearchAssistanceEngine", int]:
+        """Cold-start from the newest (or a given) snapshot.
+
+        Returns ``(engine, log_tick)``: the engine holds the restored
+        ``EngineState`` and ``log_tick`` is the offset to resume replaying
+        the firehose log from.
+        """
+        eng = cls(cfg, name)
+        eng.state, step = ckpt.restore(eng.state, step)
+        meta = ckpt.manifest(step).get("meta", {})
+        return eng, int(meta.get("log_tick", step))
+
     def state_arrays(self) -> Dict[str, np.ndarray]:
         leaves, treedef = jax.tree.flatten(self.state)
         return {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}

@@ -39,7 +39,7 @@ from jax.experimental.shard_map import shard_map
 
 from . import ranking, stores
 from .decay import prune_sweep, sweep_decay_prune
-from .engine import EngineConfig, _Q_MODES, _C_MODES
+from .engine import EngineConfig, maintenance_cadence, _Q_MODES, _C_MODES
 from .hashing import combine_fp_device, probe_hash, split_fp
 from .ranking import RankConfig, SuggestionTable
 from .stores import HashTable, SessionTable
@@ -139,9 +139,9 @@ def _route(pairs_key_hi, pairs_key_lo, owner, payload: Dict[str, jax.Array],
             flat(t_val), dropped)
 
 
-def make_sharded_step(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
-    """Build the jitted sharded ingest step (query path)."""
-    n = mesh.shape[axis]
+def _ingest_body(cfg: ShardedConfig, n: int, axis: str):
+    """The per-device query-path ingest body (shared by the one-tick step
+    and the fused multi-tick replay scan)."""
     base = cfg.base
 
     def body(state: ShardedState, s_hi, s_lo, q_hi, q_lo, src, valid):
@@ -202,12 +202,109 @@ def make_sharded_step(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
         return ShardedState(qstore, cooc, sessions, state.tick,
                             state.n_route_drop + drop[None])
 
+    return body
+
+
+def make_sharded_step(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
+    """Build the jitted sharded ingest step (query path)."""
+    n = mesh.shape[axis]
+    body = _ingest_body(cfg, n, axis)
     rep = P()
     state_spec = _state_spec(axis)
     fn = shard_map(body, mesh=mesh,
                    in_specs=(state_spec, rep, rep, rep, rep, rep, rep),
                    out_specs=state_spec,
                    check_rep=False)
+    return jax.jit(fn)
+
+
+def _tick_maintenance(state: ShardedState, base: EngineConfig
+                      ) -> ShardedState:
+    """Per-tick maintenance on the sharded state: the shared
+    ``engine.maintenance_cadence`` ladder (ONE copy of the cadence
+    semantics) with sharded branch bodies — lazy: prune-only sweeps at
+    ``prune_every``, session eviction at ``decay_every``; eager: full
+    decay/prune + eviction at ``decay_every``. Runs inside the replay scan
+    so replayed ticks mutate state exactly as live ones do."""
+
+    def evict_only(s: ShardedState) -> ShardedState:
+        sessions = stores.evict_sessions(s.sessions, s.tick, base.session_ttl)
+        return s._replace(sessions=sessions)
+
+    def prune_fn(s: ShardedState) -> ShardedState:
+        qstore, _, _ = prune_sweep(s.qstore, s.tick, cfg=base.decay)
+        cooc, _, _ = prune_sweep(s.cooc, s.tick, cfg=base.decay)
+        return evict_only(s._replace(qstore=qstore, cooc=cooc))
+
+    def decay_fn(s: ShardedState) -> ShardedState:
+        qstore, _, _ = sweep_decay_prune(
+            s.qstore, jnp.int32(base.decay_every), cfg=base.decay,
+            use_kernel=base.use_kernel)
+        cooc, _, _ = sweep_decay_prune(
+            s.cooc, jnp.int32(base.decay_every), cfg=base.decay,
+            use_kernel=base.use_kernel)
+        return evict_only(s._replace(qstore=qstore, cooc=cooc))
+
+    return maintenance_cadence(state, state.tick, base,
+                               prune_fn=prune_fn, evict_fn=evict_only,
+                               decay_fn=decay_fn)
+
+
+def make_sharded_tick_step(cfg: ShardedConfig, mesh: Mesh,
+                           axis: str = "shard"):
+    """One full live tick (ingest + cadence maintenance + tick advance) —
+    the sharded equivalent of ``SearchAssistanceEngine.step``'s state
+    mutations, so drivers using it replay exactly under
+    ``make_sharded_ingest_many``."""
+    n = mesh.shape[axis]
+    base = cfg.base
+    ingest = _ingest_body(cfg, n, axis)
+
+    def body(state: ShardedState, s_hi, s_lo, q_hi, q_lo, src, valid):
+        state = ingest(state, s_hi, s_lo, q_hi, q_lo, src, valid)
+        state = _tick_maintenance(state, base)
+        return state._replace(tick=state.tick + 1)
+
+    rep = P()
+    state_spec = _state_spec(axis)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(state_spec, rep, rep, rep, rep, rep, rep),
+                   out_specs=state_spec, check_rep=False)
+    return jax.jit(fn)
+
+
+def make_sharded_ingest_many(cfg: ShardedConfig, mesh: Mesh,
+                             axis: str = "shard"):
+    """Fused catch-up replay over the sharded engine (§4.2).
+
+    Each shard consumes the full logged hose (the paper's replicated-
+    consumption design), so ONE shared firehose log serves every shard and
+    replay is parallel by construction: a single ``lax.scan`` dispatch
+    advances all shards through a chunk of R logged ticks — per-tick
+    routing ``all_to_all``s included — with the cadence maintenance run
+    in-scan (identical state mutations to the live tick step above).
+
+    Takes stacked query-hose arrays ``[R, B]``; returns the advanced state.
+    """
+    n = mesh.shape[axis]
+    base = cfg.base
+    ingest = _ingest_body(cfg, n, axis)
+
+    def many(state: ShardedState, s_hi, s_lo, q_hi, q_lo, src, valid):
+        def scan_body(st, xs):
+            st = ingest(st, *xs)
+            st = _tick_maintenance(st, base)
+            return st._replace(tick=st.tick + 1), None
+
+        state, _ = jax.lax.scan(
+            scan_body, state, (s_hi, s_lo, q_hi, q_lo, src, valid))
+        return state
+
+    rep = P()
+    state_spec = _state_spec(axis)
+    fn = shard_map(many, mesh=mesh,
+                   in_specs=(state_spec, rep, rep, rep, rep, rep, rep),
+                   out_specs=state_spec, check_rep=False)
     return jax.jit(fn)
 
 
@@ -274,6 +371,30 @@ def _state_spec(axis: str) -> ShardedState:
         tick=rep,
         n_route_drop=sh,
     )
+
+
+def save_sharded_snapshot(state: ShardedState, ckpt, meta=None) -> str:
+    """Snapshot = checkpoint + log offset for the sharded engine.
+
+    The whole ``ShardedState`` pytree (every shard's stores) goes into one
+    checkpoint; the manifest records the shared-log replay offset."""
+    tick = int(np.asarray(state.tick))
+    m = {"log_tick": tick, "engine": "sharded"}
+    if meta:
+        m.update(meta)
+    return ckpt.save(tick, state, meta=m)
+
+
+def restore_sharded_snapshot(cfg: ShardedConfig, mesh: Mesh, ckpt,
+                             step=None, axis: str = "shard"
+                             ) -> Tuple[ShardedState, int]:
+    """Cold-start a sharded instance: returns (state, log_tick) — every
+    shard restores in one pass, then all replay the shared log in parallel
+    via ``make_sharded_ingest_many``."""
+    template = init_sharded_state(cfg, mesh, axis)
+    state, step = ckpt.restore(template, step)
+    meta = ckpt.manifest(step).get("meta", {})
+    return state, int(meta.get("log_tick", step))
 
 
 def merge_sharded_suggestions(table: SuggestionTable, top_k: int

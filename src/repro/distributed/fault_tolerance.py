@@ -26,9 +26,14 @@ import numpy as np
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_n: int = 3):
+    def __init__(self, directory: str, keep_n: int = 3,
+                 tmp_ttl_s: float = 3600.0):
         self.dir = directory
         self.keep_n = keep_n
+        # ``.tmp_*`` dirs older than this are debris from crashed writers
+        # (a live writer holds its tmp dir only for the duration of one
+        # save); retention removes them.
+        self.tmp_ttl_s = tmp_ttl_s
         os.makedirs(directory, exist_ok=True)
 
     # -- paths --
@@ -46,6 +51,15 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
+
+    def manifest(self, step: Optional[int] = None) -> Dict:
+        """The manifest of a checkpoint (its ``meta`` carries the log
+        offset for §4.2-style catch-up recovery)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        with open(os.path.join(self._step_dir(step), "MANIFEST.json")) as f:
+            return json.load(f)
 
     # -- save/restore --
     def save(self, step: int, tree: Any, meta: Optional[Dict] = None) -> str:
@@ -115,6 +129,20 @@ class CheckpointManager:
         steps = self.steps()
         for s in steps[: -self.keep_n]:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # stale ``.tmp_*`` dirs left by crashed writers: a successful save
+        # renames its tmp dir away, a failed one rmtree's it — anything
+        # still here past the TTL belongs to a dead process.
+        now = time.time()
+        for name in os.listdir(self.dir):
+            if not name.startswith(".tmp"):
+                continue
+            path = os.path.join(self.dir, name)
+            try:
+                age = now - os.path.getmtime(path)
+            except OSError:
+                continue
+            if age >= self.tmp_ttl_s:
+                shutil.rmtree(path, ignore_errors=True)
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +190,22 @@ class ReplicaGroup:
         if rid != self.leader():
             return False
         self.ckpt.save(step, tree, meta)
+        return True
+
+    def log_append(self, rid: int, writer: Any, *args, **kwargs) -> bool:
+        """Leader-elected single WRITER for the durable firehose log.
+
+        Every replica consumes the hoses (paper §4.2: replicated, not
+        sharded), but only the elected leader appends to the shared durable
+        log — the same single-writer pattern as ``persist``. Non-leader
+        appends are dropped (return False); on failover the new leader's
+        appends continue the log seamlessly because ticks, not writers,
+        define the offset space, and a (possibly long-standby) writer
+        re-syncs its manifest view at every segment start.
+        """
+        if rid != self.leader():
+            return False
+        writer.append(*args, **kwargs)
         return True
 
 

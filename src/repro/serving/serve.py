@@ -11,6 +11,13 @@ persisted suggestion tables (real-time + background), interpolates them at
 serve time (§4.5), and resolves fingerprints back to strings through the
 tokenizer. ``ServerSet`` is the client-side balancer over frontend replicas
 with liveness-based failover.
+
+Staleness (§4.2): during a backend crash + catch-up replay the frontends
+keep serving "the most recently persisted results" — deliberately stale.
+``SuggestFrontend.metrics()`` quantifies that: the age of the loaded
+tables and, when pointed at the durable firehose log, the tick lag between
+what the tables reflect and the log head (``catching_up`` flips true while
+a restarted backend is still replaying).
 """
 from __future__ import annotations
 
@@ -59,7 +66,9 @@ class SuggestFrontend:
 
     def __init__(self, rt_dir: str, bg_dir: Optional[str] = None,
                  tok: Optional[NGramTokenizer] = None, alpha: float = 0.7,
-                 spell_dir: Optional[str] = None):
+                 spell_dir: Optional[str] = None,
+                 log_dir: Optional[str] = None, log_name: str = "firehose",
+                 stale_lag_ticks: int = 4):
         self.rt_ckpt = CheckpointManager(rt_dir)
         self.bg_ckpt = CheckpointManager(bg_dir) if bg_dir else None
         self.spell_ckpt = CheckpointManager(spell_dir) if spell_dir else None
@@ -70,6 +79,15 @@ class SuggestFrontend:
         self._spell: Dict[int, Tuple[int, float]] = {}
         self._cache: Dict = {}
         self._loaded_steps = (None, None, None)
+        self._rt_manifest: Dict = {}
+        self.stale_lag_ticks = stale_lag_ticks
+        self._log_reader = None
+        if log_dir is not None:
+            from ..streaming.log import FirehoseLogReader
+            # verify=False: metrics only needs the manifest tail tick —
+            # checksumming every segment on each poll would be O(log bytes)
+            self._log_reader = FirehoseLogReader(log_dir, name=log_name,
+                                                 verify=False)
         self.alive = True
 
     def poll(self) -> bool:
@@ -81,6 +99,7 @@ class SuggestFrontend:
             return False
         if steps[0] is not None:
             self._rt = self._load(self.rt_ckpt, steps[0])
+            self._rt_manifest = self.rt_ckpt.manifest(steps[0])
         if self.bg_ckpt and steps[1] is not None:
             self._bg = self._load(self.bg_ckpt, steps[1])
         if self.spell_ckpt and steps[2] is not None:
@@ -98,6 +117,51 @@ class SuggestFrontend:
         named = dict(zip(["dst", "offsets", "score", "src"],
                          [arrs[f"leaf_{i}"] for i in range(4)]))
         return unpack_suggestions(named)
+
+    # ---- staleness / lag (§4.2: stale-but-available during catch-up) ----
+    def metrics(self, now: Optional[float] = None) -> Dict:
+        """How stale is what this frontend serves?
+
+        ``rt_age_s``: wall-clock age of the loaded real-time tables.
+        ``rt_tick``: the engine tick those tables reflect (from the
+        checkpoint manifest's ``log_tick``/``tick`` meta).
+        ``log_head_tick``/``lag_ticks``: with a firehose-log reader
+        attached, how far behind the durable log head the served tables
+        are; ``catching_up`` is true while lag exceeds
+        ``stale_lag_ticks`` — i.e. a restarted backend is still replaying
+        and this frontend is knowingly serving stale suggestions.
+        """
+        now = time.time() if now is None else now
+        meta = self._rt_manifest.get("meta", {})
+        # two producer conventions: engine snapshots (``save_snapshot``)
+        # record ``log_tick`` = the NEXT tick to replay (tables reflect
+        # log_tick - 1); suggestion-table persists (serve_assist) record
+        # ``tick`` = the LAST tick reflected.
+        if "log_tick" in meta:
+            rt_next = int(meta["log_tick"])
+        elif "tick" in meta:
+            rt_next = int(meta["tick"]) + 1
+        else:
+            rt_next = None
+        out: Dict = {
+            "rt_step": self._loaded_steps[0],
+            "rt_age_s": (now - self._rt_manifest["time"]
+                         if "time" in self._rt_manifest else None),
+            "rt_tick": None if rt_next is None else rt_next - 1,
+            "log_head_tick": None,
+            "lag_ticks": None,
+            "catching_up": False,
+        }
+        if self._log_reader is not None:
+            self._log_reader.refresh()
+            head = self._log_reader.last_tick()
+            out["log_head_tick"] = head
+            if head is not None:
+                # pending = logged ticks the served tables don't reflect
+                out["lag_ticks"] = max(
+                    0, head + 1 - (rt_next if rt_next is not None else 0))
+                out["catching_up"] = out["lag_ticks"] > self.stale_lag_ticks
+        return out
 
     # ---- request path ----
     def related(self, query: str, k: int = 8) -> List[Tuple[str, float]]:

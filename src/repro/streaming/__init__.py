@@ -1,0 +1,26 @@
+"""Durable firehose log + faster-than-real-time catch-up replay (§4.2).
+
+The paper's backend is deliberately volatile: durability comes from
+persisting results periodically and from the ability of a (re)started
+instance to *rewind into the firehose* and consume messages faster than
+real time until it catches up, while frontends serve the last persisted
+tables in the meantime. This package is that recovery subsystem:
+
+  * :mod:`.log` — an append-only, segmented micro-batch log (npz segments +
+    json manifest, atomic rename, rotation by tick count, keep-N retention,
+    seek-by-tick reader, torn-tail detection), standing in for the
+    replayable message queue the paper rewinds into;
+  * :mod:`.replay` — the catch-up controller: restore the newest snapshot
+    (checkpoint + log offset), replay the log tail through the fused
+    ``engine.ingest_many`` scan step, hand off to live ingestion.
+"""
+from .log import (FirehoseLogReader, FirehoseLogWriter, LogChunk,
+                  corrupt_segment, kill_writer_mid_segment)
+from .replay import (CatchUpController, ReplayConfig, chunk_to_stack,
+                     recover_engine)
+
+__all__ = [
+    "FirehoseLogReader", "FirehoseLogWriter", "LogChunk",
+    "corrupt_segment", "kill_writer_mid_segment",
+    "CatchUpController", "ReplayConfig", "chunk_to_stack", "recover_engine",
+]

@@ -1,0 +1,426 @@
+"""Append-only segmented firehose log (the §4.2 "rewindable hose").
+
+The paper's recovery story leans on the message queue: "a (re)started
+instance can rewind to an earlier point in the [fire]hose and consume
+messages at a faster rate than real time to catch up to the present". The
+deployed system got that property from the firehose infrastructure itself;
+here the hose is synthetic, so we make it rewindable with a durable log.
+
+Design — one log = one directory (several named logs may share it):
+
+  * **segments**: ``<name>-<first>-<last>.npz`` files, each holding a stack
+    of consecutive micro-batch ticks (query events + tweet grams). Segments
+    are written whole: serialized to memory, checksummed, written to a
+    ``.tmp_*`` file, fsynced, then atomically renamed into place.
+  * **manifest**: ``<name>-MANIFEST.json`` lists the sealed segments (file,
+    tick range, sha256). It is rewritten atomically after every seal, so
+    readers always see a consistent prefix of the log.
+  * **rotation** by tick count (``ticks_per_segment``), and also whenever
+    the micro-batch shapes change (a segment is one stackable block).
+  * **retention**: ``keep_segments`` newest segments are kept; older ones
+    leave the manifest first, then their files are unlinked — a reader can
+    never observe a manifested-but-deleted segment.
+  * **torn-tail detection**: a crashed writer can leave (a) ``.tmp_*``
+    scratch files, (b) a partial segment file at its final name that never
+    made the manifest, or (c) — with non-atomic filesystems — a manifested
+    segment whose bytes are short/corrupt. The reader validates checksums
+    in order and truncates the log at the first bad segment: everything up
+    to the last complete segment replays, the torn tail is ignored (the
+    paper's stance: losing a little state is tolerable, §4.2).
+
+The reader seeks by tick and yields stacked chunks ready for the fused
+``engine.ingest_many`` replay step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+import os
+import re
+import tempfile
+from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from ..data.stream import QueryEvents, TweetBatch
+
+_FMT = "{name}-{first:012d}-{last:012d}.npz"
+_SEG_RE = re.compile(r"^(?P<name>.+)-(?P<first>\d{12})-(?P<last>\d{12})\.npz$")
+
+# npz lanes of one segment (leading dim R = ticks in the segment)
+_LANES = ("ticks", "sess_fp", "q_fp", "src", "q_valid", "grams", "t_valid")
+
+
+class LogChunk(NamedTuple):
+    """A stack of consecutive logged ticks (host numpy, ready to replay)."""
+    ticks: np.ndarray     # i64[R]
+    sess_fp: np.ndarray   # u64[R, B]
+    q_fp: np.ndarray      # u64[R, B]
+    src: np.ndarray       # i32[R, B]
+    q_valid: np.ndarray   # bool[R, B]
+    grams: np.ndarray     # u64[R, T, G]
+    t_valid: np.ndarray   # bool[R, T]
+
+    @property
+    def n_ticks(self) -> int:
+        return self.ticks.shape[0]
+
+    def query_events(self, i: int) -> Optional[QueryEvents]:
+        if self.q_fp.shape[1] == 0:
+            return None
+        return QueryEvents(sess_fp=self.sess_fp[i], q_fp=self.q_fp[i],
+                           src=self.src[i], valid=self.q_valid[i])
+
+    def tweet_batch(self, i: int) -> Optional[TweetBatch]:
+        if self.grams.shape[1] == 0 or self.grams.shape[2] == 0:
+            return None
+        return TweetBatch(grams=self.grams[i], valid=self.t_valid[i])
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    file: str
+    first: int
+    last: int
+    n_ticks: int
+    sha256: str
+
+
+def _record_arrays(tick: int, events: Optional[QueryEvents],
+                   tweets: Optional[TweetBatch]) -> Dict[str, np.ndarray]:
+    if events is None:
+        sess = q = np.zeros((0,), np.uint64)
+        src = np.zeros((0,), np.int32)
+        qv = np.zeros((0,), bool)
+    else:
+        sess = np.asarray(events.sess_fp, np.uint64)
+        q = np.asarray(events.q_fp, np.uint64)
+        src = np.asarray(events.src, np.int32)
+        qv = np.asarray(events.valid, bool)
+    if tweets is None:
+        grams = np.zeros((0, 0), np.uint64)
+        tv = np.zeros((0,), bool)
+    else:
+        grams = np.asarray(tweets.grams, np.uint64)
+        tv = np.asarray(tweets.valid, bool)
+    return {"ticks": np.int64(tick), "sess_fp": sess, "q_fp": q, "src": src,
+            "q_valid": qv, "grams": grams, "t_valid": tv}
+
+
+class FirehoseLogWriter:
+    """Single-writer append path (leader-elected in a replica group —
+    see ``distributed.fault_tolerance.ReplicaGroup.log_append``)."""
+
+    def __init__(self, directory: str, ticks_per_segment: int = 8,
+                 keep_segments: int = 0, name: str = "firehose"):
+        assert ticks_per_segment > 0
+        self.dir = directory
+        self.name = name
+        self.ticks_per_segment = ticks_per_segment
+        self.keep_segments = keep_segments  # 0 = keep everything
+        os.makedirs(directory, exist_ok=True)
+        self._buf: List[Dict[str, np.ndarray]] = []
+        self._buf_ticks: List[int] = []
+        self._dead = False
+        self.segments: List[Segment] = _load_manifest(directory, name)
+
+    # -- state --
+    @property
+    def last_tick(self) -> Optional[int]:
+        if self._buf_ticks:
+            return self._buf_ticks[-1]
+        return self.segments[-1].last if self.segments else None
+
+    def _manifest_path(self) -> str:
+        return _manifest_path(self.dir, self.name)
+
+    # -- append path --
+    def append(self, tick: int, events: Optional[QueryEvents],
+               tweets: Optional[TweetBatch]) -> None:
+        """Append one tick's micro-batches. Ticks must be increasing."""
+        if self._dead:
+            raise RuntimeError("writer was killed (failure injection)")
+        if not self._buf:
+            # segment start: re-sync from the on-disk manifest. A standby
+            # replica's writer may have been constructed long before it won
+            # leadership (ReplicaGroup.log_append failover); without the
+            # re-sync its stale cached view would both accept duplicate
+            # ticks and rewrite the manifest without the old leader's
+            # segments. One small json read per segment.
+            self.segments = _load_manifest(self.dir, self.name)
+        tick = int(tick)
+        last = self.last_tick
+        if last is not None and tick <= last:
+            raise ValueError(f"non-monotonic append: tick {tick} <= {last}")
+        rec = _record_arrays(tick, events, tweets)
+        if self._buf and any(
+                rec[k].shape != self._buf[-1][k].shape for k in _LANES[1:]):
+            self.flush()   # shape change: rotate so segments stay stackable
+        self._buf.append(rec)
+        self._buf_ticks.append(tick)
+        if len(self._buf) >= self.ticks_per_segment:
+            self.flush()
+
+    def _serialize_buffer(self) -> Tuple[bytes, str]:
+        """The segment wire format, shared with the failure injector (one
+        definition — torn-tail tests must tear exactly what flush writes).
+        Returns (npz blob, final segment file name)."""
+        payload = {k: np.stack([r[k] for r in self._buf]) for k in _LANES}
+        bio = io.BytesIO()
+        np.savez(bio, **payload)
+        fname = _FMT.format(name=self.name, first=self._buf_ticks[0],
+                            last=self._buf_ticks[-1])
+        return bio.getvalue(), fname
+
+    def flush(self) -> Optional[Segment]:
+        """Seal the buffered ticks as one segment (atomic rename)."""
+        if not self._buf:
+            return None
+        blob, fname = self._serialize_buffer()
+        digest = hashlib.sha256(blob).hexdigest()
+        fd, tmp = tempfile.mkstemp(dir=self.dir,
+                                   prefix=f".tmp_{self.name}_seg_")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+            os.rename(tmp, os.path.join(self.dir, fname))
+        except Exception:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        seg = Segment(fname, self._buf_ticks[0], self._buf_ticks[-1],
+                      len(self._buf), digest)
+        self.segments.append(seg)
+        self._buf, self._buf_ticks = [], []
+        self._write_manifest()
+        self._retain()
+        return seg
+
+    def close(self) -> None:
+        self.flush()
+
+    # -- manifest + retention --
+    def _write_manifest(self) -> None:
+        doc = {"name": self.name, "version": 1,
+               "segments": [dataclasses.asdict(s) for s in self.segments]}
+        fd, tmp = tempfile.mkstemp(dir=self.dir,
+                                   prefix=f".tmp_{self.name}_man_")
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, self._manifest_path())
+
+    def _retain(self) -> None:
+        if self.keep_segments <= 0 or len(self.segments) <= self.keep_segments:
+            return
+        drop, self.segments = (self.segments[: -self.keep_segments],
+                               self.segments[-self.keep_segments:])
+        self._write_manifest()   # readers stop seeing them first
+        for seg in drop:
+            try:
+                os.unlink(os.path.join(self.dir, seg.file))
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# Failure injection (the bench/test harness "kills" the writer mid-segment).
+# ---------------------------------------------------------------------------
+
+def kill_writer_mid_segment(writer: FirehoseLogWriter,
+                            torn_fraction: float = 0.5) -> Optional[str]:
+    """Simulate a writer crash mid-segment write.
+
+    The buffered (unsealed) ticks are flushed as a TORN segment: a partial
+    npz byte prefix written directly at its final name, never recorded in
+    the manifest — what a crashed non-atomic writer leaves behind. The
+    writer is dead afterwards (appends raise). Returns the torn file name
+    (None if the buffer was empty — the crash then tore nothing).
+    """
+    fname = None
+    if writer._buf:
+        blob, fname = writer._serialize_buffer()
+        n = max(1, int(len(blob) * torn_fraction))
+        with open(os.path.join(writer.dir, fname), "wb") as f:
+            f.write(blob[:n])
+        writer._buf, writer._buf_ticks = [], []
+    writer._dead = True
+    return fname
+
+
+def corrupt_segment(directory: str, seg: Segment,
+                    keep_fraction: float = 0.5) -> None:
+    """Truncate a sealed segment's bytes in place (torn write on a
+    non-atomic filesystem). The reader's checksum pass must drop it and
+    everything after it."""
+    path = os.path.join(directory, seg.file)
+    with open(path, "rb") as f:
+        blob = f.read()
+    with open(path, "wb") as f:
+        f.write(blob[: max(1, int(len(blob) * keep_fraction))])
+
+
+# ---------------------------------------------------------------------------
+# Reader
+# ---------------------------------------------------------------------------
+
+def _manifest_path(directory: str, name: str) -> str:
+    return os.path.join(directory, f"{name}-MANIFEST.json")
+
+
+def _load_manifest(directory: str, name: str) -> List[Segment]:
+    path = _manifest_path(directory, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        doc = json.load(f)
+    return [Segment(**s) for s in doc.get("segments", [])]
+
+
+class FirehoseLogReader:
+    """Seek-by-tick reader with torn-tail truncation.
+
+    ``refresh()`` re-validates the manifest against the files on disk:
+    segments are accepted in order while their bytes verify (sha256); the
+    first bad/missing segment truncates the readable log there. Files at
+    segment names that the manifest does not list (a crashed writer's torn
+    tail) are counted and ignored.
+    """
+
+    def __init__(self, directory: str, name: str = "firehose",
+                 verify: bool = True):
+        self.dir = directory
+        self.name = name
+        self.verify = verify
+        self.segments: List[Segment] = []
+        self.n_truncated_segments = 0   # manifested but failed verification
+        self.n_unmanifested_files = 0   # torn tail beyond the manifest
+        self.refresh()
+
+    def refresh(self) -> "FirehoseLogReader":
+        if not os.path.isdir(self.dir):
+            # no log yet (e.g. a frontend starting before the backend's
+            # writer): an empty log, not an error
+            self.segments = []
+            self.n_truncated_segments = self.n_unmanifested_files = 0
+            return self
+        manifested = _load_manifest(self.dir, self.name)
+        good: List[Segment] = []
+        for seg in manifested:
+            path = os.path.join(self.dir, seg.file)
+            if not os.path.exists(path) or not self._ok(path, seg):
+                break
+            good.append(seg)
+        self.n_truncated_segments = len(manifested) - len(good)
+        self.segments = good
+        listed = {s.file for s in manifested}
+        self.n_unmanifested_files = sum(
+            1 for f in os.listdir(self.dir)
+            if _SEG_RE.match(f) and _SEG_RE.match(f).group("name") == self.name
+            and f not in listed)
+        return self
+
+    def _ok(self, path: str, seg: Segment) -> bool:
+        if not self.verify:
+            return True
+        try:
+            with open(path, "rb") as f:
+                return hashlib.sha256(f.read()).hexdigest() == seg.sha256
+        except OSError:
+            return False
+
+    # -- seek info --
+    def first_tick(self) -> Optional[int]:
+        return self.segments[0].first if self.segments else None
+
+    def last_tick(self) -> Optional[int]:
+        return self.segments[-1].last if self.segments else None
+
+    # -- reads --
+    def _load_segment(self, seg: Segment) -> LogChunk:
+        with np.load(os.path.join(self.dir, seg.file)) as z:
+            return LogChunk(**{k: z[k] for k in _LANES})
+
+    def read_chunks(self, from_tick: int, chunk_ticks: Optional[int] = None,
+                    upto_tick: Optional[int] = None) -> Iterator[LogChunk]:
+        """Yield stacked chunks covering ticks in [from_tick, upto_tick).
+
+        Without ``chunk_ticks``, yields one chunk per segment (sliced at the
+        seek point). With it, re-chunks across segment boundaries into
+        uniform ``chunk_ticks``-sized stacks (plus a final remainder) so the
+        replay step compiles for at most two distinct shapes.
+        """
+        pend: Optional[LogChunk] = None
+        for seg in self.segments:
+            if seg.last < from_tick:
+                continue
+            if upto_tick is not None and seg.first >= upto_tick:
+                break
+            chunk = self._load_segment(seg)
+            m = chunk.ticks >= from_tick
+            if upto_tick is not None:
+                m &= chunk.ticks < upto_tick
+            if not m.all():
+                chunk = LogChunk(*(a[m] for a in chunk))
+            if chunk.n_ticks == 0:
+                continue
+            if chunk_ticks is None:
+                yield chunk
+                continue
+            if pend is not None:
+                # merge only consecutive, shape-compatible ticks: a chunk
+                # must never hide a tick gap inside it (replay decides per
+                # chunk whether skipping a gap is allowed)
+                if (int(pend.ticks[-1]) + 1 == int(chunk.ticks[0])
+                        and all(p.shape[1:] == c.shape[1:]
+                                for p, c in zip(pend, chunk))):
+                    chunk = LogChunk(*(np.concatenate([p, c])
+                                       for p, c in zip(pend, chunk)))
+                else:          # gap or shape break: emit what we have
+                    yield pend
+                pend = None
+            off = 0
+            while chunk.n_ticks - off >= chunk_ticks:
+                yield LogChunk(*(a[off:off + chunk_ticks] for a in chunk))
+                off += chunk_ticks
+            if off < chunk.n_ticks:
+                pend = LogChunk(*(a[off:] for a in chunk))
+        if pend is not None:
+            yield pend
+
+    def read_ticks(self, from_tick: int, upto_tick: Optional[int] = None
+                   ) -> Iterator[Tuple[int, Optional[QueryEvents],
+                                       Optional[TweetBatch]]]:
+        """Per-tick view (live-rate handoff / reference comparisons)."""
+        for chunk in self.read_chunks(from_tick, upto_tick=upto_tick):
+            for i in range(chunk.n_ticks):
+                yield (int(chunk.ticks[i]), chunk.query_events(i),
+                       chunk.tweet_batch(i))
+
+    def repair(self) -> int:
+        """Delete THIS log's torn-tail debris (unmanifested segment files
+        + its name-scoped tmp scratch) so a restarted writer starts clean.
+        Never touches other named logs sharing the directory — their
+        writer may hold a tmp file mid-seal. Returns #files."""
+        if not os.path.isdir(self.dir):
+            return 0
+        listed = {s.file for s in _load_manifest(self.dir, self.name)}
+        n = 0
+        for f in os.listdir(self.dir):
+            m = _SEG_RE.match(f)
+            torn = (m and m.group("name") == self.name and f not in listed)
+            if torn or f.startswith(f".tmp_{self.name}_"):
+                try:
+                    os.unlink(os.path.join(self.dir, f))
+                    n += 1
+                except OSError:
+                    pass
+        self.refresh()
+        return n

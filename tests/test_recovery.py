@@ -1,0 +1,403 @@
+"""Recovery subsystem semantics (§4.2 rewind/catch-up).
+
+Covers: the segmented firehose log (roundtrip, seek, rotation, retention,
+torn-tail truncation), EngineState snapshot round-trips, the fused
+``ingest_many`` scan vs. sequential live stepping (bit-exact), the
+crash-at-every-segment-boundary property (restore + replay == an
+uninterrupted run, exact under lazy/exponential decay), replay-mode rank
+suppression, frontend staleness metrics, and the leader-gated log writer.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.decay import DecayConfig
+from repro.core.engine import (EngineConfig, SearchAssistanceEngine,
+                               TickStack, ingest_many)
+from repro.core.hashing import split_fp
+from repro.data.stream import StreamConfig, SyntheticStream
+from repro.distributed.fault_tolerance import CheckpointManager, ReplicaGroup
+from repro.serving.serve import SuggestFrontend, pack_suggestions
+from repro.streaming import (CatchUpController, FirehoseLogReader,
+                             FirehoseLogWriter, ReplayConfig, chunk_to_stack,
+                             corrupt_segment, kill_writer_mid_segment,
+                             recover_engine)
+from proptest import property_test
+
+
+def _cfg(policy="lazy", **kw):
+    base = dict(query_capacity=1 << 11, cooc_capacity=1 << 13,
+                session_capacity=1 << 10, session_window=3,
+                decay_every=4, prune_every=6, rank_every=5,
+                decay=DecayConfig(policy=policy))
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _batches(n, seed=11, tweets=8):
+    stream = SyntheticStream(
+        StreamConfig(vocab_size=256, n_users=120, queries_per_tick=96,
+                     tweets_per_tick=tweets, tweet_words=3, tweet_grams=4),
+        seed=seed)
+    return [stream.gen_tick(t) for t in range(n)]
+
+
+def _stack(batches) -> TickStack:
+    s_hi, s_lo = split_fp(np.stack([b[0].sess_fp for b in batches]))
+    q_hi, q_lo = split_fp(np.stack([b[0].q_fp for b in batches]))
+    g_hi, g_lo = split_fp(np.stack([b[1].grams for b in batches]))
+    return TickStack(
+        jnp.asarray(s_hi), jnp.asarray(s_lo), jnp.asarray(q_hi),
+        jnp.asarray(q_lo),
+        jnp.asarray(np.stack([b[0].src for b in batches]), jnp.int32),
+        jnp.asarray(np.stack([b[0].valid for b in batches])),
+        jnp.asarray(g_hi), jnp.asarray(g_lo),
+        jnp.asarray(np.stack([b[1].valid for b in batches])))
+
+
+def _assert_states_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"state leaf {i}")
+
+
+# ---------------------------------------------------------------------------
+# Log
+# ---------------------------------------------------------------------------
+
+def test_log_roundtrip_and_seek(tmp_path):
+    batches = _batches(10)
+    w = FirehoseLogWriter(str(tmp_path), ticks_per_segment=4)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+    w.close()   # seals the partial tail segment (ticks 8-9)
+    r = FirehoseLogReader(str(tmp_path))
+    assert [(s.first, s.last) for s in r.segments] == [(0, 3), (4, 7), (8, 9)]
+    assert (r.first_tick(), r.last_tick()) == (0, 9)
+    # per-tick roundtrip is exact
+    for (t, ev, tw), (oev, otw) in zip(r.read_ticks(0), batches):
+        np.testing.assert_array_equal(ev.q_fp, oev.q_fp)
+        np.testing.assert_array_equal(ev.sess_fp, oev.sess_fp)
+        np.testing.assert_array_equal(ev.src, oev.src)
+        np.testing.assert_array_equal(tw.grams, otw.grams)
+    # seek lands mid-segment; re-chunking stays consecutive
+    ticks = []
+    for chunk in r.read_chunks(5, chunk_ticks=3):
+        ticks.extend(chunk.ticks.tolist())
+    assert ticks == [5, 6, 7, 8, 9]
+    # monotonicity is enforced
+    w2 = FirehoseLogWriter(str(tmp_path), ticks_per_segment=4)
+    with pytest.raises(ValueError):
+        w2.append(9, *batches[0])
+
+
+def test_log_rotation_and_retention(tmp_path):
+    batches = _batches(10)
+    w = FirehoseLogWriter(str(tmp_path), ticks_per_segment=2,
+                          keep_segments=2)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+    r = FirehoseLogReader(str(tmp_path))
+    assert [(s.first, s.last) for s in r.segments] == [(6, 7), (8, 9)]
+    on_disk = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert len(on_disk) == 2, "retention must unlink old segment files"
+
+
+def test_torn_tail_truncation(tmp_path):
+    batches = _batches(8)
+    w = FirehoseLogWriter(str(tmp_path), ticks_per_segment=3)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+    # ticks 6,7 are buffered; the crash tears them onto disk unmanifested
+    torn = kill_writer_mid_segment(w)
+    assert torn is not None and os.path.exists(tmp_path / torn)
+    with pytest.raises(RuntimeError):
+        w.append(8, *batches[0])
+    r = FirehoseLogReader(str(tmp_path))
+    assert r.last_tick() == 5 and r.n_unmanifested_files == 1
+    # a torn write INSIDE the manifested range truncates from there on
+    corrupt_segment(str(tmp_path), r.segments[1])
+    r.refresh()
+    assert r.last_tick() == 2 and r.n_truncated_segments == 1
+    assert r.repair() >= 1   # torn tail debris removed
+    assert FirehoseLogReader(str(tmp_path)).n_unmanifested_files == 0
+
+
+# ---------------------------------------------------------------------------
+# EngineState snapshots
+# ---------------------------------------------------------------------------
+
+def test_engine_state_snapshot_roundtrip(tmp_path):
+    cfg = _cfg()
+    eng = SearchAssistanceEngine(cfg)
+    for t, (ev, tw) in enumerate(_batches(4)):
+        eng.step(ev, tw)
+    ckpt = CheckpointManager(str(tmp_path))
+    eng.save_snapshot(ckpt)
+    restored, log_tick = SearchAssistanceEngine.restore_from_snapshot(
+        cfg, ckpt)
+    assert log_tick == int(eng.state.tick) == 4
+    _assert_states_equal(eng.state, restored.state)
+    # dtypes survive the npz roundtrip
+    for a, b in zip(jax.tree.flatten(eng.state)[0],
+                    jax.tree.flatten(restored.state)[0]):
+        assert a.dtype == b.dtype
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-tick ingest == live stepping
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["sweep", "lazy"])
+def test_ingest_many_matches_step_loop(policy):
+    cfg = _cfg(policy, decay_every=3, prune_every=5)
+    batches = _batches(8)
+    a = SearchAssistanceEngine(cfg)
+    for ev, tw in batches:
+        a.step(ev, tw)
+    b = SearchAssistanceEngine(cfg)
+    b.step_many(_stack(batches))
+    _assert_states_equal(a.state, b.state)
+    assert (a.n_prune_cycles, a.n_decay_cycles) == \
+        (b.n_prune_cycles, b.n_decay_cycles)
+    a.run_rank_cycle()
+    b.run_rank_cycle()
+    assert a.suggestions == b.suggestions
+
+
+def test_ingest_many_queries_only():
+    """A log without a firehose (B-only stack) replays the query path."""
+    cfg = _cfg(rank_every=0)
+    batches = _batches(4, tweets=0)
+    w_batches = [(ev, None) for ev, _ in batches]
+    a = SearchAssistanceEngine(cfg)
+    for ev, _ in batches:
+        a.step(ev, None)
+    b = SearchAssistanceEngine(cfg)
+    R, B = len(batches), batches[0][0].q_fp.shape[0]
+    s_hi, s_lo = split_fp(np.stack([ev.sess_fp for ev, _ in batches]))
+    q_hi, q_lo = split_fp(np.stack([ev.q_fp for ev, _ in batches]))
+    stack = TickStack(
+        jnp.asarray(s_hi), jnp.asarray(s_lo), jnp.asarray(q_hi),
+        jnp.asarray(q_lo),
+        jnp.asarray(np.stack([ev.src for ev, _ in batches]), jnp.int32),
+        jnp.asarray(np.stack([ev.valid for ev, _ in batches])),
+        jnp.zeros((R, 0, 0), jnp.uint32), jnp.zeros((R, 0, 0), jnp.uint32),
+        jnp.zeros((R, 0), bool))
+    b.state = ingest_many(b.state, stack, cfg=cfg)
+    _assert_states_equal(a.state, b.state)
+
+
+# ---------------------------------------------------------------------------
+# Crash -> restore -> replay == uninterrupted run (the §4.2 property)
+# ---------------------------------------------------------------------------
+
+@property_test(n_cases=2)
+def test_crash_at_every_segment_boundary(rng):
+    """Crash after EVERY sealed segment; recovery must reproduce the
+    uninterrupted run bit-for-bit (lazy + exponential decay => exact)."""
+    seed = int(rng.integers(1 << 30))
+    n_ticks, tps = 12, 3
+    cfg = _cfg("lazy")
+    batches = _batches(n_ticks, seed=seed)
+
+    # live run: log every tick, snapshot at every rank cycle
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        logd, ckd = os.path.join(tmp, "log"), os.path.join(tmp, "ck")
+        ckpt = CheckpointManager(ckd, keep_n=10)
+        w = FirehoseLogWriter(logd, ticks_per_segment=tps)
+        live = SearchAssistanceEngine(cfg)
+        states_at = {}
+        for t, (ev, tw) in enumerate(batches):
+            w.append(t, ev, tw)
+            if live.step(ev, tw) is not None:
+                live.save_snapshot(ckpt)
+            states_at[t + 1] = live.state    # post-tick state (tick == t+1)
+        w.close()
+
+        for boundary in range(tps, n_ticks + 1, tps):
+            # crash right after the segment [boundary-tps, boundary) sealed:
+            # replay everything logged before the crash point
+            steps = [s for s in ckpt.steps() if s <= boundary]
+            if not steps:
+                continue
+            eng, stats = recover_engine(
+                cfg, ckpt, logd, ReplayConfig(chunk_ticks=4),
+                target_tick=boundary, step=steps[-1])
+            assert int(eng.state.tick) == boundary
+            _assert_states_equal(states_at[boundary], eng.state)
+            # identical state => identical suggestion tables
+            ref = SearchAssistanceEngine(cfg)
+            ref.state = states_at[boundary]
+            ref.run_rank_cycle()
+            eng.run_rank_cycle()
+            assert ref.suggestions == eng.suggestions
+
+
+def test_replay_rank_suppression_and_handoff(tmp_path):
+    cfg = _cfg(rank_every=2)
+    batches = _batches(10)
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    w = FirehoseLogWriter(str(tmp_path / "log"), ticks_per_segment=5)
+    fresh = SearchAssistanceEngine(cfg)
+    fresh.save_snapshot(ckpt)    # snapshot at tick 0: replay everything
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+    w.close()
+    eng, stats = recover_engine(
+        cfg, ckpt, str(tmp_path / "log"),
+        ReplayConfig(chunk_ticks=4, rank_lag_ticks=3))
+    assert stats["n_ticks"] == 10
+    # rank boundaries 2,4,6,8: the lagging chunks suppress theirs, the
+    # near-head chunks run one each, and fresh tables are left at handoff
+    assert stats["n_rank_suppressed"] == 2
+    assert stats["n_rank_run"] == 2
+    assert eng.suggestions
+    assert eng.last_rank_tick == int(eng.state.tick)
+
+
+def test_replay_gap_detection(tmp_path):
+    cfg = _cfg(rank_every=0)
+    batches = _batches(8)
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    SearchAssistanceEngine(cfg).save_snapshot(ckpt)   # offset 0
+    w = FirehoseLogWriter(str(tmp_path / "log"), ticks_per_segment=2,
+                          keep_segments=2)            # retention drops 0..3
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+    with pytest.raises(ValueError, match="retention"):
+        recover_engine(cfg, ckpt, str(tmp_path / "log"))
+    eng, stats = recover_engine(
+        cfg, ckpt, str(tmp_path / "log"),
+        ReplayConfig(allow_gap=True))
+    assert stats["n_skipped_gap_ticks"] == 4
+    assert int(eng.state.tick) == 8
+
+
+def test_replay_mid_log_gap(tmp_path):
+    """A crash can tear ticks that a newer snapshot already covered; the
+    restarted writer then resumes past them, leaving a hole mid-log.
+    Recovery from an OLDER snapshot must skip the hole under allow_gap
+    (and refuse without it), not fail forever."""
+    cfg = _cfg(rank_every=0)
+    batches = _batches(8)
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    SearchAssistanceEngine(cfg).save_snapshot(ckpt)   # offset 0
+    w = FirehoseLogWriter(str(tmp_path / "log"), ticks_per_segment=2)
+    for t in (0, 1, 2, 3):
+        w.append(t, *batches[t])
+    w.close()
+    w2 = FirehoseLogWriter(str(tmp_path / "log"), ticks_per_segment=2)
+    for t in (6, 7):                      # ticks 4,5 died with the crash
+        w2.append(t, *batches[t])
+    w2.close()
+    with pytest.raises(ValueError, match="log gap"):
+        recover_engine(cfg, ckpt, str(tmp_path / "log"))
+    eng, stats = recover_engine(cfg, ckpt, str(tmp_path / "log"),
+                                ReplayConfig(chunk_ticks=4, allow_gap=True))
+    assert stats["n_skipped_gap_ticks"] == 2
+    assert stats["n_ticks"] == 6
+    assert int(eng.state.tick) == 8
+
+
+def test_replay_intra_segment_hole(tmp_path):
+    """A hole INSIDE one segment (the writer only enforces monotonic, not
+    consecutive, ticks — e.g. dropped leader-gated appends) must also be
+    skippable under allow_gap, not permanently unrecoverable."""
+    cfg = _cfg(rank_every=0)
+    batches = _batches(7)
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    SearchAssistanceEngine(cfg).save_snapshot(ckpt)   # offset 0
+    w = FirehoseLogWriter(str(tmp_path / "log"), ticks_per_segment=8)
+    for t in (0, 1, 2, 5, 6):                         # ticks 3,4 missing
+        w.append(t, *batches[t])
+    w.close()                                          # ONE segment
+    with pytest.raises(ValueError, match="allow_gap"):
+        recover_engine(cfg, ckpt, str(tmp_path / "log"))
+    eng, stats = recover_engine(cfg, ckpt, str(tmp_path / "log"),
+                                ReplayConfig(chunk_ticks=8, allow_gap=True))
+    assert stats["n_skipped_gap_ticks"] == 2
+    assert stats["n_ticks"] == 5
+    assert int(eng.state.tick) == 7
+
+
+def test_frontend_metrics_before_log_exists(tmp_path):
+    """Frontends start independently of the backend lifecycle: a missing
+    log directory is an empty log, not a crash."""
+    f = SuggestFrontend(str(tmp_path / "rt"),
+                        log_dir=str(tmp_path / "no_such_log"))
+    m = f.metrics()
+    assert m["log_head_tick"] is None and not m["catching_up"]
+
+
+# ---------------------------------------------------------------------------
+# Serving-side staleness + leader-gated log writer
+# ---------------------------------------------------------------------------
+
+def test_frontend_staleness_metrics(tmp_path):
+    rt_dir, log_dir = str(tmp_path / "rt"), str(tmp_path / "log")
+    cfg = _cfg()
+    batches = _batches(10)
+    w = FirehoseLogWriter(log_dir, ticks_per_segment=2)
+    eng = SearchAssistanceEngine(cfg)
+    rt_ckpt = CheckpointManager(rt_dir)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+        if eng.step(ev, tw) is not None and t <= 5:
+            # serve_assist convention: "tick" = last tick the tables reflect
+            rt_ckpt.save(t, pack_suggestions(eng.suggestions),
+                         meta={"tick": t})
+    w.close()
+    f = SuggestFrontend(rt_dir, log_dir=log_dir, stale_lag_ticks=2)
+    f.poll()
+    m = f.metrics()
+    assert m["rt_step"] == 5 and m["rt_tick"] == 5
+    # log holds ticks 0..9, tables reflect 0..5 -> 4 pending ticks (6..9)
+    assert m["log_head_tick"] == 9 and m["lag_ticks"] == 4
+    assert m["catching_up"], "far behind the log head -> stale"
+    # engine-snapshot convention: "log_tick" = NEXT tick to replay; a
+    # recovered backend persisting at the head makes the frontend fresh
+    rt_ckpt.save(9, pack_suggestions(eng.suggestions),
+                 meta={"log_tick": 10})
+    f.poll()
+    m = f.metrics()
+    assert m["rt_tick"] == 9
+    assert m["lag_ticks"] == 0 and not m["catching_up"]
+    assert m["rt_age_s"] is not None and m["rt_age_s"] >= 0
+
+
+def test_leader_gated_log_append(tmp_path):
+    batches = _batches(3)
+    group = ReplicaGroup(3, CheckpointManager(str(tmp_path / "ck")))
+    w = FirehoseLogWriter(str(tmp_path / "log"), ticks_per_segment=1)
+    assert group.log_append(0, w, 0, *batches[0])
+    assert not group.log_append(1, w, 1, *batches[1])   # non-leader dropped
+    group.fail(0)
+    assert group.log_append(1, w, 1, *batches[1])       # failover continues
+    r = FirehoseLogReader(str(tmp_path / "log"))
+    assert (r.first_tick(), r.last_tick()) == (0, 1)
+
+
+def test_stale_standby_writer_failover(tmp_path):
+    """A standby replica's writer constructed before the old leader's
+    seals must re-sync at segment start: its appends may neither rewind
+    the tick space nor clobber the manifest's earlier segments."""
+    batches = _batches(3)
+    w_leader = FirehoseLogWriter(str(tmp_path), ticks_per_segment=1)
+    w_standby = FirehoseLogWriter(str(tmp_path), ticks_per_segment=1)
+    w_leader.append(0, *batches[0])
+    w_leader.append(1, *batches[1])
+    # failover: the standby (stale cached view) becomes the writer
+    with pytest.raises(ValueError, match="non-monotonic"):
+        w_standby.append(1, *batches[1])
+    w_standby.append(2, *batches[2])
+    r = FirehoseLogReader(str(tmp_path))
+    assert [(s.first, s.last) for s in r.segments] == [(0, 0), (1, 1), (2, 2)]

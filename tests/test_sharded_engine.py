@@ -68,3 +68,71 @@ def test_sharded_engine_matches_unsharded_subprocess():
                        capture_output=True, text=True, timeout=560)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
     assert "SHARDED_OK" in r.stdout
+
+
+_REPLAY_SCRIPT = textwrap.dedent("""
+    import tempfile
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core.engine import EngineConfig
+    from repro.core import sharded_engine as se
+    from repro.core.decay import DecayConfig
+    from repro.core.hashing import split_fp
+    from repro.data.stream import StreamConfig, SyntheticStream
+    from repro.distributed.fault_tolerance import CheckpointManager
+
+    mesh = Mesh(np.array(jax.devices()).reshape(8), ("shard",))
+    ecfg = EngineConfig(query_capacity=1<<12, cooc_capacity=1<<15,
+                        session_capacity=1<<12, session_window=4,
+                        decay_every=3, prune_every=5, rank_every=0,
+                        decay=DecayConfig(policy="lazy"))
+    scfg = se.ShardedConfig(base=ecfg, n_salts=2, hot_threshold=30.0,
+                            route_capacity=1024)
+    tick_step = se.make_sharded_tick_step(scfg, mesh)
+    many = se.make_sharded_ingest_many(scfg, mesh)
+    stream = SyntheticStream(StreamConfig(vocab_size=256, n_users=200,
+                                          queries_per_tick=192,
+                                          tweets_per_tick=0), seed=5)
+    batches = []
+    for t in range(8):
+        ev, _ = stream.gen_tick(t)
+        s_hi, s_lo = split_fp(ev.sess_fp); q_hi, q_lo = split_fp(ev.q_fp)
+        batches.append(tuple(jnp.asarray(x) for x in
+                       (s_hi, s_lo, q_hi, q_lo,
+                        ev.src.astype(np.int32), ev.valid)))
+
+    # uninterrupted live run (one full tick step per batch)
+    live = se.init_sharded_state(scfg, mesh)
+    for b in batches:
+        live = tick_step(live, *b)
+
+    # crash after tick 4: snapshot + parallel catch-up replay of the tail
+    half = se.init_sharded_state(scfg, mesh)
+    for b in batches[:4]:
+        half = tick_step(half, *b)
+    ckpt = CheckpointManager(tempfile.mkdtemp())
+    se.save_sharded_snapshot(half, ckpt)
+    restored, log_tick = se.restore_sharded_snapshot(scfg, mesh, ckpt)
+    assert log_tick == 4
+    stacked = tuple(jnp.stack([b[i] for b in batches[4:]]) for i in range(6))
+    caught_up = many(restored, *stacked)
+    la, _ = jax.tree.flatten(live); lb, _ = jax.tree.flatten(caught_up)
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"leaf {i}")
+    print("SHARDED_REPLAY_OK tick", int(np.asarray(caught_up.tick)))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_replay_matches_live_subprocess():
+    """Snapshot + fused parallel replay == uninterrupted sharded run
+    (bit-for-bit), on 8 virtual devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTEST_ALLOW_DEVICES"] = "1"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _REPLAY_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "SHARDED_REPLAY_OK" in r.stdout

@@ -1,6 +1,7 @@
 """Optimizer, train loop, gradient compression, checkpointing, leader
 election, elastic resharding."""
 import os
+import time
 
 import numpy as np
 import jax
@@ -120,6 +121,42 @@ def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
     for name in os.listdir(tmp_path):
         assert not name.startswith(".tmp"), "tmp dir leaked"
     assert ckpt.latest_step() == 1
+
+
+def test_checkpoint_gc_cleans_stale_tmp_dirs(tmp_path):
+    """Retention removes ``.tmp_*`` debris left by crashed writers (past
+    the TTL) but never a fresh tmp dir a live writer may still hold."""
+    stale = tmp_path / ".tmp_crashed"
+    stale.mkdir()
+    (stale / "arrays.npz").write_bytes(b"partial")
+    old = time.time() - 7200
+    os.utime(stale, (old, old))
+    fresh = tmp_path / ".tmp_live"
+    fresh.mkdir()
+    ckpt = CheckpointManager(str(tmp_path), tmp_ttl_s=3600)
+    ckpt.save(1, {"x": jnp.ones(4)})     # save triggers gc
+    names = os.listdir(tmp_path)
+    assert ".tmp_crashed" not in names, "stale crashed-writer dir kept"
+    assert ".tmp_live" in names, "fresh tmp dir must survive"
+
+
+def test_restore_skips_manifestless_step_dirs(tmp_path):
+    """A crashed writer can leave a ``step_*`` dir without MANIFEST.json
+    (e.g. a partial copy); restore must fall back to the newest COMPLETE
+    checkpoint instead of crashing on it."""
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.arange(4, dtype=jnp.float32)}
+    ckpt.save(1, tree)
+    ckpt.save(2, jax.tree.map(lambda a: a * 2, tree))
+    torn = tmp_path / "step_000000000003"
+    torn.mkdir()
+    (torn / "arrays.npz").write_bytes(b"torn")
+    assert ckpt.steps() == [1, 2]
+    assert ckpt.latest_step() == 2
+    restored, step = ckpt.restore(tree)
+    assert step == 2
+    np.testing.assert_allclose(np.asarray(restored["x"]), np.arange(4) * 2)
+    assert ckpt.restore_host()["leaf_0"].shape == (4,)
 
 
 def test_leader_election_and_failover(tmp_path):
