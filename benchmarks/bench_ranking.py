@@ -65,6 +65,28 @@ def run() -> List[Row]:
         rows.append((f"ranking_cycle_{n_pairs}p_pallas", t_k,
                      f"fused score/gate; x{t / max(t_k, 1e-9):.2f}"))
     rows += _bench_lexsort_vs_segmented()
+    rows += _bench_region_vs_segmented()
+    return rows
+
+
+def _bench_region_vs_segmented() -> List[Row]:
+    """The pure-reshape claim: the region layout's ranking cycle vs the
+    segmented top-k over the SAME pair population (same capacities/load as
+    `_bench_lexsort_vs_segmented`) — no compaction scatter, no grouping
+    sort, no per-pair source lookups."""
+    from .bench_store import build_stores, WIDTHS
+    rows: List[Row] = []
+    cfg = RankConfig()
+    for logc in (16, 18, 20):
+        q, c, rt, _ = build_stores(logc, seed=logc)
+        iters = 3 if logc >= 20 else 5
+        t_seg = time_fn(lambda: ranking.ranking_cycle(c, q, cfg),
+                        iters=iters)
+        t_reg = time_fn(lambda: ranking.ranking_cycle_region(rt, q, cfg),
+                        iters=iters)
+        rows.append((f"rank_region_c2e{logc}", t_reg,
+                     f"region grid (W={WIDTHS[logc]}, pure reshape); "
+                     f"x{t_seg / max(t_reg, 1e-9):.2f} vs segtopk"))
     return rows
 
 

@@ -1,0 +1,145 @@
+"""Cooccurrence-store insert cost under the three probe strategies (§4.2
+"stats collector" hot path): the source-major **region** layout vs the
+fused find-or-claim **hash** path (PR 1) vs the pre-fusion **twopass**
+reference — plus the region layout's state-size advantage.
+
+Two workloads per capacity, both at the engine's steady-state batch size:
+
+  * ``accum``  — every key already present (the accumulate-heavy steady
+    state): the hash path pays its probe rounds of random [C] gathers, the
+    region path ONE chain-depth round of contiguous W-wide tile gathers
+    (plus the qstore src lookup that names the region).
+  * ``fresh``  — every key new (a breaking-news burst): the hash path runs
+    claim rounds with per-round conflict sorts; the region path computes
+    append positions from fill counters with a single rank sort.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stores
+from repro.core.hashing import combine_fp_np, split_fp
+from .common import Row, time_fn
+
+Q_MODES = (("weight", "add"), ("count", "add"), ("last_tick", "set"))
+C_MODES = Q_MODES + (("src_hi", "set"), ("src_lo", "set"),
+                     ("dst_hi", "set"), ("dst_lo", "set"))
+R_MODES = Q_MODES
+
+# region geometry per cooc capacity: width grows with the expected pairs
+# per source so chains stay shallow (128 would be the TPU-tiled choice).
+WIDTHS = {16: 16, 18: 32, 20: 64}
+
+
+def build_stores(logc: int, n_queries: int = 4096, seed: int = 0,
+                 chain: int = 8):
+    """qstore + hash cooc + region cooc filled with the same ~25%-load pair
+    population (mirrors bench_ranking's setup)."""
+    cap = 1 << logc
+    n_pairs = cap // 4
+    rng = np.random.default_rng(seed)
+    q = stores.make_table(max(n_queries * 4, 1024), {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32})
+    qf = (rng.integers(1, 2**63, n_queries).astype(np.uint64)) | 1
+    qh, ql = split_fp(qf)
+    q = stores.insert_accumulate(
+        q, jnp.asarray(qh), jnp.asarray(ql),
+        {"weight": jnp.asarray(rng.random(n_queries, np.float32) * 50 + 1),
+         "count": jnp.asarray(
+             np.floor(rng.random(n_queries) * 100 + 1).astype(np.float32)),
+         "last_tick": jnp.zeros(n_queries, jnp.int32)},
+        jnp.ones(n_queries, bool), modes=Q_MODES)
+
+    a = qf[rng.integers(0, n_queries, n_pairs)]
+    b = qf[rng.integers(0, n_queries, n_pairs)]
+    ah, al = split_fp(a)
+    bh, bl = split_fp(b)
+    ph, pl = combine_fp_np(ah, al, bh, bl)
+    pw = (rng.random(n_pairs, np.float32) * 5 + 0.5)
+    pc = np.floor(rng.random(n_pairs) * 20 + 1).astype(np.float32)
+
+    hash_updates = {
+        "weight": jnp.asarray(pw), "count": jnp.asarray(pc),
+        "last_tick": jnp.zeros(n_pairs, jnp.int32),
+        "src_hi": jnp.asarray(ah), "src_lo": jnp.asarray(al),
+        "dst_hi": jnp.asarray(bh), "dst_lo": jnp.asarray(bl)}
+    c = stores.make_table(cap, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
+        "src_hi": jnp.uint32, "src_lo": jnp.uint32,
+        "dst_hi": jnp.uint32, "dst_lo": jnp.uint32})
+    c = stores.insert_accumulate(
+        c, jnp.asarray(ph), jnp.asarray(pl), hash_updates,
+        jnp.ones(n_pairs, bool), modes=C_MODES)
+
+    rt = stores.make_region_table(cap, WIDTHS[logc], q.capacity, chain, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32})
+    rt = stores.region_insert_accumulate(
+        rt, q, jnp.asarray(ah), jnp.asarray(al), jnp.asarray(bh),
+        jnp.asarray(bl),
+        {"weight": jnp.asarray(pw), "count": jnp.asarray(pc),
+         "last_tick": jnp.zeros(n_pairs, jnp.int32)},
+        jnp.ones(n_pairs, bool), modes=R_MODES)
+    return q, c, rt, (qf, ah, al, bh, bl, ph, pl)
+
+
+def _batch(rng, qf, B, fresh: bool):
+    """B pair events; ``fresh`` draws dsts outside the seeded population."""
+    n_queries = qf.shape[0]
+    a = qf[rng.integers(0, n_queries, B)]
+    if fresh:
+        b = (rng.integers(1, 2**63, B).astype(np.uint64)) | 1
+    else:
+        b = qf[rng.integers(0, n_queries, B)]
+    ah, al = split_fp(a)
+    bh, bl = split_fp(b)
+    ph, pl = combine_fp_np(ah, al, bh, bl)
+    return (jnp.asarray(ah), jnp.asarray(al), jnp.asarray(bh),
+            jnp.asarray(bl), jnp.asarray(ph), jnp.asarray(pl))
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    B = 8192
+    for logc in (16, 18):
+        cap = 1 << logc
+        q, c, rt, (qf, *_rest) = build_stores(logc, seed=logc)
+        rng = np.random.default_rng(logc + 99)
+        for mode in ("accum", "fresh"):
+            ah, al, bh, bl, ph, pl = _batch(rng, qf, B, mode == "fresh")
+            valid = jnp.ones(B, bool)
+            w = jnp.asarray(rng.random(B, np.float32) + 0.5)
+            cnt = jnp.ones(B, jnp.float32)
+            lt = jnp.zeros(B, jnp.int32)
+            hash_upd = {"weight": w, "count": cnt, "last_tick": lt,
+                        "src_hi": ah, "src_lo": al,
+                        "dst_hi": bh, "dst_lo": bl}
+            reg_upd = {"weight": w, "count": cnt, "last_tick": lt}
+            t_two = time_fn(lambda: stores.insert_accumulate_twopass(
+                c, ph, pl, hash_upd, valid, modes=C_MODES))
+            t_fused = time_fn(lambda: stores.insert_accumulate(
+                c, ph, pl, hash_upd, valid, modes=C_MODES))
+            t_reg = time_fn(lambda: stores.region_insert_accumulate(
+                rt, q, ah, al, bh, bl, reg_upd, valid, modes=R_MODES))
+            rows.append((f"insert_twopass_{mode}_c2e{logc}", t_two,
+                         f"B={B} pre-fusion reference"))
+            rows.append((f"insert_fused_{mode}_c2e{logc}", t_fused,
+                         f"B={B} fused find-or-claim; "
+                         f"x{t_two / max(t_fused, 1e-9):.2f} vs twopass"))
+            rows.append((f"insert_region_{mode}_c2e{logc}", t_reg,
+                         f"B={B} region layout (W={WIDTHS[logc]}); "
+                         f"x{t_fused / max(t_reg, 1e-9):.2f} vs fused"))
+        # state-size row: bytes per slot (keys + lanes + metadata)
+        hash_b = sum(np.asarray(x).nbytes for x in
+                     [c.key_hi, c.key_lo, *c.lanes.values()])
+        reg_b = sum(np.asarray(x).nbytes for x in
+                    [rt.key_hi, rt.key_lo, *rt.lanes.values(),
+                     rt.chain_region, rt.chain_hi, rt.chain_lo,
+                     rt.region_fill, rt.region_owner])
+        rows.append((f"state_bytes_c2e{logc}", float(reg_b),
+                     f"region {reg_b / cap:.1f} B/slot vs hash "
+                     f"{hash_b / cap:.1f} B/slot "
+                     f"(x{hash_b / reg_b:.2f} smaller)"))
+    return rows

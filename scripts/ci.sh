@@ -16,8 +16,10 @@ python -m pytest -x -q
 if [ "${SKIP_BENCH:-0}" != "1" ]; then
     mkdir -p results
     python -m benchmarks.run --json results/BENCH_engine.json engine_perf
-    # ranking smoke: lexsort-vs-segmented rows (the PR 2 fast path) must run
+    # ranking smoke: lexsort-vs-segmented + region-vs-segmented rows
     python -m benchmarks.run --json results/BENCH_ranking.json ranking
     # recovery smoke: crash -> restore -> catch-up replay must beat real time
     python -m benchmarks.run --json results/BENCH_recovery.json recovery
+    # store smoke: region-vs-fused-vs-twopass insert rows (the PR 4 layout)
+    python -m benchmarks.run --json results/BENCH_store.json store
 fi

@@ -44,7 +44,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .stores import HashTable
+from .stores import HashTable, RegionTable, region_chain_state
 
 EXP, LINEAR, STEP = "exp", "linear", "step"
 
@@ -153,7 +153,7 @@ def prune_sweep(
     cfg: DecayConfig,
     weight_lanes: Tuple[str, ...] = ("weight",),
     tick_lane: str = "last_tick",
-) -> Tuple[HashTable, jax.Array, jax.Array]:
+) -> Tuple[HashTable, jax.Array, jax.Array, jax.Array]:
     """Prune-only sweep for the **lazy** policy (runs at ``prune_every``).
 
     Materializes each entry's read-time decayed view (per-row factor from
@@ -164,9 +164,116 @@ def prune_sweep(
     (modulo f32 rounding); it exists to reclaim slots and bound the
     store's memory footprint (§4.4), not to apply decay.
 
-    Returns (table, live_count, total_weight-after), mirroring
-    :func:`sweep_decay_prune` so engines can swap cadences transparently.
+    Returns (table, live_count, total_weight-after, reclaimed_slots).
+    ``reclaimed_slots`` — how many live slots this sweep freed — is the
+    engine's freelist-pressure signal (surfaced through maintenance stats
+    into ``SuggestFrontend.metrics()``).
     """
+    live_before = jnp.sum(table.live_mask.astype(jnp.int32))
     f = cfg.factor(jnp.maximum(now - table.lanes[tick_lane], 0))
-    return _apply_decay_prune(table, f, cfg, weight_lanes,
-                              tick_override=now, tick_lane=tick_lane)
+    new, live, tot = _apply_decay_prune(table, f, cfg, weight_lanes,
+                                        tick_override=now,
+                                        tick_lane=tick_lane)
+    return new, live, tot, live_before - live
+
+
+# ---------------------------------------------------------------------------
+# Region-layout sweeps (source-major cooccurrence store).
+# ---------------------------------------------------------------------------
+
+def _region_sweep(table: RegionTable, qstore: HashTable, f, cfg: DecayConfig,
+                  weight_lanes: Tuple[str, ...], tick_override, tick_lane):
+    """Shared region sweep: decay + prune per slot, then restore the three
+    region-layout invariants — compact every region live-first (slot reuse
+    for later inserts), recount ``region_fill``, reclaim orphaned chains
+    (source pruned from the qstore, or its slot re-claimed by another
+    fingerprint), unlink emptied regions from their chains and return them
+    to the freelist. Returns (table, live, total_weight, reclaimed)."""
+    R, W, Q = table.n_regions, table.width, table.dir_slots
+    assert Q == qstore.capacity
+    lanes = dict(table.lanes)
+    primary = weight_lanes[0]
+    live = table.live_mask
+    live_before = jnp.sum(live.astype(jnp.int32))
+    decayed = {name: lanes[name] * f for name in weight_lanes}
+    keep = live & (decayed[primary] >= cfg.prune_threshold)
+
+    # chain validity vs the qstore: if the qstore no longer holds the
+    # recorded fp at a slot, the whole chain is dead (its source can never
+    # pass the ranking gates; a new slot owner starts a fresh chain).
+    _, ent_ok, referenced = region_chain_state(table, qstore)
+    ent = table.chain_region
+    keep = keep & jnp.repeat(referenced, W)
+
+    # apply decay/prune to lanes (cleared slots MUST zero every lane — a
+    # freed slot's last_tick feeds later rebase-on-write).
+    for name in weight_lanes:
+        lanes[name] = jnp.where(keep, decayed[name], 0.0)
+    if tick_override is not None:
+        lanes[tick_lane] = jnp.where(
+            keep, jnp.broadcast_to(
+                jnp.asarray(tick_override, lanes[tick_lane].dtype),
+                keep.shape),
+            jnp.zeros_like(lanes[tick_lane]))
+    for name, lane in lanes.items():
+        if name in weight_lanes or (tick_override is not None
+                                    and name == tick_lane):
+            continue
+        lanes[name] = jnp.where(keep, lane, jnp.zeros_like(lane))
+
+    # compact each region live-first (stable => insertion order kept).
+    keep2 = keep.reshape(R, W)
+    order = jnp.argsort(~keep2, axis=1, stable=True)
+    take = lambda a: jnp.take_along_axis(a.reshape(R, W), order,
+                                         axis=1).reshape(-1)
+    key_hi = take(jnp.where(keep, table.key_hi, 0))
+    key_lo = take(jnp.where(keep, table.key_lo, 0))
+    lanes = {name: take(lane) for name, lane in lanes.items()}
+    fill = jnp.sum(keep2.astype(jnp.int32), axis=1)
+    owner = jnp.where(fill > 0, table.region_owner, -1)
+
+    # unlink emptied regions; close the hole so chains stay a prefix.
+    fill_at_ent = jnp.where(ent_ok, fill[jnp.clip(ent, 0, R - 1)], 0)
+    ent_keep = ent_ok & (fill_at_ent > 0)
+    eorder = jnp.argsort(~ent_keep, axis=1, stable=True)
+    chain_region = jnp.take_along_axis(
+        jnp.where(ent_keep, ent, -1), eorder, axis=1)
+
+    new = table._replace(key_hi=key_hi, key_lo=key_lo, lanes=lanes,
+                         chain_region=chain_region, region_fill=fill,
+                         region_owner=owner)
+    live_after = jnp.sum(keep.astype(jnp.int32))
+    return new, live_after, jnp.sum(lanes[primary]), live_before - live_after
+
+
+@partial(jax.jit, static_argnames=("weight_lanes", "tick_lane", "cfg"))
+def region_prune_sweep(
+    table: RegionTable,
+    qstore: HashTable,
+    now: jax.Array,
+    *,
+    cfg: DecayConfig,
+    weight_lanes: Tuple[str, ...] = ("weight",),
+    tick_lane: str = "last_tick",
+) -> Tuple[RegionTable, jax.Array, jax.Array, jax.Array]:
+    """:func:`prune_sweep` for the region layout (lazy policy): per-slot
+    read-time decay materialization + prune, plus the region maintenance
+    of :func:`_region_sweep` (compaction, fill recount, orphan/empty
+    region reclamation). Returns (table, live, total_weight, reclaimed)."""
+    f = cfg.factor(jnp.maximum(now - table.lanes[tick_lane], 0))
+    return _region_sweep(table, qstore, f, cfg, weight_lanes, now, tick_lane)
+
+
+@partial(jax.jit, static_argnames=("weight_lanes", "cfg"))
+def region_decay_sweep(
+    table: RegionTable,
+    qstore: HashTable,
+    dticks: jax.Array,
+    *,
+    cfg: DecayConfig,
+    weight_lanes: Tuple[str, ...] = ("weight",),
+) -> Tuple[RegionTable, jax.Array, jax.Array, jax.Array]:
+    """:func:`sweep_decay_prune` for the region layout (eager policy):
+    scalar decay factor, same prune + region maintenance."""
+    return _region_sweep(table, qstore, cfg.factor(dticks), cfg,
+                         weight_lanes, None, "last_tick")

@@ -48,10 +48,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ranking, stores
-from .decay import DecayConfig, prune_sweep, sweep_decay_prune
+from .decay import (DecayConfig, prune_sweep, region_decay_sweep,
+                    region_prune_sweep, sweep_decay_prune)
 from .hashing import combine_fp_device, split_fp
 from .ranking import RankConfig, SuggestionTable
-from .stores import HashTable, SessionTable
+from .stores import HashTable, RegionTable, SessionTable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,10 +85,28 @@ class EngineConfig:
     decay: DecayConfig = DecayConfig()
     rank: RankConfig = RankConfig()
     use_kernel: bool = False           # fused Pallas decay/prune + scoring
+    # cooccurrence-store layout: "hash" = open addressing keyed by the pair
+    # fingerprint; "region" = source-major region layout (fixed-width
+    # per-source regions, chain directory indexed by qstore slot — see
+    # stores.RegionTable). The region layout makes every ranking bucket a
+    # pure reshape and drops the four endpoint lanes from the store.
+    cooc_layout: str = "hash"
+    region_width: int = 32             # pairs per region (128 on real TPUs)
+    region_chain: int = 8              # max spill-chain regions per source
+
+    def __post_init__(self):
+        if self.cooc_layout not in ("hash", "region"):
+            raise ValueError(
+                f"unknown cooc_layout {self.cooc_layout!r} "
+                f"(expected 'hash' or 'region')")
 
     @property
     def lazy_decay(self) -> bool:
         return self.decay.policy == "lazy"
+
+    @property
+    def region_cooc(self) -> bool:
+        return self.cooc_layout == "region"
 
 
 class EngineState(NamedTuple):
@@ -97,15 +116,27 @@ class EngineState(NamedTuple):
     tick: jax.Array  # i32
 
 
-def init_state(cfg: EngineConfig) -> EngineState:
-    qstore = stores.make_table(cfg.query_capacity, {
-        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
-    })
-    cooc = stores.make_table(cfg.cooc_capacity, {
+def make_cooc_store(cfg: EngineConfig, capacity: Optional[int] = None):
+    """The cooccurrence store under ``cfg.cooc_layout`` (``capacity``
+    overrides ``cfg.cooc_capacity`` — the sharded engine divides it)."""
+    cap = capacity if capacity is not None else cfg.cooc_capacity
+    if cfg.region_cooc:
+        return stores.make_region_table(
+            cap, cfg.region_width, cfg.query_capacity, cfg.region_chain, {
+                "weight": jnp.float32, "count": jnp.float32,
+                "last_tick": jnp.int32})
+    return stores.make_table(cap, {
         "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
         "src_hi": jnp.uint32, "src_lo": jnp.uint32,
         "dst_hi": jnp.uint32, "dst_lo": jnp.uint32,
     })
+
+
+def init_state(cfg: EngineConfig) -> EngineState:
+    qstore = stores.make_table(cfg.query_capacity, {
+        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
+    })
+    cooc = make_cooc_store(cfg)
     sessions = stores.make_session_table(cfg.session_capacity, cfg.session_window)
     return EngineState(qstore, cooc, sessions, jnp.zeros((), jnp.int32))
 
@@ -118,6 +149,29 @@ _Q_MODES = (("weight", "add"), ("count", "add"), ("last_tick", "set"))
 _C_MODES = (("weight", "add"), ("count", "add"), ("last_tick", "set"),
             ("src_hi", "set"), ("src_lo", "set"),
             ("dst_hi", "set"), ("dst_lo", "set"))
+_R_MODES = _Q_MODES   # region layout: endpoints live in keys/directory
+
+
+def cooc_insert_pairs(cooc, qstore: HashTable, src_hi, src_lo, dst_hi,
+                      dst_lo, w_pair, valid, tick, cfg: EngineConfig, dkw):
+    """Layout dispatch for one micro-batch of (src -> dst) pair updates —
+    shared by the query path, the tweet path and the sharded engine."""
+    P = src_hi.shape[0]
+    count = jnp.ones((P,), jnp.float32)
+    lt = jnp.full((P,), tick, jnp.int32)
+    if cfg.region_cooc:
+        return stores.region_insert_accumulate(
+            cooc, qstore, src_hi, src_lo, dst_hi, dst_lo,
+            {"weight": w_pair, "count": count, "last_tick": lt},
+            valid, modes=_R_MODES, probe_rounds=cfg.probe_rounds,
+            use_kernel=cfg.use_kernel, **dkw)
+    p_hi, p_lo = combine_fp_device(src_hi, src_lo, dst_hi, dst_lo)
+    return stores.insert_accumulate(
+        cooc, p_hi, p_lo,
+        {"weight": w_pair, "count": count, "last_tick": lt,
+         "src_hi": src_hi, "src_lo": src_lo,
+         "dst_hi": dst_hi, "dst_lo": dst_lo},
+        valid, modes=_C_MODES, probe_rounds=cfg.probe_rounds, **dkw)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -149,16 +203,9 @@ def ingest_queries(
     w_src = sw[jnp.clip(pairs.src_code, 0, len(cfg.source_weights) - 1)]
     w_dst = sw[jnp.clip(pairs.dst_code, 0, len(cfg.source_weights) - 1)]
     w_pair = jnp.sqrt(w_src * w_dst)
-    p_hi, p_lo = combine_fp_device(pairs.src_hi, pairs.src_lo,
-                                   pairs.dst_hi, pairs.dst_lo)
-    P = p_hi.shape[0]
-    cooc = stores.insert_accumulate(
-        state.cooc, p_hi, p_lo,
-        {"weight": w_pair, "count": jnp.ones((P,), jnp.float32),
-         "last_tick": jnp.full((P,), state.tick, jnp.int32),
-         "src_hi": pairs.src_hi, "src_lo": pairs.src_lo,
-         "dst_hi": pairs.dst_hi, "dst_lo": pairs.dst_lo},
-        pairs.valid, modes=_C_MODES, probe_rounds=cfg.probe_rounds, **dkw)
+    cooc = cooc_insert_pairs(state.cooc, qstore, pairs.src_hi, pairs.src_lo,
+                             pairs.dst_hi, pairs.dst_lo, w_pair, pairs.valid,
+                             state.tick, cfg, dkw)
 
     return EngineState(qstore, cooc, sessions, state.tick)
 
@@ -195,15 +242,11 @@ def ingest_tweets(
     ok = (ql[:, :, None] & ql[:, None, :]).reshape(-1)
     same = (src_hi == dst_hi) & (src_lo == dst_lo)
     ok = ok & ~same
-    p_hi, p_lo = combine_fp_device(src_hi, src_lo, dst_hi, dst_lo)
-    P = p_hi.shape[0]
-    cooc = stores.insert_accumulate(
-        state.cooc, p_hi, p_lo,
-        {"weight": jnp.full((P,), cfg.tweet_weight, jnp.float32),
-         "count": jnp.ones((P,), jnp.float32),
-         "last_tick": jnp.full((P,), state.tick, jnp.int32),
-         "src_hi": src_hi, "src_lo": src_lo, "dst_hi": dst_hi, "dst_lo": dst_lo},
-        ok, modes=_C_MODES, probe_rounds=cfg.probe_rounds, **dkw)
+    P = src_hi.shape[0]
+    cooc = cooc_insert_pairs(
+        state.cooc, qstore, src_hi, src_lo, dst_hi, dst_lo,
+        jnp.full((P,), cfg.tweet_weight, jnp.float32), ok, state.tick,
+        cfg, dkw)
     return EngineState(qstore, cooc, state.sessions, state.tick)
 
 
@@ -216,12 +259,20 @@ def decay_cycle(state: EngineState, dticks: jax.Array, *, cfg: EngineConfig
     qstore, q_live, q_tot = sweep_decay_prune(
         state.qstore, dticks, cfg=cfg.decay, weight_lanes=("weight",),
         use_kernel=cfg.use_kernel)
-    cooc, c_live, c_tot = sweep_decay_prune(
-        state.cooc, dticks, cfg=cfg.decay, weight_lanes=("weight",),
-        use_kernel=cfg.use_kernel)
+    stats: Dict[str, jax.Array] = {"q_live": q_live, "q_total_w": q_tot}
+    if cfg.region_cooc:
+        # region maintenance validates chains against the post-sweep
+        # qstore, so chains of just-pruned sources free immediately.
+        cooc, c_live, c_tot, c_rec = region_decay_sweep(
+            state.cooc, qstore, dticks, cfg=cfg.decay)
+        stats["c_reclaimed"] = c_rec
+        stats["c_free_regions"] = cooc.free_regions()
+    else:
+        cooc, c_live, c_tot = sweep_decay_prune(
+            state.cooc, dticks, cfg=cfg.decay, weight_lanes=("weight",),
+            use_kernel=cfg.use_kernel)
     sessions = stores.evict_sessions(state.sessions, state.tick, cfg.session_ttl)
-    stats = {"q_live": q_live, "q_total_w": q_tot,
-             "c_live": c_live, "c_total_w": c_tot}
+    stats.update({"c_live": c_live, "c_total_w": c_tot})
     return EngineState(qstore, cooc, sessions, state.tick), stats
 
 
@@ -241,12 +292,23 @@ def evict_sessions_cycle(state: EngineState, *, cfg: EngineConfig
 def prune_cycle(state: EngineState, *, cfg: EngineConfig
                 ) -> Tuple[EngineState, Dict[str, jax.Array]]:
     """Lazy policy's slow-cadence maintenance: prune-only sweep (decay is
-    amortized into reads/writes), every ``prune_every`` ticks."""
-    qstore, q_live, q_tot = prune_sweep(state.qstore, state.tick, cfg=cfg.decay)
-    cooc, c_live, c_tot = prune_sweep(state.cooc, state.tick, cfg=cfg.decay)
+    amortized into reads/writes), every ``prune_every`` ticks. Stats
+    report the reclaimed-slot counts (and, under the region layout, the
+    freelist pressure) so the engine can surface them to the frontends."""
+    qstore, q_live, q_tot, q_rec = prune_sweep(state.qstore, state.tick,
+                                               cfg=cfg.decay)
+    if cfg.region_cooc:
+        cooc, c_live, c_tot, c_rec = region_prune_sweep(
+            state.cooc, qstore, state.tick, cfg=cfg.decay)
+    else:
+        cooc, c_live, c_tot, c_rec = prune_sweep(state.cooc, state.tick,
+                                                 cfg=cfg.decay)
     sessions = stores.evict_sessions(state.sessions, state.tick, cfg.session_ttl)
     stats = {"q_live": q_live, "q_total_w": q_tot,
-             "c_live": c_live, "c_total_w": c_tot}
+             "c_live": c_live, "c_total_w": c_tot,
+             "q_reclaimed": q_rec, "c_reclaimed": c_rec}
+    if cfg.region_cooc:
+        stats["c_free_regions"] = cooc.free_regions()
     return EngineState(qstore, cooc, sessions, state.tick), stats
 
 
@@ -402,6 +464,9 @@ class SearchAssistanceEngine:
         self.n_rank_cycles = 0
         self.n_decay_cycles = 0
         self.n_prune_cycles = 0
+        # last maintenance-cycle stats (reclaimed slots, freelist
+        # pressure); rides into snapshot meta -> SuggestFrontend.metrics().
+        self.last_maintenance: Dict[str, float] = {}
 
     # ---- ingestion ----
     def step(self, query_events=None, tweets=None) -> Optional[Dict]:
@@ -432,10 +497,12 @@ class SearchAssistanceEngine:
         elif due == "prune":   # prune_cycle evicts sessions itself
             self.state, stats = prune_cycle(self.state, cfg=self.cfg)
             self.n_prune_cycles += 1
+            self.last_maintenance = {k: float(v) for k, v in stats.items()}
         elif due == "decay":
             self.state, stats = decay_cycle(
                 self.state, jnp.int32(self.cfg.decay_every), cfg=self.cfg)
             self.n_decay_cycles += 1
+            self.last_maintenance = {k: float(v) for k, v in stats.items()}
         if self.cfg.rank_every > 0 and tick > 0 and tick % self.cfg.rank_every == 0:
             out = self.run_rank_cycle()
         self.state = advance_tick(self.state)
@@ -444,8 +511,10 @@ class SearchAssistanceEngine:
     def run_rank_cycle(self) -> Dict:
         dkw = (dict(decay_cfg=self.cfg.decay, now=self.state.tick)
                if self.cfg.lazy_decay else {})
-        table = ranking.ranking_cycle(self.state.cooc, self.state.qstore,
-                                      self.cfg.rank, **dkw)
+        cycle = (ranking.ranking_cycle_region if self.cfg.region_cooc
+                 else ranking.ranking_cycle)
+        table = cycle(self.state.cooc, self.state.qstore,
+                      self.cfg.rank, **dkw)
         self.suggestions = ranking.suggestions_to_host(table)
         self.last_rank_tick = int(self.state.tick)
         self.n_rank_cycles += 1
@@ -482,7 +551,10 @@ class SearchAssistanceEngine:
         this snapshot left off.
         """
         tick = int(self.state.tick)
-        meta = {"log_tick": tick, "engine": self.name}
+        meta = {"log_tick": tick, "engine": self.name,
+                "layout": self.cfg.cooc_layout}
+        if self.last_maintenance:
+            meta["maintenance"] = self.last_maintenance
         if extra_meta:
             meta.update(extra_meta)
         return ckpt.save(tick, self.state, meta=meta)

@@ -12,7 +12,21 @@ Score lanes (all named in §2.4):
   * log-likelihood ratio             Dunning's G² over the 2x2 count table
   * chi-squared                      χ² over the same 2x2 table
 
-Selection — two implementations of the same per-source top-k contract:
+Selection — three implementations of the same per-source top-k contract:
+
+  * :func:`ranking_cycle_region` — **region layout** (source-major store,
+    see ``stores.RegionTable``). The store is already partitioned into
+    per-source regions at insert time, so the ``[n_regions, width]``
+    bucket grid is a **pure reshape** of the live table: no prefix-sum
+    compaction, no grouping sort, no gathers before selection. Source
+    marginals come from ONE direct index per region (region id = qstore
+    slot — no per-pair qstore probing for the source side), per-region
+    top-k reads the grid rows straight from HBM tiles (``lax.top_k`` or
+    the fused ``kernels/topk_select.region_rank`` Pallas pass), and a
+    source's spill-chain regions are merged by a second tiny top-k over
+    ``max_chain * K`` candidates. Every live pair is in exactly one
+    region, so selection itself never cuts: ``n_overflow`` counts only
+    gate-passing pairs of sources beyond the ``max_sources`` cap.
 
   * :func:`ranking_cycle` (default) — **segmented top-k**. Every
     gate-passing pair is bucketed by its *source query's qstore slot* (the
@@ -57,7 +71,7 @@ import numpy as np
 
 from . import stores
 from .decay import lazy_decayed
-from .stores import HashTable
+from .stores import HashTable, RegionTable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,9 +102,16 @@ class RankConfig:
     # segmented path: per-bucket arena width L — a source's gate-passing
     # rows beyond its L coarse-score-best are cut and counted.
     bucket_rows: int = 64
-    # segmented path: max sources emitted per cycle (grid height cap;
-    # sources beyond it are cut and counted).
-    max_sources: int = 1 << 14
+    # max sources emitted per cycle (grid height cap; sources beyond it are
+    # cut and counted in n_overflow). 0 (the default) derives the cap from
+    # the query store's capacity — a store can never hold more live sources
+    # than qstore slots, so the derived cap cuts nothing while a fixed
+    # default would silently cap large stores at its value.
+    max_sources: int = 0
+
+    def source_cap(self, qstore_capacity: int) -> int:
+        return (self.max_sources if self.max_sources > 0
+                else qstore_capacity)
 
 
 def _xlogx(x):
@@ -278,7 +299,7 @@ def ranking_cycle(
 
     # ---- dense [R, L] bucket grid, built by gathers only. run_id is
     # non-decreasing, so run starts come from a vectorized binary search. --
-    R = min(Q, M, max(cfg.max_sources, 1))
+    R = min(Q, M, max(cfg.source_cap(Q), 1))
     run_start = jnp.searchsorted(run_id, jnp.arange(R + 1, dtype=jnp.int32)
                                  ).astype(jnp.int32)
     cell = run_start[:R, None] + jnp.arange(L, dtype=jnp.int32)[None, :]
@@ -386,6 +407,142 @@ def ranking_cycle_lexsort(
     out_score = jnp.zeros((M, K), jnp.float32).at[r_idx, p_idx].set(
         jnp.where(keep, s_score, 0.0), mode="drop")
     n_rows = jnp.sum((is_new & s_ok).astype(jnp.int32))
+    return SuggestionTable(out_src_hi, out_src_lo, out_dst_hi, out_dst_lo,
+                           out_score, n_rows, n_overflow)
+
+
+@partial(jax.jit, static_argnames=("cfg", "decay_cfg"))
+def ranking_cycle_region(
+    cooc: RegionTable,
+    qstore: HashTable,
+    cfg: RankConfig,
+    *,
+    decay_cfg=None,
+    now=None,
+) -> SuggestionTable:
+    """One full ranking cycle over the **source-major region layout**.
+
+    The bucket grid is ``score.reshape(n_regions, width)`` — a pure view
+    of the live table, built with zero sorts, zero compaction scatters and
+    zero pre-selection gathers. Source marginals are read by direct index
+    (region id = qstore slot), destination marginals by one batched qstore
+    lookup over the key lanes. Selection is per-region top-k (grid rows
+    stream straight from HBM; ``cfg.use_kernel`` routes the fused
+    score+gate+select Pallas pass in ``kernels/topk_select.region_rank``)
+    followed by a per-source merge of the spill chain's ``max_chain * K``
+    candidates. Tie order (documented): within a region, the lower slot
+    position wins (insertion order); across a chain, the earlier chain
+    region wins — both may differ from the segmented path's coarse-score
+    arena order on exact ties.
+
+    Every live pair sits in exactly one region, so selection never cuts;
+    ``n_overflow`` counts gate-passing pairs of sources beyond
+    ``cfg.max_sources`` (derived from the qstore capacity by default,
+    i.e. normally zero).
+    """
+    C, R, W, MC = cooc.capacity, cooc.n_regions, cooc.width, cooc.max_chain
+    Q = cooc.dir_slots
+    K = cfg.top_k
+    assert Q == qstore.capacity, "directory must be indexed by qstore slot"
+
+    live = cooc.live_mask
+    w_ab = cooc.lanes["weight"]
+    c_ab = cooc.lanes["count"]
+
+    # dst marginals: the key lanes ARE the destination fingerprints.
+    dkw = dict(decay_cfg=decay_cfg, now=now) if decay_cfg is not None else {}
+    dst_vals, dst_found, _ = stores.lookup(qstore, cooc.key_hi, cooc.key_lo,
+                                           **dkw)
+    if decay_cfg is not None:
+        total_w = jnp.sum(lazy_decayed(decay_cfg, qstore.lanes["weight"],
+                                       qstore.lanes["last_tick"], now))
+    else:
+        total_w = jnp.sum(qstore.lanes["weight"])
+    total_c = jnp.sum(qstore.lanes["count"])
+
+    # src marginals: ONE direct index per region — no per-pair probing.
+    # region_chain_state is the ONE statement of chain validity (shared
+    # with the sweeps in decay.py).
+    row_valid, ent_ok, referenced = stores.region_chain_state(cooc, qstore)
+    ent = cooc.chain_region
+    o = jnp.clip(cooc.region_owner, 0, Q - 1)
+    w_a_r = qstore.lanes["weight"][o]
+    c_a_r = qstore.lanes["count"][o]
+    if decay_cfg is not None:
+        w_a_r = lazy_decayed(decay_cfg, w_a_r,
+                             qstore.lanes["last_tick"][o], now)
+
+    # ---- [R, W] grid scoring: the pure-reshape bucket grid. ----
+    shape = (R, W)
+    w_ab2 = w_ab.reshape(shape)
+    c_ab2 = c_ab.reshape(shape)
+    w_b2 = dst_vals["weight"].reshape(shape)
+    c_b2 = dst_vals["count"].reshape(shape)
+    base_ok = (live & dst_found).reshape(shape) & referenced[:, None]
+    w_a_b = jnp.broadcast_to(w_a_r[:, None], shape)
+    c_a_b = jnp.broadcast_to(c_a_r[:, None], shape)
+    # a single region holds at most W pairs: per-region selection takes
+    # min(K, W) winners and the chain merge below restores K (a source's
+    # top-k beyond W can only come from its spill regions).
+    K1 = min(K, W)
+    if cfg.use_kernel:
+        from ..kernels import ops as kops
+        vals, args, npass_r = kops.region_rank(
+            w_ab2, c_ab2, w_a_b, w_b2, c_a_b, c_b2, base_ok, total_w,
+            total_c, k=K1,
+            coefs=(cfg.coef_condprob, cfg.coef_pmi, cfg.coef_llr,
+                   cfg.coef_chi2),
+            min_pair_weight=cfg.min_pair_weight,
+            min_src_weight=cfg.min_src_weight,
+            min_pair_count=cfg.min_pair_count,
+            decay_cfg=decay_cfg,
+            last_tick=cooc.lanes["last_tick"].reshape(shape), now=now)
+    else:
+        w_eff = w_ab2 if decay_cfg is None else lazy_decayed(
+            decay_cfg, w_ab, cooc.lanes["last_tick"], now).reshape(shape)
+        lanes_s = assoc_scores_jnp(w_eff, c_ab2, w_a_b, w_b2, c_a_b, c_b2,
+                                   total_w, total_c)
+        score = combine_scores(cfg, *lanes_s)
+        pass_mask = base_ok & (w_eff >= cfg.min_pair_weight) \
+            & (c_ab2 >= cfg.min_pair_count) \
+            & (w_a_b >= cfg.min_src_weight)
+        grid = jnp.where(pass_mask, score, -jnp.inf)
+        vals, args = jax.lax.top_k(grid, K1)
+        npass_r = jnp.sum(pass_mask.astype(jnp.int32), axis=1)
+
+    # ---- per-source chain merge: top-k over max_chain * K candidates. --
+    S = min(Q, R, max(cfg.source_cap(Q), 1))
+    act = row_valid
+    posq = jnp.cumsum(act.astype(jnp.int32)) - 1
+    slot_of_row = jnp.full((S,), Q, jnp.int32).at[
+        jnp.where(act & (posq < S), posq, S)].set(
+        jnp.arange(Q, dtype=jnp.int32), mode="drop")
+    has_slot = slot_of_row < Q
+    slot_safe = jnp.where(has_slot, slot_of_row, 0)
+    ch = jnp.where(has_slot[:, None], cooc.chain_region[slot_safe], -1)
+    cand = jnp.where((ch >= 0)[:, :, None],
+                     vals[jnp.clip(ch, 0, R - 1)],
+                     -jnp.inf).reshape(S, MC * K1)
+    if MC * K1 < K:   # K exceeds the whole chain's candidate pool
+        cand = jnp.pad(cand, ((0, 0), (0, K - MC * K1)),
+                       constant_values=-jnp.inf)
+    fvals, fidx = jax.lax.top_k(cand, K)
+    depth = jnp.minimum(fidx // K1, MC - 1)
+    reg_w = jnp.take_along_axis(ch, depth, axis=1)
+    col = args[jnp.clip(reg_w, 0, R - 1), fidx % K1]
+    gslot = jnp.clip(reg_w, 0, R - 1) * W + jnp.clip(col, 0, W - 1)
+    good = fvals > -jnp.inf
+    out_dst_hi = jnp.where(good, cooc.key_hi[gslot], jnp.uint32(0))
+    out_dst_lo = jnp.where(good, cooc.key_lo[gslot], jnp.uint32(0))
+    out_score = jnp.where(good, fvals, 0.0)
+    has_out = jnp.any(good, axis=1)
+    out_src_hi = jnp.where(has_out, cooc.chain_hi[slot_safe], jnp.uint32(0))
+    out_src_lo = jnp.where(has_out, cooc.chain_lo[slot_safe], jnp.uint32(0))
+    n_rows = jnp.sum(has_out.astype(jnp.int32))
+
+    npass_row = jnp.sum(jnp.where(ent_ok, npass_r[jnp.clip(ent, 0, R - 1)],
+                                  0), axis=1)
+    n_overflow = jnp.sum(jnp.where(act & (posq >= S), npass_row, 0))
     return SuggestionTable(out_src_hi, out_src_lo, out_dst_hi, out_dst_lo,
                            out_score, n_rows, n_overflow)
 

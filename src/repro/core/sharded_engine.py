@@ -38,9 +38,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import ranking, stores
-from .decay import prune_sweep, sweep_decay_prune
-from .engine import EngineConfig, maintenance_cadence, _Q_MODES, _C_MODES
-from .hashing import combine_fp_device, probe_hash, split_fp
+from .decay import (prune_sweep, region_decay_sweep, region_prune_sweep,
+                    sweep_decay_prune)
+from .engine import (EngineConfig, cooc_insert_pairs, maintenance_cadence,
+                     make_cooc_store, _Q_MODES)
+from .hashing import probe_hash
 from .ranking import RankConfig, SuggestionTable
 from .stores import HashTable, SessionTable
 
@@ -65,12 +67,15 @@ def _stack_shards(tree, n):
     """Concatenate n per-shard tables along dim 0 (shard_map blocks dim 0).
 
     Scalars (per-shard counters) become shape (n,) -> (1,) per device.
-    All stores start zeroed, so fresh zeros of the stacked shape suffice.
+    Every shard starts as a copy of the freshly initialized per-shard
+    table — broadcast+reshape == n concatenated copies, which preserves
+    non-zero initial values (the region layout's -1 sentinels).
     """
     def f(x):
         if x.ndim == 0:
-            return jnp.zeros((n,), x.dtype)
-        return jnp.zeros((n * x.shape[0],) + x.shape[1:], x.dtype)
+            return jnp.broadcast_to(x, (n,))
+        return jnp.broadcast_to(x, (n,) + x.shape).reshape(
+            (n * x.shape[0],) + x.shape[1:])
     return jax.tree.map(f, tree)
 
 
@@ -80,10 +85,9 @@ def init_sharded_state(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"
     base = cfg.base
     qstore = stores.make_table(base.query_capacity, {
         "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32})
-    cooc = stores.make_table(base.cooc_capacity // n, {
-        "weight": jnp.float32, "count": jnp.float32, "last_tick": jnp.int32,
-        "src_hi": jnp.uint32, "src_lo": jnp.uint32,
-        "dst_hi": jnp.uint32, "dst_lo": jnp.uint32})
+    # region layout: each shard gets its own region pool + a full-Q chain
+    # directory (the qstore is replicated, so slot ids are global).
+    cooc = make_cooc_store(base, capacity=base.cooc_capacity // n)
     sessions = stores.make_session_table(base.session_capacity // n,
                                          base.session_window)
     return ShardedState(
@@ -187,17 +191,10 @@ def _ingest_body(cfg: ShardedConfig, n: int, axis: str):
         r_hi, r_lo, r_pl, r_valid, drop = _route(
             pairs.src_hi, pairs.src_lo, owner, payload, pairs.valid,
             n, cfg.route_capacity, axis)
-        # pair key for the store: combine(src, dst)
-        p_hi, p_lo = combine_fp_device(r_pl["src_hi"], r_pl["src_lo"],
-                                       r_pl["dst_hi"], r_pl["dst_lo"])
-        Pn = p_hi.shape[0]
-        cooc = stores.insert_accumulate(
-            state.cooc, p_hi, p_lo,
-            {"weight": r_pl["w"], "count": jnp.ones((Pn,), jnp.float32),
-             "last_tick": jnp.full((Pn,), state.tick, jnp.int32),
-             "src_hi": r_pl["src_hi"], "src_lo": r_pl["src_lo"],
-             "dst_hi": r_pl["dst_hi"], "dst_lo": r_pl["dst_lo"]},
-            r_valid, modes=_C_MODES, probe_rounds=base.probe_rounds, **dkw)
+        cooc = cooc_insert_pairs(
+            state.cooc, qstore, r_pl["src_hi"], r_pl["src_lo"],
+            r_pl["dst_hi"], r_pl["dst_lo"], r_pl["w"], r_valid, state.tick,
+            base, dkw)
 
         return ShardedState(qstore, cooc, sessions, state.tick,
                             state.n_route_drop + drop[None])
@@ -210,7 +207,7 @@ def make_sharded_step(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
     n = mesh.shape[axis]
     body = _ingest_body(cfg, n, axis)
     rep = P()
-    state_spec = _state_spec(axis)
+    state_spec = _state_spec(cfg, axis)
     fn = shard_map(body, mesh=mesh,
                    in_specs=(state_spec, rep, rep, rep, rep, rep, rep),
                    out_specs=state_spec,
@@ -232,17 +229,25 @@ def _tick_maintenance(state: ShardedState, base: EngineConfig
         return s._replace(sessions=sessions)
 
     def prune_fn(s: ShardedState) -> ShardedState:
-        qstore, _, _ = prune_sweep(s.qstore, s.tick, cfg=base.decay)
-        cooc, _, _ = prune_sweep(s.cooc, s.tick, cfg=base.decay)
+        qstore, _, _, _ = prune_sweep(s.qstore, s.tick, cfg=base.decay)
+        if base.region_cooc:
+            cooc, _, _, _ = region_prune_sweep(s.cooc, qstore, s.tick,
+                                               cfg=base.decay)
+        else:
+            cooc, _, _, _ = prune_sweep(s.cooc, s.tick, cfg=base.decay)
         return evict_only(s._replace(qstore=qstore, cooc=cooc))
 
     def decay_fn(s: ShardedState) -> ShardedState:
         qstore, _, _ = sweep_decay_prune(
             s.qstore, jnp.int32(base.decay_every), cfg=base.decay,
             use_kernel=base.use_kernel)
-        cooc, _, _ = sweep_decay_prune(
-            s.cooc, jnp.int32(base.decay_every), cfg=base.decay,
-            use_kernel=base.use_kernel)
+        if base.region_cooc:
+            cooc, _, _, _ = region_decay_sweep(
+                s.cooc, qstore, jnp.int32(base.decay_every), cfg=base.decay)
+        else:
+            cooc, _, _ = sweep_decay_prune(
+                s.cooc, jnp.int32(base.decay_every), cfg=base.decay,
+                use_kernel=base.use_kernel)
         return evict_only(s._replace(qstore=qstore, cooc=cooc))
 
     return maintenance_cadence(state, state.tick, base,
@@ -266,7 +271,7 @@ def make_sharded_tick_step(cfg: ShardedConfig, mesh: Mesh,
         return state._replace(tick=state.tick + 1)
 
     rep = P()
-    state_spec = _state_spec(axis)
+    state_spec = _state_spec(cfg, axis)
     fn = shard_map(body, mesh=mesh,
                    in_specs=(state_spec, rep, rep, rep, rep, rep, rep),
                    out_specs=state_spec, check_rep=False)
@@ -301,7 +306,7 @@ def make_sharded_ingest_many(cfg: ShardedConfig, mesh: Mesh,
         return state
 
     rep = P()
-    state_spec = _state_spec(axis)
+    state_spec = _state_spec(cfg, axis)
     fn = shard_map(many, mesh=mesh,
                    in_specs=(state_spec, rep, rep, rep, rep, rep, rep),
                    out_specs=state_spec, check_rep=False)
@@ -317,23 +322,32 @@ def make_sharded_decay(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
         # the lazy policy this degrades to the prune-only sweep (run it at
         # the prune_every cadence, not decay_every).
         if base.lazy_decay:
-            qstore, _, _ = prune_sweep(state.qstore, state.tick,
-                                       cfg=base.decay)
-            cooc, _, _ = prune_sweep(state.cooc, state.tick, cfg=base.decay)
+            qstore, _, _, _ = prune_sweep(state.qstore, state.tick,
+                                          cfg=base.decay)
+            if base.region_cooc:
+                cooc, _, _, _ = region_prune_sweep(
+                    state.cooc, qstore, state.tick, cfg=base.decay)
+            else:
+                cooc, _, _, _ = prune_sweep(state.cooc, state.tick,
+                                            cfg=base.decay)
         else:
             qstore, _, _ = sweep_decay_prune(
                 state.qstore, dticks, cfg=base.decay,
                 use_kernel=base.use_kernel)
-            cooc, _, _ = sweep_decay_prune(
-                state.cooc, dticks, cfg=base.decay,
-                use_kernel=base.use_kernel)
+            if base.region_cooc:
+                cooc, _, _, _ = region_decay_sweep(
+                    state.cooc, qstore, dticks, cfg=base.decay)
+            else:
+                cooc, _, _ = sweep_decay_prune(
+                    state.cooc, dticks, cfg=base.decay,
+                    use_kernel=base.use_kernel)
         sessions = stores.evict_sessions(state.sessions, state.tick,
                                          base.session_ttl)
         return ShardedState(qstore, cooc, sessions, state.tick + 0,
                             state.n_route_drop)
 
     rep, sh = P(), P(axis)
-    state_spec = _state_spec(axis)
+    state_spec = _state_spec(cfg, axis)
     fn = shard_map(body, mesh=mesh, in_specs=(state_spec, rep),
                    out_specs=state_spec, check_rep=False)
     return jax.jit(fn)
@@ -343,12 +357,13 @@ def make_sharded_rank(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
     def body(state: ShardedState):
         dkw = (dict(decay_cfg=cfg.base.decay, now=state.tick)
                if cfg.base.lazy_decay else {})
-        t = ranking.ranking_cycle(state.cooc, state.qstore, cfg.base.rank,
-                                  **dkw)
+        cycle = (ranking.ranking_cycle_region if cfg.base.region_cooc
+                 else ranking.ranking_cycle)
+        t = cycle(state.cooc, state.qstore, cfg.base.rank, **dkw)
         # scalars -> (1,) per shard
         return t._replace(n_rows=t.n_rows[None], n_overflow=t.n_overflow[None])
 
-    state_spec = _state_spec(axis)
+    state_spec = _state_spec(cfg, axis)
     out_spec = SuggestionTable(*([P(axis)] * 5), n_rows=P(axis),
                                n_overflow=P(axis))
     fn = shard_map(body, mesh=mesh, in_specs=(state_spec,),
@@ -356,17 +371,23 @@ def make_sharded_rank(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
     return jax.jit(fn)
 
 
-def _state_spec(axis: str) -> ShardedState:
+def _state_spec(cfg: ShardedConfig, axis: str) -> ShardedState:
     rep, sh = P(), P(axis)
+    if cfg.base.region_cooc:
+        cooc_tmpl = stores.make_region_table(4, 2, 2, 2, {
+            "weight": jnp.float32, "count": jnp.float32,
+            "last_tick": jnp.int32})
+    else:
+        cooc_tmpl = stores.make_table(
+            2, {"weight": jnp.float32, "count": jnp.float32,
+                "last_tick": jnp.int32, "src_hi": jnp.uint32,
+                "src_lo": jnp.uint32, "dst_hi": jnp.uint32,
+                "dst_lo": jnp.uint32})
     return ShardedState(
         qstore=jax.tree.map(lambda _: rep, stores.make_table(
             2, {"weight": jnp.float32, "count": jnp.float32,
                 "last_tick": jnp.int32})),
-        cooc=jax.tree.map(lambda _: sh, stores.make_table(
-            2, {"weight": jnp.float32, "count": jnp.float32,
-                "last_tick": jnp.int32, "src_hi": jnp.uint32,
-                "src_lo": jnp.uint32, "dst_hi": jnp.uint32,
-                "dst_lo": jnp.uint32})),
+        cooc=jax.tree.map(lambda _: sh, cooc_tmpl),
         sessions=jax.tree.map(lambda _: sh, stores.make_session_table(2, 2)),
         tick=rep,
         n_route_drop=sh,

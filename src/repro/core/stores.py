@@ -24,6 +24,34 @@ tables laid out as dense JAX arrays** updated by *micro-batches* of events:
   * keys that fail to place after K rounds are *dropped and counted* — the
     paper's engine likewise rate-limits/prunes to bound memory (§4.4).
 
+**Source-major region layout** (:class:`RegionTable`): the cooccurrence
+store can alternatively be partitioned into fixed-width per-source
+*regions*, organized for the query it serves — per-source top-k (§4).
+Invariants (the region-layout contract, relied on by ``ranking.py``,
+``decay.py`` and the checkpoint/replay path):
+
+  * **region id = source qstore slot**: the chain *directory* is indexed by
+    the source query's qstore slot (``chain_region[slot]`` lists the pool
+    regions owned by the source whose fingerprint is ``chain_hi/lo[slot]``;
+    the fingerprint detects slot reuse after qstore pruning). A ranking
+    bucket is therefore known at *insert* time — no per-cycle grouping
+    sort, the ``[n_regions, width]`` bucket grid is a pure reshape.
+  * **spill chain order**: a source's regions are ordered by directory
+    position (depth 0 = primary, then spill regions in allocation order);
+    within a region, pairs sit at positions ``[0, fill)`` in insertion
+    order (dedup-sorted order within a batch). Inserts append into the
+    first region with a free tail slot, in chain order.
+  * **freelist lifecycle**: regions with ``region_owner < 0`` are free;
+    allocation claims them in ascending region-id order (deterministic).
+    The prune/decay sweeps compact every region live-first, recount
+    ``region_fill``, unlink emptied regions from their chain (closing the
+    hole so the chain stays a prefix), clear *orphaned* regions (owner
+    slot re-claimed by another source, or source gone from the qstore) and
+    return all of them to the freelist.
+  * pairs whose source is absent from the qstore at insert time, spill
+    chains past ``max_chain`` regions, and allocation failures are all
+    *dropped and counted* in ``n_dropped`` — never silent (§4.4 again).
+
 All operations are functional (table in, table out) and jit-compatible.
 """
 from __future__ import annotations
@@ -642,3 +670,376 @@ def evict_sessions(table: SessionTable, tick: jax.Array, ttl: int) -> SessionTab
         cursor=jnp.where(keep, table.cursor, 0),
         filled=jnp.where(keep, table.filled, 0),
     )
+
+
+# ---------------------------------------------------------------------------
+# Source-major region layout for the cooccurrence store.
+#
+# See the module docstring for the three invariants (region id = source
+# qstore slot via the chain directory, spill chain order, freelist
+# lifecycle). The per-slot key is the *destination* fingerprint only — the
+# region already implies the source, so the four src/dst endpoint lanes of
+# the hash layout collapse into the key lanes (≈45% less state per pair).
+# ---------------------------------------------------------------------------
+
+class RegionTable(NamedTuple):
+    """Source-major cooccurrence store: ``n_regions`` regions of ``width``
+    slots; regions are pool-allocated to sources, chained through a
+    directory indexed by the source's qstore slot."""
+    key_hi: jax.Array        # u32[C] — dst fingerprint; (0,0) == empty slot
+    key_lo: jax.Array        # u32[C]
+    lanes: Dict[str, jax.Array]   # each [C] (1-D only)
+    chain_region: jax.Array  # i32[Q, MC] — region ids, -1 = none (prefix)
+    chain_hi: jax.Array      # u32[Q] — source fp owning the chain at slot q
+    chain_lo: jax.Array      # u32[Q]
+    region_fill: jax.Array   # i32[R] — live pairs, packed at [0, fill)
+    region_owner: jax.Array  # i32[R] — owning qstore slot, -1 = free
+    n_dropped: jax.Array     # i32[] — src-missing / chain-full / pool-empty
+
+    @property
+    def capacity(self) -> int:
+        return self.key_hi.shape[0]
+
+    @property
+    def n_regions(self) -> int:
+        return self.region_fill.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.capacity // self.n_regions
+
+    @property
+    def max_chain(self) -> int:
+        return self.chain_region.shape[1]
+
+    @property
+    def dir_slots(self) -> int:
+        return self.chain_region.shape[0]
+
+    @property
+    def live_mask(self) -> jax.Array:
+        return (self.key_hi != 0) | (self.key_lo != 0)
+
+    def live_count(self) -> jax.Array:
+        return jnp.sum(self.live_mask.astype(jnp.int32))
+
+    def free_regions(self) -> jax.Array:
+        """Freelist pressure: regions available for allocation."""
+        return jnp.sum((self.region_owner < 0).astype(jnp.int32))
+
+
+def make_region_table(capacity: int, region_width: int, dir_slots: int,
+                      max_chain: int, lane_specs: Dict[str, Any]
+                      ) -> RegionTable:
+    """``dir_slots`` must equal the qstore capacity (region id = qstore
+    slot); ``capacity = n_regions * region_width``."""
+    assert capacity & (capacity - 1) == 0, "capacity must be a power of two"
+    assert region_width & (region_width - 1) == 0 and region_width > 0
+    assert capacity % region_width == 0 and capacity >= region_width
+    assert max_chain >= 1
+    n_regions = capacity // region_width
+    lanes = {}
+    for name, spec in lane_specs.items():
+        assert not isinstance(spec, tuple), "region lanes must be 1-D"
+        lanes[name] = jnp.zeros((capacity,), dtype=spec)
+    return RegionTable(
+        key_hi=jnp.zeros((capacity,), jnp.uint32),
+        key_lo=jnp.zeros((capacity,), jnp.uint32),
+        lanes=lanes,
+        chain_region=jnp.full((dir_slots, max_chain), -1, jnp.int32),
+        chain_hi=jnp.zeros((dir_slots,), jnp.uint32),
+        chain_lo=jnp.zeros((dir_slots,), jnp.uint32),
+        region_fill=jnp.zeros((n_regions,), jnp.int32),
+        region_owner=jnp.full((n_regions,), -1, jnp.int32),
+        n_dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def region_chain_state(table: RegionTable, qstore: HashTable
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """THE chain-validity invariant, shared by ranking and the sweeps: a
+    directory row is live iff it has a chain head AND its recorded
+    fingerprint still owns that qstore slot (slot reuse / source pruning
+    otherwise orphans the chain). Returns
+
+      * ``row_valid`` bool[Q]  — directory rows with a live, owned chain,
+      * ``ent_ok``   bool[Q, MC] — live chain entries,
+      * ``referenced`` bool[R] — regions reachable from a live chain.
+    """
+    assert table.dir_slots == qstore.capacity
+    R = table.n_regions
+    row_valid = (table.chain_region[:, 0] >= 0) \
+        & (qstore.key_hi == table.chain_hi) \
+        & (qstore.key_lo == table.chain_lo) \
+        & ((qstore.key_hi != 0) | (qstore.key_lo != 0))
+    ent = table.chain_region
+    ent_ok = (ent >= 0) & row_valid[:, None]
+    referenced = jnp.zeros((R,), bool).at[
+        jnp.where(ent_ok, ent, R).reshape(-1)].set(True, mode="drop")
+    return row_valid, ent_ok, referenced
+
+
+def _group_ranks(slot: jax.Array, mask: jax.Array, Q: int) -> jax.Array:
+    """Rank (0-based) of each masked row within its slot group, in row
+    order — the claim-side analogue of ``_claim_winners``: one packed
+    (slot, idx) u32 sort when it fits 31 bits, (idx, slot) lexsort
+    otherwise. Unmasked rows get garbage ranks (callers mask)."""
+    B = slot.shape[0]
+    idx = jnp.arange(B, dtype=jnp.uint32)
+    bits_b = max((B - 1).bit_length(), 1)
+    if (Q - 1).bit_length() + bits_b <= 31:
+        sent = jnp.uint32(0xFFFFFFFF)
+        packed = jnp.where(mask,
+                           (slot.astype(jnp.uint32) << jnp.uint32(bits_b))
+                           | idx, sent)
+        order = jnp.argsort(packed)
+        pslot = packed[order] >> jnp.uint32(bits_b)
+    else:
+        skey = jnp.where(mask, slot.astype(jnp.int32), Q)
+        order = jnp.lexsort((idx.astype(jnp.int32), skey))
+        pslot = skey[order].astype(jnp.uint32)
+    is_new = jnp.concatenate([jnp.ones((1,), bool), pslot[1:] != pslot[:-1]])
+    ar = jnp.arange(B, dtype=jnp.int32)
+    rank_sorted = ar - jax.lax.cummax(jnp.where(is_new, ar, 0))
+    return jnp.zeros((B,), jnp.int32).at[order].set(rank_sorted)
+
+
+def _chain_find_jnp(khi_r, klo_r, regs, dst_hi, dst_lo, active):
+    """Early-exit chain scan: depth d gathers each pair's region tile
+    ``[B, W]`` (ONE contiguous W-slot row per pair — the locality the
+    layout buys) and matches the dst key. Most chains are one region deep,
+    so the steady state costs a single round."""
+    B, MC = regs.shape
+    W = khi_r.shape[1]
+
+    def cond(st):
+        d, found = st
+        col = jax.lax.dynamic_slice_in_dim(regs, jnp.minimum(d, MC - 1), 1,
+                                           axis=1)[:, 0]
+        return (d < MC) & jnp.any(active & (found < 0) & (col >= 0))
+
+    def body(st):
+        d, found = st
+        col = jax.lax.dynamic_slice_in_dim(regs, d, 1, axis=1)[:, 0]
+        want = active & (found < 0) & (col >= 0)
+        reg_safe = jnp.where(col >= 0, col, 0)
+        m = want[:, None] & (khi_r[reg_safe] == dst_hi[:, None]) \
+            & (klo_r[reg_safe] == dst_lo[:, None])
+        pos = jnp.argmax(m, axis=1).astype(jnp.int32)
+        hit = jnp.any(m, axis=1)
+        found = jnp.where(hit, reg_safe * W + pos, found)
+        return d + 1, found
+
+    _, found = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.full((B,), -1, jnp.int32)))
+    return found
+
+
+@partial(jax.jit, static_argnames=("modes", "probe_rounds", "decay_cfg",
+                                   "decay_lanes", "tick_lane", "use_kernel"))
+def region_insert_accumulate(
+    table: RegionTable,
+    qstore: HashTable,
+    src_hi: jax.Array,
+    src_lo: jax.Array,
+    dst_hi: jax.Array,
+    dst_lo: jax.Array,
+    updates: Dict[str, jax.Array],
+    valid: jax.Array,
+    *,
+    modes: Tuple[Tuple[str, str], ...],
+    probe_rounds: int = 16,
+    decay_cfg=None,
+    decay_lanes: Tuple[str, ...] = ("weight",),
+    tick_lane: str = "last_tick",
+    now=None,
+    use_kernel: bool = False,
+) -> RegionTable:
+    """Batched insert-or-accumulate of (src -> dst) pairs, region layout.
+
+    The source's qstore slot names its chain directly (no pair-key
+    probing): finds scan the chain's region tiles, claims *append* at each
+    region's fill tail in chain order, new regions come off the freelist in
+    ascending-id order. Accumulation semantics (dedup by the combined pair
+    fingerprint, ADD/SET/MAX lane reductions, lazy-decay rebase-on-write)
+    match :func:`insert_accumulate` exactly. Drops — source absent from the
+    qstore, spill chain exhausted, region pool exhausted — are counted in
+    ``n_dropped``.
+    """
+    C, R, W, MC = (table.capacity, table.n_regions, table.width,
+                   table.max_chain)
+    Q = table.dir_slots
+    assert Q == qstore.capacity, "directory must be indexed by qstore slot"
+    mode_map = dict(modes)
+    B = src_hi.shape[0]
+
+    # -- dedup by the combined pair fp (same grouping as the hash layout);
+    # src/dst ride along as SET lanes so representatives carry them. --
+    p_hi, p_lo = combine_fp_device(src_hi, src_lo, dst_hi, dst_lo)
+    full_updates = dict(updates)
+    full_updates.update({"_src_hi": src_hi, "_src_lo": src_lo,
+                         "_dst_hi": dst_hi, "_dst_lo": dst_lo})
+    full_modes = dict(mode_map)
+    full_modes.update({"_src_hi": SET, "_src_lo": SET,
+                       "_dst_hi": SET, "_dst_lo": SET})
+    s_hi, s_lo, agg, alive = _dedup_and_aggregate(
+        p_hi, p_lo, full_updates, valid, full_modes)
+    a_src_hi = agg.pop("_src_hi").astype(jnp.uint32)
+    a_src_lo = agg.pop("_src_lo").astype(jnp.uint32)
+    a_dst_hi = agg.pop("_dst_hi").astype(jnp.uint32)
+    a_dst_lo = agg.pop("_dst_lo").astype(jnp.uint32)
+
+    # -- the source's qstore slot IS the region chain id. --
+    _, src_found, qslot = lookup(qstore, a_src_hi, a_src_lo,
+                                 probe_rounds=probe_rounds)
+    alive2 = alive & src_found
+    n_src_miss = jnp.sum((alive & ~src_found).astype(jnp.int32))
+    qslot_safe = jnp.where(alive2, qslot, 0)
+
+    chain_ok = alive2 & (table.chain_region[qslot_safe, 0] >= 0) \
+        & (table.chain_hi[qslot_safe] == a_src_hi) \
+        & (table.chain_lo[qslot_safe] == a_src_lo)
+    regs = jnp.where(chain_ok[:, None], table.chain_region[qslot_safe], -1)
+
+    khi_r = table.key_hi.reshape(R, W)
+    klo_r = table.key_lo.reshape(R, W)
+    if use_kernel:
+        from ..kernels import ops as kops
+        found = kops.chain_find(khi_r, klo_r, regs, a_dst_hi, a_dst_lo,
+                                alive2)
+    else:
+        found = _chain_find_jnp(khi_r, klo_r, regs, a_dst_hi, a_dst_lo,
+                                alive2)
+
+    # -- claim: rank new pairs within their source, map ranks onto the
+    # chain's free tail space (earlier regions' tails refill first). --
+    new = alive2 & (found < 0)
+    rank = _group_ranks(qslot_safe, new, Q)
+    f_d = jnp.where(regs >= 0,
+                    table.region_fill[jnp.clip(regs, 0, R - 1)], 0)
+    avail = jnp.int32(W) - f_d            # unallocated depth: W free
+    cumavail = jnp.cumsum(avail, axis=1)
+    prev_cum = cumavail - avail
+    in_d = new[:, None] & (rank[:, None] >= prev_cum) \
+        & (rank[:, None] < cumavail)
+    d_star = jnp.argmax(in_d, axis=1).astype(jnp.int32)
+    has_room = jnp.any(in_d, axis=1)
+    take1 = lambda a: jnp.take_along_axis(a, d_star[:, None], axis=1)[:, 0]
+    pos = rank - take1(prev_cum) + take1(f_d)
+    reg_at = take1(regs)
+    n_chain_full = jnp.sum((new & ~has_room).astype(jnp.int32))
+
+    # allocation: one representative per needed (slot, depth), assigned
+    # free regions in ascending region-id order, deterministically.
+    need_alloc = new & has_room & (reg_at < 0)
+    rep = need_alloc & (pos == 0)
+    BIG = jnp.int32(np.iinfo(np.int32).max)
+    okey = jnp.where(rep, qslot_safe * MC + d_star, BIG)
+    order = jnp.argsort(okey)
+    t = jnp.zeros((B,), jnp.int32).at[order].set(
+        jnp.where(okey[order] < BIG, jnp.arange(B, dtype=jnp.int32), B))
+    free = table.region_owner < 0
+    n_free = jnp.sum(free.astype(jnp.int32))
+    frank = jnp.cumsum(free.astype(jnp.int32)) - 1
+    rank2region = jnp.full((R,), -1, jnp.int32).at[
+        jnp.where(free, frank, R)].set(jnp.arange(R, dtype=jnp.int32),
+                                       mode="drop")
+    alloc_region = jnp.where(rep & (t < n_free),
+                             rank2region[jnp.clip(t, 0, R - 1)], -1)
+    success_rep = rep & (alloc_region >= 0)
+
+    # directory writes: stale/new rows reset wholesale (the previous
+    # owner's chain is orphaned; the prune sweep reclaims it), then the
+    # allocated entries land, then the owning fp is stamped.
+    row_reset = new & ~chain_ok
+    cr = table.chain_region.at[jnp.where(row_reset, qslot_safe, Q)].set(
+        jnp.full((B, MC), -1, jnp.int32), mode="drop")
+    cr = cr.at[jnp.where(success_rep, qslot_safe, Q), d_star].set(
+        alloc_region, mode="drop")
+    ch_hi = table.chain_hi.at[jnp.where(row_reset, qslot_safe, Q)].set(
+        a_src_hi, mode="drop")
+    ch_lo = table.chain_lo.at[jnp.where(row_reset, qslot_safe, Q)].set(
+        a_src_lo, mode="drop")
+    owner = table.region_owner.at[
+        jnp.where(success_rep, alloc_region, R)].set(qslot_safe, mode="drop")
+
+    # final placement (re-read the directory: covers freshly allocated
+    # regions AND pool-exhaustion failures in one gather).
+    reg_final = jnp.where(reg_at >= 0, reg_at, cr[qslot_safe, d_star])
+    placed_new = new & has_room & (reg_final >= 0)
+    n_pool_full = jnp.sum(
+        (new & has_room & (reg_final < 0)).astype(jnp.int32))
+    gslot = reg_final * W + pos
+
+    key_hi = table.key_hi.at[jnp.where(placed_new, gslot, C)].set(
+        a_dst_hi, mode="drop")
+    key_lo = table.key_lo.at[jnp.where(placed_new, gslot, C)].set(
+        a_dst_lo, mode="drop")
+    fill = table.region_fill.at[jnp.where(placed_new, reg_final, R)].add(
+        1, mode="drop")
+
+    write_slot = jnp.where(found >= 0, found,
+                           jnp.where(placed_new, gslot, -1))
+    ok = alive2 & (write_slot >= 0)
+    rebase = None
+    if decay_cfg is not None:
+        safe = jnp.where(ok, write_slot, 0)
+        f = decay_cfg.factor(
+            jnp.maximum(now - table.lanes[tick_lane][safe], 0))
+        rebase = {name: table.lanes[name][safe] * f for name in decay_lanes
+                  if mode_map.get(name) == ADD}
+    new_lanes = _apply_lane_updates(table.lanes, agg, mode_map, ok,
+                                    write_slot, C, rebase=rebase)
+    n_drop = n_src_miss + n_chain_full + n_pool_full
+    return RegionTable(key_hi, key_lo, new_lanes, cr, ch_hi, ch_lo, fill,
+                       owner, table.n_dropped + n_drop)
+
+
+@partial(jax.jit, static_argnames=("probe_rounds", "decay_cfg",
+                                   "decay_lanes", "tick_lane"))
+def region_lookup(
+    table: RegionTable,
+    qstore: HashTable,
+    src_hi: jax.Array,
+    src_lo: jax.Array,
+    dst_hi: jax.Array,
+    dst_lo: jax.Array,
+    *,
+    probe_rounds: int = 16,
+    decay_cfg=None,
+    decay_lanes: Tuple[str, ...] = ("weight",),
+    tick_lane: str = "last_tick",
+    now=None,
+) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+    """Batched pair lookup under the region layout; mirrors
+    :func:`lookup`'s contract (read-time decayed view under the lazy
+    policy). Returns (lanes_at_pair, found_mask, global_slot)."""
+    R, W = table.n_regions, table.width
+    src_hi = jnp.asarray(src_hi, jnp.uint32)
+    src_lo = jnp.asarray(src_lo, jnp.uint32)
+    dst_hi = jnp.asarray(dst_hi, jnp.uint32)
+    dst_lo = jnp.asarray(dst_lo, jnp.uint32)
+    nonzero = (src_hi != 0) | (src_lo != 0)
+    _, src_found, qslot = lookup(qstore, src_hi, src_lo,
+                                 probe_rounds=probe_rounds)
+    active = nonzero & src_found
+    qslot_safe = jnp.where(active, qslot, 0)
+    chain_ok = active & (table.chain_hi[qslot_safe] == src_hi) \
+        & (table.chain_lo[qslot_safe] == src_lo)
+    regs = jnp.where(chain_ok[:, None], table.chain_region[qslot_safe], -1)
+    found_slot = _chain_find_jnp(table.key_hi.reshape(R, W),
+                                 table.key_lo.reshape(R, W),
+                                 regs, dst_hi, dst_lo, chain_ok)
+    found = found_slot >= 0
+    safe = jnp.where(found, found_slot, 0)
+    f = None
+    if decay_cfg is not None:
+        f = decay_cfg.factor(
+            jnp.maximum(now - table.lanes[tick_lane][safe], 0))
+    out = {}
+    for name, lane in table.lanes.items():
+        v = lane[safe]
+        if f is not None and name in decay_lanes:
+            v = v * f
+        out[name] = jnp.where(found, v, jnp.zeros_like(v))
+    return out, found, found_slot

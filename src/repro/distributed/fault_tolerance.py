@@ -106,9 +106,16 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         import ml_dtypes  # noqa: F401  (dtype registry for raw views)
         with open(os.path.join(self._step_dir(step), "MANIFEST.json")) as f:
-            raw_dtypes = json.load(f).get("raw_dtypes", {})
+            manifest = json.load(f)
+            raw_dtypes = manifest.get("raw_dtypes", {})
         with np.load(os.path.join(self._step_dir(step), "arrays.npz")) as z:
             leaves, treedef = jax.tree.flatten(template)
+            n_saved = manifest.get("n_leaves", len(leaves))
+            if n_saved != len(leaves):
+                raise ValueError(
+                    f"checkpoint step {step} holds {n_saved} leaves but the "
+                    f"restore template has {len(leaves)} — engine config / "
+                    f"store layout mismatch (e.g. hash vs region cooc)?")
             new = []
             for i, leaf in enumerate(leaves):
                 a = z[f"leaf_{i}"]

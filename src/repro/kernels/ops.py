@@ -119,6 +119,43 @@ def bucket_topk(grid, k: int):
     return _tk.bucket_topk(grid, int(k), interpret=_INTERPRET)
 
 
+def chain_find(key_hi_r, key_lo_r, regs, dst_hi, dst_lo, active):
+    """Region-layout chain find (insert fast path): one scalar-prefetched
+    region tile in VMEM per batch row, one pass per chain depth. Returns
+    the global slot of each pair's key, or -1 (same contract as the jnp
+    reference ``stores._chain_find_jnp``)."""
+    from . import region_probe as _rp
+    return _rp.chain_find(key_hi_r, key_lo_r, regs, dst_hi, dst_lo, active,
+                          interpret=_INTERPRET)
+
+
+def region_rank(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, total_w, total_c, *,
+                k: int, coefs: Tuple[float, float, float, float],
+                min_pair_weight: float, min_src_weight: float,
+                min_pair_count: float,
+                decay_cfg=None, last_tick=None, now=None):
+    """The region ranking cycle's ONE fused Pallas pass: (lazy decay +)
+    association scoring + evidence gates + per-region top-k, reading the
+    ``[n_regions, width]`` grid — a pure reshape of the store — straight
+    from HBM tiles. Exponential decay runs in-kernel; other kinds
+    pre-decay in jnp with identical semantics. Returns (vals, args,
+    npass) — npass i32[R] is the per-region gate-pass count for overflow
+    accounting, emitted by the same pass."""
+    coefs = tuple(float(c) for c in coefs)
+    half_life = None
+    if decay_cfg is not None:
+        if decay_cfg.kind == "exp":
+            half_life = float(decay_cfg.half_life_ticks)
+        else:
+            w_ab = w_ab * decay_cfg.factor(jnp.maximum(now - last_tick, 0))
+    return _tk.region_rank(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, last_tick,
+                           total_w, total_c, now, k=int(k), coefs=coefs,
+                           min_pair_weight=float(min_pair_weight),
+                           min_src_weight=float(min_src_weight),
+                           min_pair_count=float(min_pair_count),
+                           half_life=half_life, interpret=_INTERPRET)
+
+
 def edit_distance(a_chars, a_len, b_chars, b_len, *,
                   first_char_cost: float = 1.5, use_kernel: bool = True):
     """Batched weighted OSA edit distance."""

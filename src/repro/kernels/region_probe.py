@@ -1,0 +1,107 @@
+"""Region-probe Pallas kernel: in-VMEM region-tile find for the
+source-major cooccurrence store (closes the ROADMAP "Pallas probe kernel"
+item for the layout that replaced global open addressing).
+
+The region layout (``core/stores.RegionTable``) turns the store's find
+step from K rounds of random [capacity]-wide gathers into a *chain scan*:
+each pair's source names its region chain directly (region id = qstore
+slot), and a find only has to match the destination key against the W
+contiguous slots of each chain region. ``chain_find_depth`` is that scan
+as a Pallas kernel: the grid walks the batch, and a scalar-prefetched
+region id steers the BlockSpec index map so each step DMAs exactly ONE
+region tile — ``(1, W)`` rows of the key lanes — from HBM into VMEM,
+matches the pair's key against the whole tile in-register, and emits the
+match position. The probe working set is one region tile, never the whole
+table; consecutive batch rows that hit the same region re-use the block.
+
+``chain_find`` wraps the kernel over the (short) spill chain: one call per
+chain depth, folding hits into the running found-slot vector exactly like
+the jnp reference (``stores._chain_find_jnp``).
+
+Layout note: on a real TPU the tile wants ``W`` to be a multiple of the
+128 lane width (the engine default ``region_width=32`` is interpreted /
+CPU-CI friendly; pick 128 for TPU deployments). ``interpret=None``
+auto-detects like the other kernels in this package.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .decay_prune import _resolve_interpret
+
+
+def _find_kernel(W: int):
+    def kernel(reg_ref, khi_ref, klo_ref, dhi_ref, dlo_ref, out_ref):
+        # reg_ref is the scalar-prefetch operand (already consumed by the
+        # index maps); the key refs hold ONE region tile in VMEM.
+        m = (khi_ref[...] == dhi_ref[0]) & (klo_ref[...] == dlo_ref[0])
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, W), 1)
+        out_ref[0] = jnp.min(jnp.where(m, iota, W))
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chain_find_depth(key_hi_r: jax.Array, key_lo_r: jax.Array,
+                     region_ids: jax.Array, dst_hi: jax.Array,
+                     dst_lo: jax.Array, *, interpret: bool | None = None
+                     ) -> jax.Array:
+    """Match ``dst`` keys against one region tile per batch row.
+
+    ``key_hi_r``/``key_lo_r`` are the store's key lanes viewed as
+    ``[n_regions, W]``; ``region_ids`` i32[B] picks each row's tile (must
+    be pre-clipped to a valid region). Returns i32[B]: the in-region match
+    position, or ``W`` when the key is absent from that tile.
+    """
+    R, W = key_hi_r.shape
+    B = dst_hi.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, W), lambda i, reg: (reg[i], 0)),
+            pl.BlockSpec((1, W), lambda i, reg: (reg[i], 0)),
+            pl.BlockSpec((1,), lambda i, reg: (i,)),
+            pl.BlockSpec((1,), lambda i, reg: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, reg: (i,)),
+    )
+    return pl.pallas_call(
+        _find_kernel(W),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=_resolve_interpret(interpret),
+    )(region_ids.astype(jnp.int32), key_hi_r, key_lo_r, dst_hi, dst_lo)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chain_find(key_hi_r: jax.Array, key_lo_r: jax.Array, regs: jax.Array,
+               dst_hi: jax.Array, dst_lo: jax.Array, active: jax.Array,
+               *, interpret: bool | None = None) -> jax.Array:
+    """Full chain scan: ``regs`` i32[B, max_chain] (-1 = no region at that
+    depth) — one :func:`chain_find_depth` pass per depth, first hit wins.
+    Returns the *global* slot (region * W + pos), or -1. Semantics are
+    identical to the jnp reference ``stores._chain_find_jnp``."""
+    R, W = key_hi_r.shape
+    B, MC = regs.shape
+    found = jnp.full((B,), -1, jnp.int32)
+    for d in range(MC):
+        col = regs[:, d]
+        has = active & (col >= 0) & (found < 0)
+        # early exit like the jnp reference: once every row is resolved (or
+        # out of chain), the remaining depths skip their kernel launch —
+        # steady-state chains are one region deep.
+        pos = jax.lax.cond(
+            jnp.any(has),
+            lambda: chain_find_depth(key_hi_r, key_lo_r,
+                                     jnp.where(col >= 0, col, 0),
+                                     dst_hi, dst_lo, interpret=interpret),
+            lambda: jnp.full((B,), W, jnp.int32))
+        hit = has & (pos < W)
+        found = jnp.where(hit, jnp.where(col >= 0, col, 0) * W + pos, found)
+    return found

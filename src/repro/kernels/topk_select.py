@@ -171,3 +171,107 @@ def bucket_topk(grid: jax.Array, k: int, *, interpret: bool = True
         interpret=interpret,
     )(gp)
     return vals[:R, :k], args[:R, :k]
+
+
+# ---------------------------------------------------------------------------
+# region_rank: the region layout's ONE fused pass — lazy decay + scoring +
+# gating + per-region top-k, reading the [n_regions, width] grid (a pure
+# reshape of the store) straight from HBM tiles. No intermediate [C] score
+# array ever materializes: each block of region rows is read once into
+# VMEM, scored in-register, and leaves only its K winners.
+# ---------------------------------------------------------------------------
+
+
+def _make_region_kernel(K: int, Wp: int,
+                        coefs: Tuple[float, float, float, float],
+                        min_pair_weight: float, min_src_weight: float,
+                        min_pair_count: float, half_life: Optional[float]):
+    coefs = tuple(float(c) for c in coefs)
+    mpw = float(min_pair_weight)
+    msw = float(min_src_weight)
+    mpc = float(min_pair_count)
+
+    def kernel(*refs):
+        if half_life is not None:
+            (w_ab_ref, c_ab_ref, w_a_ref, w_b_ref, c_a_ref, c_b_ref,
+             ok_ref, lt_ref, tw_ref, tc_ref, now_ref,
+             vals_ref, args_ref, npass_ref) = refs
+            dt = jnp.maximum(now_ref[0] - lt_ref[...], 0.0)
+            w_ab = w_ab_ref[...] * jnp.exp2(-dt / jnp.float32(half_life))
+        else:
+            (w_ab_ref, c_ab_ref, w_a_ref, w_b_ref, c_a_ref, c_b_ref,
+             ok_ref, tw_ref, tc_ref, vals_ref, args_ref, npass_ref) = refs
+            w_ab = w_ab_ref[...]
+        c_ab = c_ab_ref[...]
+        w_a = w_a_ref[...]
+        score = score_body(w_ab, c_ab, w_a, w_b_ref[...], c_a_ref[...],
+                           c_b_ref[...], tw_ref[0], tc_ref[0], coefs)
+        ok = ((ok_ref[...] > 0) & (w_ab >= mpw) & (c_ab >= mpc)
+              & (w_a >= msw))
+        npass_ref[...] = jnp.sum(ok.astype(jnp.int32), axis=1)
+        g = jnp.where(ok, score, -jnp.inf)
+        iota = jax.lax.broadcasted_iota(jnp.int32, g.shape, 1)
+        vals_ref[...] = jnp.full(vals_ref.shape, -jnp.inf, jnp.float32)
+        args_ref[...] = jnp.full(args_ref.shape, Wp, jnp.int32)
+        for k in range(K):
+            m = jnp.max(g, axis=1, keepdims=True)
+            hit = (g == m) & (m > -jnp.inf)
+            am = jnp.min(jnp.where(hit, iota, Wp), axis=1, keepdims=True)
+            vals_ref[:, k] = m[:, 0]
+            args_ref[:, k] = am[:, 0]
+            g = jnp.where(iota == am, -jnp.inf, g)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "coefs", "min_pair_weight", "min_src_weight", "min_pair_count",
+    "half_life", "interpret"))
+def region_rank(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, last_tick, total_w,
+                total_c, now, *, k: int,
+                coefs: Tuple[float, float, float, float],
+                min_pair_weight: float, min_src_weight: float,
+                min_pair_count: float, half_life: Optional[float] = None,
+                interpret: bool = True
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused score+gate+top-k over the region grid: all inputs ``[R, W]``
+    (source marginals pre-broadcast along W by the caller — XLA fuses the
+    broadcast into the feed). Ties resolve to the lowest slot position
+    (insertion order). Returns (vals f32[R, k], args i32[R, k],
+    npass i32[R] — gate-passing slots per region, the caller's overflow
+    accounting, so no second jnp gate pass over the store is needed);
+    exhausted rounds yield ``-inf`` and the padded-width sentinel."""
+    R, W = w_ab.shape
+    Wp = ((max(W, 1) + LANE - 1) // LANE) * LANE
+    Kp = ((max(k, 1) + LANE - 1) // LANE) * LANE
+    BR = min(_BUCKET_BLOCK, max(SUBLANE, R))
+    Rp = ((R + BR - 1) // BR) * BR
+
+    def pad(x, fill=0.0):
+        buf = jnp.full((Rp, Wp), fill, jnp.float32)
+        return buf.at[:R, :W].set(x.astype(jnp.float32))
+
+    args = [pad(a) for a in (w_ab, c_ab, w_a, w_b, c_a, c_b, ok)]
+    scalars = [jnp.asarray(total_w, jnp.float32).reshape(1),
+               jnp.asarray(total_c, jnp.float32).reshape(1)]
+    if half_life is not None:
+        args.append(pad(last_tick))
+        scalars.append(jnp.asarray(now, jnp.float32).reshape(1))
+
+    spec_in = pl.BlockSpec((BR, Wp), lambda i: (i, 0))
+    spec_out = pl.BlockSpec((BR, Kp), lambda i: (i, 0))
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    npass_spec = pl.BlockSpec((BR,), lambda i: (i,))
+    vals, cols, npass = pl.pallas_call(
+        _make_region_kernel(int(k), Wp, coefs, min_pair_weight,
+                            min_src_weight, min_pair_count,
+                            None if half_life is None else float(half_life)),
+        grid=(Rp // BR,),
+        in_specs=[spec_in] * len(args) + [sspec] * len(scalars),
+        out_specs=[spec_out, spec_out, npass_spec],
+        out_shape=[jax.ShapeDtypeStruct((Rp, Kp), jnp.float32),
+                   jax.ShapeDtypeStruct((Rp, Kp), jnp.int32),
+                   jax.ShapeDtypeStruct((Rp,), jnp.int32)],
+        interpret=interpret,
+    )(*args, *scalars)
+    return vals[:R, :k], cols[:R, :k], npass[:R]

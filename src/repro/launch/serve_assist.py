@@ -73,9 +73,12 @@ def main() -> None:
 
         for rid, res in results:
             if res is not None:   # a rank cycle ran -> leader persists
+                eng = backends[rid]
+                meta = {"tick": t, "layout": eng.cfg.cooc_layout}
+                if eng.last_maintenance:   # freelist pressure -> frontends
+                    meta["maintenance"] = eng.last_maintenance
                 wrote = rt_group.persist(
-                    rid, t, pack_suggestions(backends[rid].suggestions),
-                    {"tick": t})
+                    rid, t, pack_suggestions(eng.suggestions), meta)
                 if wrote:
                     print(f"[t={t}] leader replica {rid} persisted "
                           f"{len(backends[rid].suggestions)} suggestion rows")

@@ -151,6 +151,12 @@ class SuggestFrontend:
             "log_head_tick": None,
             "lag_ticks": None,
             "catching_up": False,
+            # backend store health from the snapshot meta: the engine's
+            # last maintenance-cycle stats (live/reclaimed slot counts and,
+            # under the region cooc layout, freelist pressure as
+            # ``c_free_regions``) plus the layout that produced them.
+            "store_layout": meta.get("layout"),
+            "store": meta.get("maintenance"),
         }
         if self._log_reader is not None:
             self._log_reader.refresh()

@@ -175,6 +175,13 @@ def recover_engine(cfg: EngineConfig, ckpt: CheckpointManager, log_dir: str,
     (or ``target_tick``) and ready for live ingestion. ``step`` picks a
     specific snapshot (default: the newest).
     """
+    snap_layout = ckpt.manifest(step).get("meta", {}).get("layout")
+    if snap_layout is not None and snap_layout != cfg.cooc_layout:
+        raise ValueError(
+            f"snapshot was written under cooc_layout={snap_layout!r} but "
+            f"the restoring config uses {cfg.cooc_layout!r}; region "
+            f"metadata (chain directory, fills, freelist) is part of the "
+            f"checkpoint and cannot be reinterpreted")
     engine, log_tick = SearchAssistanceEngine.restore_from_snapshot(
         cfg, ckpt, step=step, name=name)
     assert int(engine.state.tick) == log_tick, "snapshot offset mismatch"

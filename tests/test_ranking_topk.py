@@ -280,10 +280,12 @@ def test_prune_sweep_materializes_and_prunes():
          "last_tick": jnp.zeros(n, jnp.int32)},
         jnp.ones(n, bool), modes=Q_MODES)
     now = jnp.int32(8)   # two half lives -> w/4
-    pruned, live, total = prune_sweep(t, now, cfg=cfg)
+    pruned, live, total, reclaimed = prune_sweep(t, now, cfg=cfg)
     exp_keep = (w * 0.25) >= cfg.prune_threshold
     assert int(live) == int(exp_keep.sum())
     assert 0 < int(live) < n
+    # the satellite contract: the sweep reports how many slots it freed
+    assert int(reclaimed) == n - int(exp_keep.sum())
     # survivors are re-anchored at `now` with the materialized weight
     v, found, _ = stores.lookup(pruned, jnp.asarray(hi), jnp.asarray(lo))
     np.testing.assert_array_equal(np.asarray(found), exp_keep)
@@ -307,8 +309,8 @@ def test_lazy_ranking_cycle_matches_materialized_decay():
     dcfg = DecayConfig(half_life_ticks=10.0, prune_threshold=0.0)
     now = jnp.int32(7)
     lazy = ranking.ranking_cycle(c, q, cfg, decay_cfg=dcfg, now=now)
-    q_mat, _, _ = prune_sweep(q, now, cfg=dcfg)
-    c_mat, _, _ = prune_sweep(c, now, cfg=dcfg)
+    q_mat, _, _, _ = prune_sweep(q, now, cfg=dcfg)
+    c_mat, _, _, _ = prune_sweep(c, now, cfg=dcfg)
     mat = ranking.ranking_cycle(c_mat, q_mat, cfg)
     _assert_tables_match_up_to_ties(lazy, mat)
 
