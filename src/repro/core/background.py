@@ -56,25 +56,67 @@ def interpolate(
 
 
 class AssistanceService:
-    """Real-time engine + background engine + interpolating frontend."""
+    """Real-time engine + background engine + interpolating frontend.
 
-    def __init__(self, rt_cfg: EngineConfig, alpha: float = 0.7,
-                 bg_cfg: Optional[EngineConfig] = None):
-        self.rt = SearchAssistanceEngine(rt_cfg, name="rt")
-        self.bg = SearchAssistanceEngine(bg_cfg or background_config(rt_cfg),
-                                         name="bg")
+    Both engines consume the *same* hoses (and therefore the same durable
+    firehose log), each under its own cadence authority — which is what
+    makes the whole service restartable: ``streaming.replay.recover_service``
+    restores each engine from its own snapshot chain and replays the shared
+    log tail per engine (``rt`` from its offset at the rt cadences, ``bg``
+    from its offset at the bg cadences), then rebuilds this cache.
+    ``rt``/``bg`` can be injected for exactly that recovery path.
+    """
+
+    def __init__(self, rt_cfg: Optional[EngineConfig] = None,
+                 alpha: float = 0.7,
+                 bg_cfg: Optional[EngineConfig] = None,
+                 rt: Optional[SearchAssistanceEngine] = None,
+                 bg: Optional[SearchAssistanceEngine] = None):
+        assert rt is not None or rt_cfg is not None
+        self.rt = rt if rt is not None \
+            else SearchAssistanceEngine(rt_cfg, name="rt")
+        if bg is None:
+            # derive the slow config from the injected engine's cfg when
+            # only `rt` was passed
+            bg_cfg = bg_cfg or background_config(
+                rt_cfg if rt_cfg is not None else self.rt.cfg)
+            bg = SearchAssistanceEngine(bg_cfg, name="bg")
+        self.bg = bg
         self.alpha = alpha
         self._cache: Dict[int, List[Tuple[int, float]]] = {}
 
-    def step(self, query_events=None, tweets=None) -> None:
+    def step(self, query_events=None, tweets=None) -> Optional[Dict]:
+        """Feed one tick to both engines; returns the per-engine rank-cycle
+        stats (``{"rt": ..., "bg": ...}``) when either engine ranked."""
         r1 = self.rt.step(query_events, tweets)
         r2 = self.bg.step(query_events, tweets)
         if r1 is not None or r2 is not None:
             self.refresh_cache()
+            return {"rt": r1, "bg": r2}
+        return None
 
     def refresh_cache(self) -> None:
         self._cache = interpolate(self.rt.suggestions, self.bg.suggestions,
                                   self.alpha)
 
+    @property
+    def suggestions(self) -> Dict[int, List[Tuple[int, float]]]:
+        """The interpolated suggestion table the frontend serves."""
+        return self._cache
+
     def suggest_fp(self, fp: int, k: int = 8) -> List[Tuple[int, float]]:
         return self._cache.get(int(fp), [])[:k]
+
+    # ---- persistence: the whole stack snapshots, not just the rt half ----
+    def save_snapshot(self, rt_ckpt, bg_ckpt,
+                      extra_meta: Optional[Dict] = None) -> Tuple[str, str]:
+        """Snapshot BOTH engines (each = checkpoint + its log offset).
+
+        Each manager may be delta-chained (``CheckpointManager.full_interval
+        > 1``): the bg engine's slow-moving long-horizon state is where
+        delta snapshots pay off most — few slots change per interval, so
+        the chain lets the snapshot cadence shrink without a write-volume
+        blowup, and the replay tail (time-to-fresh) shrinks with it.
+        """
+        return (self.rt.save_snapshot(rt_ckpt, extra_meta),
+                self.bg.save_snapshot(bg_ckpt, extra_meta))

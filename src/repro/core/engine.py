@@ -35,7 +35,13 @@ the in-scan decay/prune maintenance at the exact live cadences), one device
 dispatch per chunk instead of one per tick. ``streaming/`` provides the
 durable log and the replay controller built on it; snapshots ride on
 ``distributed/fault_tolerance.CheckpointManager`` with the log offset
-recorded in the manifest (snapshot = checkpoint + log offset).
+recorded in the manifest (snapshot = checkpoint + log offset). Snapshots
+may be *incremental*: a manager with ``full_interval > 1`` writes delta
+checkpoints (changed store slots only) chained to the last full one, which
+shrinks the write volume enough to snapshot ~4x more often — and with the
+cadence, the replay tail a restart must cover. The whole serving stack
+(rt + background engine + interpolation, ``core/background.py``) recovers
+through the same path: ``streaming.replay.recover_service``.
 """
 from __future__ import annotations
 
@@ -548,7 +554,10 @@ class SearchAssistanceEngine:
 
         The manifest records ``log_tick`` — the first tick a restarted
         instance must replay from the firehose log to catch up to where
-        this snapshot left off.
+        this snapshot left off. Whether the manager writes a full
+        checkpoint or a delta against the previous snapshot (changed slots
+        only) is the manager's decision (``CheckpointManager.full_interval``);
+        either way ``restore_from_snapshot`` sees the composed state.
         """
         tick = int(self.state.tick)
         meta = {"log_tick": tick, "engine": self.name,
@@ -567,7 +576,11 @@ class SearchAssistanceEngine:
 
         Returns ``(engine, log_tick)``: the engine holds the restored
         ``EngineState`` and ``log_tick`` is the offset to resume replaying
-        the firehose log from.
+        the firehose log from. The restore walks the snapshot's delta
+        chain; when a torn/corrupt chain member forces the fallback to an
+        older intact full snapshot (``ckpt.last_restore["fell_back"]``),
+        the returned ``log_tick`` is that older snapshot's offset — replay
+        simply covers the longer tail.
         """
         eng = cls(cfg, name)
         eng.state, step = ckpt.restore(eng.state, step)

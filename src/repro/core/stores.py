@@ -481,6 +481,41 @@ def lookup(
     return out, found, found_slot
 
 
+def diff_leading_rows(prev: np.ndarray, new: np.ndarray) -> np.ndarray:
+    """Dirty-slot extraction for incremental (delta) snapshots.
+
+    Returns the leading indices (slots) where ``new`` differs from ``prev``
+    — the rows a delta snapshot must record. Under the lazy decay policy
+    this set is exactly what the store mutation paths touched since the
+    base snapshot: slots written by ``insert_accumulate`` /
+    ``region_insert_accumulate`` (rebase-on-write refreshes ``last_tick``,
+    so a touched slot always differs) plus slots the prune sweeps reclaimed
+    or compacted. Computing it by content-compare instead of threading
+    dirty masks through every jitted op keeps it exact under *every*
+    policy/layout combination (eager sweeps rewrite all live weights — the
+    delta correctly grows to match) and keeps ``EngineState`` free of
+    snapshot-cadence-dependent lanes that would break the bit-exact
+    crash→restore→replay property. NaN-unsafe compares only ever *add*
+    rows (NaN != NaN), never lose one.
+    """
+    assert prev.shape == new.shape and prev.dtype == new.dtype
+    neq = prev != new
+    if neq.ndim > 1:
+        neq = neq.reshape(neq.shape[0], -1).any(axis=1)
+    return np.nonzero(neq)[0].astype(np.int64)
+
+
+def apply_row_delta(base: np.ndarray, idx: np.ndarray,
+                    rows: np.ndarray) -> np.ndarray:
+    """Scatter a delta's changed rows back onto the base snapshot's array
+    (in place when writable — npz loads are). Inverse of
+    :func:`diff_leading_rows` given the base it was diffed against."""
+    if not base.flags.writeable:
+        base = base.copy()
+    base[idx] = rows
+    return base
+
+
 def export_live(table: HashTable) -> Dict[str, np.ndarray]:
     """Host-side export of live entries (for persistence / suggestion build)."""
     mask = np.asarray(table.live_mask)

@@ -11,9 +11,53 @@ ZooKeeper-less equivalent: lowest live id wins — same liveness semantics,
 suitable for the single-writer persistence pattern), and crash-recovery
 restore that accepts any pytree template (elastic resharding lives in
 ``elastic.py``).
+
+**Incremental (delta) snapshots** — the snapshot-chain format. A snapshot
+step is either a *full* checkpoint (every leaf written whole) or a *delta*
+against the immediately preceding snapshot (changed leading slots only —
+MillWheel-style low-watermark checkpointing over the stores' known-dirty
+slots; see ``core.stores.diff_leading_rows``). One manifest per step dir:
+
+    MANIFEST.json = {
+      "step":      int,
+      "kind":      "full" | "delta",
+      "base_step": int | null,   # delta only: the previous snapshot in the
+                                 # chain (full or delta) it was diffed against
+      "n_leaves":  int,          # pytree width (layout-mismatch guard)
+      "raw_dtypes": {...},       # npz-unstorable dtypes, raw-viewed
+      "sha256":    hex,          # over the arrays.npz bytes (torn/corrupt
+                                 # detection during the chain walk)
+      "nbytes":    int,          # arrays.npz size (delta-vs-full accounting)
+      "time":      float, "meta": {...},
+    }
+
+arrays.npz holds ``leaf_{i}`` whole for a full (and for 0-d leaves always);
+a delta stores ``leaf_{i}_idx`` (changed leading indices, i64) +
+``leaf_{i}_val`` (the rows at those indices) per array leaf.
+
+Restore **chain-walk**: resolve the requested step back through
+``base_step`` links to its base full (verifying each member's sha256), then
+apply the deltas oldest-first onto the full's arrays. **Fallback rule**: a
+torn/corrupt/missing chain member falls back to the newest *intact full*
+snapshot at ``step <= requested`` — the caller observes an older restored
+step and simply replays a longer firehose-log tail (``streaming.replay``
+handles this transparently); only when no full verifies does restore raise.
+**Retention rule**: the newest ``keep_n`` steps are kept, *expanded* by
+every chain base a kept delta references — a full is never unlinked while a
+retained delta still needs it, and a delta is never retained without its
+base chain.
+
+``full_interval=1`` (the default) disables deltas entirely — every save is
+a full checkpoint, byte-identical behavior to the pre-delta manager. With
+``full_interval=F``, each full is followed by up to ``F-1`` deltas. The
+delta diff runs against an in-memory shadow of the last-saved leaves, so a
+freshly constructed manager (e.g. after a process restart) always writes a
+full first.
 """
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
 import shutil
@@ -24,16 +68,39 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 import jax
 import numpy as np
 
+from ..core.stores import apply_row_delta, diff_leading_rows
+
+
+def _raw_view(a: np.ndarray) -> Tuple[np.ndarray, Optional[str]]:
+    """npz cannot store ml_dtypes (bf16 etc): raw-view them, remember why."""
+    if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+        name = a.dtype.name
+        return a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8), name
+    return a, None
+
 
 class CheckpointManager:
     def __init__(self, directory: str, keep_n: int = 3,
-                 tmp_ttl_s: float = 3600.0):
+                 tmp_ttl_s: float = 3600.0, full_interval: int = 1):
+        assert full_interval >= 1
         self.dir = directory
         self.keep_n = keep_n
         # ``.tmp_*`` dirs older than this are debris from crashed writers
         # (a live writer holds its tmp dir only for the duration of one
         # save); retention removes them.
         self.tmp_ttl_s = tmp_ttl_s
+        # delta-snapshot chain: every ``full_interval``-th save is a full,
+        # the rest are deltas against the previous save (1 = fulls only).
+        self.full_interval = full_interval
+        self._shadow: Optional[List[np.ndarray]] = None  # last-saved leaves
+        self._shadow_step: Optional[int] = None
+        self._since_full = 0
+        self.last_save_kind: Optional[str] = None
+        self.last_save_bytes = 0
+        # last restore's provenance: {requested, restored, chain_len,
+        # fell_back} — ``fell_back`` means a torn/corrupt chain member was
+        # skipped and an older intact full was used instead.
+        self.last_restore: Dict[str, Any] = {}
         os.makedirs(directory, exist_ok=True)
 
     # -- paths --
@@ -63,24 +130,57 @@ class CheckpointManager:
 
     # -- save/restore --
     def save(self, step: int, tree: Any, meta: Optional[Dict] = None) -> str:
-        """Atomic: write into a tmp dir, fsync, rename into place."""
+        """Atomic: write into a tmp dir, fsync, rename into place.
+
+        With ``full_interval > 1`` the manager writes *delta* snapshots
+        (changed leading slots only, diffed against the in-memory shadow of
+        the previous save) between fulls — see the module docstring for the
+        chain format. The decision is internal: callers keep calling
+        ``save`` and the manifest records what was written.
+        """
         leaves, treedef = jax.tree.flatten(tree)
+        np_leaves = [np.asarray(x) for x in leaves]
+        kind, base_step = "full", None
+        if (self.full_interval > 1 and self._shadow is not None
+                and self._shadow_step is not None
+                and step > self._shadow_step
+                and self._since_full < self.full_interval - 1
+                and len(np_leaves) == len(self._shadow)
+                and all(a.shape == b.shape and a.dtype == b.dtype
+                        for a, b in zip(np_leaves, self._shadow))):
+            kind, base_step = "delta", self._shadow_step
         tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
         try:
-            arrays = {}
-            dtypes = {}
-            for i, x in enumerate(leaves):
-                a = np.asarray(x)
-                if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
-                    # npz cannot store ml_dtypes (bf16 etc): raw-view them
-                    dtypes[f"leaf_{i}"] = a.dtype.name
-                    a = a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
-                arrays[f"leaf_{i}"] = a
-            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            arrays: Dict[str, np.ndarray] = {}
+            dtypes: Dict[str, str] = {}
+            for i, a in enumerate(np_leaves):
+                if kind == "delta" and a.ndim >= 1:
+                    idx = diff_leading_rows(self._shadow[i], a)
+                    val, raw = _raw_view(a[idx])
+                    if raw is not None:
+                        dtypes[f"leaf_{i}"] = raw
+                    arrays[f"leaf_{i}_idx"] = idx
+                    arrays[f"leaf_{i}_val"] = val
+                else:   # full leaf; 0-d leaves are always written whole
+                    whole, raw = _raw_view(a)
+                    if raw is not None:
+                        dtypes[f"leaf_{i}"] = raw
+                    arrays[f"leaf_{i}"] = whole
+            bio = io.BytesIO()
+            np.savez(bio, **arrays)
+            blob = bio.getvalue()
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
             manifest = {
                 "step": step,
+                "kind": kind,
+                "base_step": base_step,
                 "n_leaves": len(leaves),
                 "raw_dtypes": dtypes,
+                "sha256": hashlib.sha256(blob).hexdigest(),
+                "nbytes": len(blob),
                 "time": time.time(),
                 "meta": meta or {},
             }
@@ -95,47 +195,168 @@ class CheckpointManager:
         except Exception:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
+        # the shadow must hold the as-saved CONTENT: np.asarray of a numpy
+        # leaf aliases the caller's live buffer (an in-place mutation
+        # before the next save would diff the array against itself and
+        # silently record an empty delta) — copy those; jax buffers are
+        # immutable and safe to hold by reference.
+        self._shadow = [a if isinstance(x, jax.Array) else np.array(a)
+                        for x, a in zip(leaves, np_leaves)]
+        self._shadow_step = step
+        self._since_full = 0 if kind == "full" else self._since_full + 1
+        self.last_save_kind, self.last_save_bytes = kind, len(blob)
         self._gc()
         return self._step_dir(step)
 
+    # -- chain-walk loading --
+    def _verified_arrays(self, step: int, manifest: Dict
+                         ) -> Optional[Dict[str, np.ndarray]]:
+        """Load + sha256-verify one step's arrays.npz; None when torn."""
+        path = os.path.join(self._step_dir(step), "arrays.npz")
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+        except OSError:
+            return None
+        want = manifest.get("sha256")
+        if want is not None and hashlib.sha256(blob).hexdigest() != want:
+            return None
+        try:
+            with np.load(io.BytesIO(blob)) as z:
+                return {k: z[k] for k in z.files}
+        except Exception:   # noqa: BLE001 — short/garbled npz
+            return None
+
+    def _collect_chain(self, step: int) -> Optional[List[Tuple[int, Dict,
+                                                               Dict]]]:
+        """Walk ``step`` back to its base full, verifying every member.
+        Returns [(step, manifest, arrays), ...] full-first, or None the
+        moment any link is missing/torn/corrupt (caller falls back)."""
+        chain: List[Tuple[int, Dict, Dict]] = []
+        s: Optional[int] = step
+        seen = set()
+        while True:
+            if s is None or s in seen:
+                return None        # dangling or cyclic base pointer
+            seen.add(s)
+            try:
+                man = self.manifest(s)
+            except (OSError, json.JSONDecodeError):
+                return None
+            arrs = self._verified_arrays(s, man)
+            if arrs is None:
+                return None
+            chain.append((s, man, arrs))
+            if man.get("kind", "full") == "full":
+                chain.reverse()
+                return chain
+            s = man.get("base_step")
+
+    def load_arrays(self, step: Optional[int] = None
+                    ) -> Tuple[Dict[str, np.ndarray], Dict, int]:
+        """Chain-walk load with torn/corrupt-delta fallback.
+
+        Returns ``(arrays, manifest, restored_step)`` where ``arrays`` is
+        the composed ``leaf_{i}`` dict (full + deltas applied oldest-first)
+        and ``manifest`` belongs to ``restored_step``. When the requested
+        step's chain is broken, falls back to the newest *intact full* at
+        ``step <= requested`` (recorded in ``self.last_restore``); raises
+        ``FileNotFoundError`` only when nothing verifies.
+        """
+        requested = step if step is not None else self.latest_step()
+        if requested is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        self.last_restore = {"requested": requested, "restored": None,
+                             "chain_len": 0, "fell_back": False}
+        chain = self._collect_chain(requested)
+        if chain is None:
+            # fallback: newest verifiable full at or before the request.
+            self.last_restore["fell_back"] = True
+            for s in reversed([x for x in self.steps() if x <= requested]):
+                try:
+                    man = self.manifest(s)
+                except (OSError, json.JSONDecodeError):
+                    continue
+                if man.get("kind", "full") != "full":
+                    continue
+                arrs = self._verified_arrays(s, man)
+                if arrs is not None:
+                    chain = [(s, man, arrs)]
+                    break
+            if chain is None:
+                raise FileNotFoundError(
+                    f"snapshot chain for step {requested} is torn and no "
+                    f"intact full snapshot <= {requested} exists in "
+                    f"{self.dir}")
+        base_step, base_man, arrays = chain[0]
+        n_leaves = base_man.get("n_leaves", 0)
+        for s, man, delta in chain[1:]:
+            for i in range(n_leaves):
+                if f"leaf_{i}" in delta:      # 0-d / whole-leaf record
+                    arrays[f"leaf_{i}"] = delta[f"leaf_{i}"]
+                else:
+                    arrays[f"leaf_{i}"] = apply_row_delta(
+                        arrays[f"leaf_{i}"], delta[f"leaf_{i}_idx"],
+                        delta[f"leaf_{i}_val"])
+        top_step, top_man, _ = chain[-1]
+        self.last_restore.update({"restored": top_step,
+                                  "chain_len": len(chain)})
+        return arrays, top_man, top_step
+
     def restore(self, template: Any, step: Optional[int] = None
                 ) -> Tuple[Any, int]:
-        """Restore into the dtype/placement of ``template``."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        """Restore into the dtype/placement of ``template``.
+
+        Walks the delta chain (see ``load_arrays``); the returned step is
+        the *actually restored* one — older than requested when a torn or
+        corrupt chain member forced the fallback to the newest intact full
+        (the caller then replays a longer log tail).
+        """
         import ml_dtypes  # noqa: F401  (dtype registry for raw views)
-        with open(os.path.join(self._step_dir(step), "MANIFEST.json")) as f:
-            manifest = json.load(f)
-            raw_dtypes = manifest.get("raw_dtypes", {})
-        with np.load(os.path.join(self._step_dir(step), "arrays.npz")) as z:
-            leaves, treedef = jax.tree.flatten(template)
-            n_saved = manifest.get("n_leaves", len(leaves))
-            if n_saved != len(leaves):
-                raise ValueError(
-                    f"checkpoint step {step} holds {n_saved} leaves but the "
-                    f"restore template has {len(leaves)} — engine config / "
-                    f"store layout mismatch (e.g. hash vs region cooc)?")
-            new = []
-            for i, leaf in enumerate(leaves):
-                a = z[f"leaf_{i}"]
-                if f"leaf_{i}" in raw_dtypes:
-                    a = a.view(np.dtype(raw_dtypes[f"leaf_{i}"]))
-                new.append(jax.numpy.asarray(
-                    a, leaf.dtype if hasattr(leaf, "dtype") else None))
+        arrays, manifest, step = self.load_arrays(step)
+        raw_dtypes = manifest.get("raw_dtypes", {})
+        leaves, treedef = jax.tree.flatten(template)
+        n_saved = manifest.get("n_leaves", len(leaves))
+        if n_saved != len(leaves):
+            raise ValueError(
+                f"checkpoint step {step} holds {n_saved} leaves but the "
+                f"restore template has {len(leaves)} — engine config / "
+                f"store layout mismatch (e.g. hash vs region cooc)?")
+        new = []
+        for i, leaf in enumerate(leaves):
+            a = arrays[f"leaf_{i}"]
+            if f"leaf_{i}" in raw_dtypes:
+                a = a.view(np.dtype(raw_dtypes[f"leaf_{i}"]))
+            new.append(jax.numpy.asarray(
+                a, leaf.dtype if hasattr(leaf, "dtype") else None))
         return jax.tree.unflatten(treedef, new), step
 
     def restore_host(self, step: Optional[int] = None) -> Dict[str, np.ndarray]:
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        with np.load(os.path.join(self._step_dir(step), "arrays.npz")) as z:
-            return {k: z[k] for k in z.files}
+        arrays, _, _ = self.load_arrays(step)
+        return arrays
 
     def _gc(self) -> None:
         steps = self.steps()
-        for s in steps[: -self.keep_n]:
-            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        keep = set(steps) if self.keep_n <= 0 else set(steps[-self.keep_n:])
+        # chain protection: a kept delta pins its whole base chain — a full
+        # is never unlinked while a retained delta still references it.
+        for s in list(keep):
+            cur = s
+            for _ in range(len(steps) + 1):
+                try:
+                    man = self.manifest(cur)
+                except (OSError, json.JSONDecodeError):
+                    break
+                if man.get("kind", "full") == "full":
+                    break
+                base = man.get("base_step")
+                if base is None or base == cur:
+                    break
+                keep.add(base)
+                cur = base
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(self._step_dir(s), ignore_errors=True)
         # stale ``.tmp_*`` dirs left by crashed writers: a successful save
         # renames its tmp dir away, a failed one rmtree's it — anything
         # still here past the TTL belongs to a dead process.
@@ -150,6 +371,18 @@ class CheckpointManager:
                 continue
             if age >= self.tmp_ttl_s:
                 shutil.rmtree(path, ignore_errors=True)
+
+
+def corrupt_snapshot(ckpt: CheckpointManager, step: int,
+                     keep_fraction: float = 0.5) -> None:
+    """Failure injection: truncate a snapshot's ``arrays.npz`` in place (a
+    torn write on a non-atomic filesystem). The chain walk's sha256 pass
+    must reject it and fall back to the newest intact full snapshot."""
+    path = os.path.join(ckpt._step_dir(step), "arrays.npz")
+    with open(path, "rb") as f:
+        blob = f.read()
+    with open(path, "wb") as f:
+        f.write(blob[: max(1, int(len(blob) * keep_fraction))])
 
 
 # ---------------------------------------------------------------------------

@@ -5,7 +5,17 @@ engine(s) consuming the query hose + firehose, leader-elected persistence
 every rank cycle, frontend replicas polling for fresh results, background
 model + interpolation, and a periodic spelling job.
 
+The stack is **restartable end to end**: the elected leader appends every
+tick to a durable firehose log and snapshots BOTH engine states (real-time
+and background) into delta-chained checkpoint dirs (changed slots only
+between fulls — ``--full-every``). Kill the process and relaunch with
+``--recover`` and it restores both engines from their snapshot chains,
+replays the shared log tail faster than real time (ranking suppressed per
+engine until its lag clears), rebuilds the interpolation cache, and keeps
+serving from where it left off.
+
   python -m repro.launch.serve_assist --ticks 120 --out /tmp/assist
+  python -m repro.launch.serve_assist --ticks 120 --out /tmp/assist --recover
 """
 from __future__ import annotations
 
@@ -23,6 +33,8 @@ from ..core.hashing import join_fp
 from ..data.stream import StreamConfig, SyntheticStream, steve_jobs_scenario
 from ..distributed.fault_tolerance import CheckpointManager, ReplicaGroup
 from ..serving.serve import SuggestFrontend, ServerSet, pack_suggestions
+from ..streaming import (FirehoseLogReader, FirehoseLogWriter, ReplayConfig,
+                         recover_service)
 
 
 def main() -> None:
@@ -32,6 +44,15 @@ def main() -> None:
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--fail-replica-at", type=int, default=-1,
                     help="tick at which backend replica 0 dies (failover demo)")
+    ap.add_argument("--crash-at", type=int, default=-1,
+                    help="tick at which the WHOLE stack exits mid-run "
+                         "(relaunch with --recover to pick it back up)")
+    ap.add_argument("--recover", action="store_true",
+                    help="restore rt+bg engine state from the snapshot "
+                         "chains and replay the log tail before serving")
+    ap.add_argument("--full-every", type=int, default=4,
+                    help="state-snapshot chain: one full every N snapshots, "
+                         "deltas (changed slots only) in between")
     ap.add_argument("--use-kernel", action="store_true")
     args = ap.parse_args()
 
@@ -42,28 +63,77 @@ def main() -> None:
     ecfg = EngineConfig(query_capacity=1 << 14, cooc_capacity=1 << 17,
                         session_capacity=1 << 14, decay_every=6,
                         rank_every=12, use_kernel=args.use_kernel)
+    bgcfg = background_config(ecfg, rank_every_mult=3)
 
     rt_dir = os.path.join(args.out, "rt")
     bg_dir = os.path.join(args.out, "bg")
     spell_dir = os.path.join(args.out, "spell")
+    log_dir = os.path.join(args.out, "log")
+    state_rt = os.path.join(args.out, "state", "rt")
+    state_bg = os.path.join(args.out, "state", "bg")
     rt_group = ReplicaGroup(args.replicas, CheckpointManager(rt_dir))
-    # replicated backends (paper: replicated, not sharded)
-    backends = [SearchAssistanceEngine(ecfg, name=f"rt{i}")
-                for i in range(args.replicas)]
-    bg_engine = SearchAssistanceEngine(background_config(ecfg), name="bg")
+    # engine-STATE snapshots (the recovery path): delta-chained so the
+    # cadence can match every rank cycle without a write-volume blowup
+    state_rt_ckpt = CheckpointManager(state_rt, keep_n=4,
+                                      full_interval=args.full_every)
+    state_bg_ckpt = CheckpointManager(state_bg, keep_n=4,
+                                      full_interval=args.full_every)
+
+    start_tick = 0
+    if args.recover:
+        # recover_service handles engines with no snapshot yet (a crash
+        # before the first persist): they cold-start and replay the whole
+        # retained log, so resume always lands past the logged ticks.
+        # allow_gap: a snapshot can be newer than the log's surviving tail
+        # (unflushed ticks died with the crash) — resuming appends past the
+        # hole is the paper's stance (§4.2: losing a little state is
+        # tolerable), and later recoveries skip it instead of failing.
+        FirehoseLogReader(log_dir).repair()   # drop torn-tail debris
+        t0 = time.perf_counter()
+        svc, rstats = recover_service(ecfg, state_rt_ckpt, state_bg_ckpt,
+                                      log_dir,
+                                      ReplayConfig(chunk_ticks=8,
+                                                   allow_gap=True),
+                                      bg_cfg=bgcfg)
+        dt = time.perf_counter() - t0
+        print(f"[recover] rt: replayed {rstats['rt']['n_ticks']} ticks from "
+              f"snapshot {rstats['rt']['restored_step']}, bg: "
+              f"{rstats['bg']['n_ticks']} ticks from "
+              f"{rstats['bg']['restored_step']} "
+              f"(fell_back={rstats['bg']['restore'].get('fell_back')}); "
+              f"{dt:.1f}s to fresh tables")
+        backends = [svc.rt]
+        for i in range(1, args.replicas):
+            eng = SearchAssistanceEngine(ecfg, name=f"rt{i}")
+            eng.state = svc.rt.state       # replicated, not sharded
+            eng.suggestions = dict(svc.rt.suggestions)
+            backends.append(eng)
+        bg_engine = svc.bg
+        start_tick = int(svc.rt.state.tick)
+    else:
+        backends = [SearchAssistanceEngine(ecfg, name=f"rt{i}")
+                    for i in range(args.replicas)]
+        bg_engine = SearchAssistanceEngine(bgcfg, name="bg")
+
+    writer = FirehoseLogWriter(log_dir, ticks_per_segment=8,
+                               keep_segments=16)
     bg_ckpt = CheckpointManager(bg_dir)
     spell_ckpt = CheckpointManager(spell_dir)
 
-    frontends = [SuggestFrontend(rt_dir, bg_dir, stream.tok, spell_dir=spell_dir)
+    frontends = [SuggestFrontend(rt_dir, bg_dir, stream.tok,
+                                 spell_dir=spell_dir, log_dir=log_dir)
                  for _ in range(2)]
     serverset = ServerSet(frontends)
     head = "steve jobs"
 
-    for t in range(args.ticks):
+    for t in range(start_tick, args.ticks):
         ev, tw = stream.gen_tick(t)
         if args.fail_replica_at == t:
             rt_group.fail(0)
             print(f"[t={t}] replica 0 FAILED; leader is now {rt_group.leader()}")
+        # the elected leader appends the tick to the durable log
+        for rid in rt_group.live():
+            rt_group.log_append(rid, writer, t, ev, tw)
         results = []
         for rid, eng in enumerate(backends):
             if not rt_group.alive[rid]:
@@ -80,10 +150,20 @@ def main() -> None:
                 wrote = rt_group.persist(
                     rid, t, pack_suggestions(eng.suggestions), meta)
                 if wrote:
+                    # leader also snapshots BOTH engine states (delta-
+                    # chained) so a crashed stack restores rt AND bg
+                    eng.save_snapshot(state_rt_ckpt)
+                    bg_engine.save_snapshot(state_bg_ckpt)
                     print(f"[t={t}] leader replica {rid} persisted "
-                          f"{len(backends[rid].suggestions)} suggestion rows")
+                          f"{len(backends[rid].suggestions)} suggestion rows"
+                          f" (state snapshots: rt="
+                          f"{state_rt_ckpt.last_save_kind}/"
+                          f"{state_rt_ckpt.last_save_bytes}B, bg="
+                          f"{state_bg_ckpt.last_save_kind}/"
+                          f"{state_bg_ckpt.last_save_bytes}B)")
         if bg_res is not None:
-            bg_ckpt.save(t, pack_suggestions(bg_engine.suggestions))
+            bg_ckpt.save(t, pack_suggestions(bg_engine.suggestions),
+                         meta={"tick": t})
 
         # periodic spelling job (paper: a Pig job over a long span)
         if t > 0 and t % 60 == 0:
@@ -107,9 +187,17 @@ def main() -> None:
 
         if t % 12 == 0 and t >= event.t_start:
             sugg = serverset.request(head, k=5)
+            m = frontends[0].metrics()
             print(f"[t={t}] related('{head}') = "
-                  f"{[(s, round(sc, 3)) for s, sc in sugg]}")
+                  f"{[(s, round(sc, 3)) for s, sc in sugg]} "
+                  f"(rt_lag={m['rt_lag_ticks']} bg_lag={m['bg_lag_ticks']})")
 
+        if args.crash_at == t:
+            print(f"[t={t}] CRASH (simulated): relaunch with --recover "
+                  f"--out {args.out}")
+            return
+
+    writer.close()
     print("final suggestions for head query:",
           serverset.request(head, k=8))
 

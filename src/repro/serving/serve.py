@@ -80,6 +80,7 @@ class SuggestFrontend:
         self._cache: Dict = {}
         self._loaded_steps = (None, None, None)
         self._rt_manifest: Dict = {}
+        self._bg_manifest: Dict = {}
         self.stale_lag_ticks = stale_lag_ticks
         self._log_reader = None
         if log_dir is not None:
@@ -102,6 +103,7 @@ class SuggestFrontend:
             self._rt_manifest = self.rt_ckpt.manifest(steps[0])
         if self.bg_ckpt and steps[1] is not None:
             self._bg = self._load(self.bg_ckpt, steps[1])
+            self._bg_manifest = self.bg_ckpt.manifest(steps[1])
         if self.spell_ckpt and steps[2] is not None:
             arrs = self.spell_ckpt.restore_host(steps[2])
             self._spell = {int(a): (int(b), float(d)) for a, b, d in
@@ -119,38 +121,56 @@ class SuggestFrontend:
         return unpack_suggestions(named)
 
     # ---- staleness / lag (§4.2: stale-but-available during catch-up) ----
-    def metrics(self, now: Optional[float] = None) -> Dict:
-        """How stale is what this frontend serves?
-
-        ``rt_age_s``: wall-clock age of the loaded real-time tables.
-        ``rt_tick``: the engine tick those tables reflect (from the
-        checkpoint manifest's ``log_tick``/``tick`` meta).
-        ``log_head_tick``/``lag_ticks``: with a firehose-log reader
-        attached, how far behind the durable log head the served tables
-        are; ``catching_up`` is true while lag exceeds
-        ``stale_lag_ticks`` — i.e. a restarted backend is still replaying
-        and this frontend is knowingly serving stale suggestions.
-        """
-        now = time.time() if now is None else now
-        meta = self._rt_manifest.get("meta", {})
+    @staticmethod
+    def _next_tick(meta: Dict) -> Optional[int]:
         # two producer conventions: engine snapshots (``save_snapshot``)
         # record ``log_tick`` = the NEXT tick to replay (tables reflect
         # log_tick - 1); suggestion-table persists (serve_assist) record
         # ``tick`` = the LAST tick reflected.
         if "log_tick" in meta:
-            rt_next = int(meta["log_tick"])
-        elif "tick" in meta:
-            rt_next = int(meta["tick"]) + 1
-        else:
-            rt_next = None
+            return int(meta["log_tick"])
+        if "tick" in meta:
+            return int(meta["tick"]) + 1
+        return None
+
+    def metrics(self, now: Optional[float] = None) -> Dict:
+        """How stale is what this frontend serves — for BOTH halves.
+
+        ``rt_age_s``/``bg_age_s``: wall-clock age of the loaded real-time /
+        background tables. ``rt_tick``/``bg_tick``: the engine tick each
+        half's tables reflect (from its checkpoint manifest's
+        ``log_tick``/``tick`` meta). ``log_head_tick`` and the per-engine
+        ``rt_lag_ticks``/``bg_lag_ticks``: with a firehose-log reader
+        attached, how far behind the durable log head each half's served
+        tables are; ``rt_catching_up``/``bg_catching_up`` flip true while
+        that engine's lag exceeds ``stale_lag_ticks`` — i.e. that half of a
+        restarted backend is still replaying and this frontend knowingly
+        serves its stale suggestions. During whole-stack recovery the two
+        halves catch up independently (the bg engine typically snapshots
+        less often and replays a longer tail), which is why operators need
+        both. ``lag_ticks``/``catching_up`` remain the rt aliases.
+        """
+        now = time.time() if now is None else now
+        meta = self._rt_manifest.get("meta", {})
+        bg_meta = self._bg_manifest.get("meta", {})
+        rt_next = self._next_tick(meta)
+        bg_next = self._next_tick(bg_meta)
         out: Dict = {
             "rt_step": self._loaded_steps[0],
             "rt_age_s": (now - self._rt_manifest["time"]
                          if "time" in self._rt_manifest else None),
             "rt_tick": None if rt_next is None else rt_next - 1,
+            "bg_step": self._loaded_steps[1],
+            "bg_age_s": (now - self._bg_manifest["time"]
+                         if "time" in self._bg_manifest else None),
+            "bg_tick": None if bg_next is None else bg_next - 1,
             "log_head_tick": None,
             "lag_ticks": None,
+            "rt_lag_ticks": None,
+            "bg_lag_ticks": None,
             "catching_up": False,
+            "rt_catching_up": False,
+            "bg_catching_up": False,
             # backend store health from the snapshot meta: the engine's
             # last maintenance-cycle stats (live/reclaimed slot counts and,
             # under the region cooc layout, freelist pressure as
@@ -164,9 +184,17 @@ class SuggestFrontend:
             out["log_head_tick"] = head
             if head is not None:
                 # pending = logged ticks the served tables don't reflect
-                out["lag_ticks"] = max(
+                out["rt_lag_ticks"] = max(
                     0, head + 1 - (rt_next if rt_next is not None else 0))
-                out["catching_up"] = out["lag_ticks"] > self.stale_lag_ticks
+                out["rt_catching_up"] = \
+                    out["rt_lag_ticks"] > self.stale_lag_ticks
+                out["lag_ticks"] = out["rt_lag_ticks"]
+                out["catching_up"] = out["rt_catching_up"]
+                if self.bg_ckpt is not None:
+                    out["bg_lag_ticks"] = max(
+                        0, head + 1 - (bg_next if bg_next is not None else 0))
+                    out["bg_catching_up"] = \
+                        out["bg_lag_ticks"] > self.stale_lag_ticks
         return out
 
     # ---- request path ----

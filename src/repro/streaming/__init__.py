@@ -13,14 +13,30 @@ tables in the meantime. This package is that recovery subsystem:
   * :mod:`.replay` — the catch-up controller: restore the newest snapshot
     (checkpoint + log offset), replay the log tail through the fused
     ``engine.ingest_many`` scan step, hand off to live ingestion.
+    ``recover_service`` extends this to the whole serving stack: rt engine
+    + background engine + interpolation cache, each engine replaying the
+    shared log from its own offset under its own cadence authority.
+
+Snapshots themselves may be *incremental*: ``CheckpointManager`` (see
+``distributed.fault_tolerance`` for the manifest format) writes delta
+snapshots — changed store slots only — chained to the last full snapshot
+(``kind``/``base_step``/``sha256`` in the manifest). Restore chain-walks
+the deltas onto the base full; a torn or corrupt chain member falls back
+to the newest intact full, and replay covers the difference from the log
+(a broken chain costs tail length, never recoverability). Retention never
+unlinks a full while a retained delta still references it. The shrunken
+write volume is what lets the snapshot cadence drop ~4x — and the replay
+tail (time-to-fresh after a crash) with it (bench_recovery rows
+``recovery_snapshot_*``).
 """
 from .log import (FirehoseLogReader, FirehoseLogWriter, LogChunk,
                   corrupt_segment, kill_writer_mid_segment)
 from .replay import (CatchUpController, ReplayConfig, chunk_to_stack,
-                     recover_engine)
+                     recover_engine, recover_service)
 
 __all__ = [
     "FirehoseLogReader", "FirehoseLogWriter", "LogChunk",
     "corrupt_segment", "kill_writer_mid_segment",
     "CatchUpController", "ReplayConfig", "chunk_to_stack", "recover_engine",
+    "recover_service",
 ]

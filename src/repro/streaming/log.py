@@ -19,7 +19,11 @@ Design — one log = one directory (several named logs may share it):
     the micro-batch shapes change (a segment is one stackable block).
   * **retention**: ``keep_segments`` newest segments are kept; older ones
     leave the manifest first, then their files are unlinked — a reader can
-    never observe a manifested-but-deleted segment.
+    never observe a manifested-but-deleted segment. Retention must cover
+    the oldest snapshot offset recovery may restore from: with delta
+    snapshots (``CheckpointManager.full_interval > 1``) a torn chain falls
+    back to the last *full* snapshot, so size ``keep_segments`` for a
+    full-snapshot interval of ticks, not a delta interval.
   * **torn-tail detection**: a crashed writer can leave (a) ``.tmp_*``
     scratch files, (b) a partial segment file at its final name that never
     made the manifest, or (c) — with non-atomic filesystems — a manifested

@@ -21,10 +21,29 @@ persisted results". This module is that loop:
 
 Replayed state is bit-for-bit identical to an uninterrupted run (tested at
 every segment boundary), exact under the lazy/exponential decay policy.
+
+**Whole-stack recovery** (:func:`recover_service`): the serving stack is
+rt engine + background engine + interpolation cache (``core.background``);
+both engines consume the same hose, so one durable log serves both. Each
+engine restores from its *own* snapshot chain (its own log offset) and
+replays the shared tail under its *own* cadence authority — the fused
+``ingest_many`` scan takes the engine's config, so the bg engine's slow
+decay/prune cadences replay exactly as they would have run live. Ranking
+stays suppressed per engine until that engine's lag clears.
+
+**Snapshot chains + fallback** (``distributed.fault_tolerance``): a
+snapshot step may be a *delta* (changed slots only) chained to the last
+full snapshot via its manifest (``kind``/``base_step``/``sha256``). The
+restore chain-walk verifies every member; a torn or corrupt delta falls
+back to the newest intact full — recovery then simply resumes replay from
+that older snapshot's ``log_tick``, i.e. a broken chain costs a longer
+replay tail, never a failed recovery (as long as one full verifies and the
+log retains the tail). ``stats["restore"]`` records the fallback.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from typing import Dict, Optional
 
@@ -163,6 +182,47 @@ class CatchUpController:
         return stats
 
 
+def _check_snapshot_layout(cfg: EngineConfig, ckpt: CheckpointManager,
+                           step: Optional[int]) -> None:
+    try:
+        meta = ckpt.manifest(step).get("meta", {})
+    except FileNotFoundError:
+        raise                      # no checkpoints at all: fail loudly
+    except (OSError, json.JSONDecodeError):
+        # torn/garbled manifest: leave it to the restore chain walk, which
+        # falls back to the newest intact full instead of failing here
+        return
+    snap_layout = meta.get("layout")
+    if snap_layout is not None and snap_layout != cfg.cooc_layout:
+        raise ValueError(
+            f"snapshot was written under cooc_layout={snap_layout!r} but "
+            f"the restoring config uses {cfg.cooc_layout!r}; region "
+            f"metadata (chain directory, fills, freelist) is part of the "
+            f"checkpoint and cannot be reinterpreted")
+
+
+def _restore_and_catch_up(cfg: EngineConfig, ckpt: CheckpointManager,
+                          reader: FirehoseLogReader,
+                          rcfg: ReplayConfig, name: str,
+                          target_tick: Optional[int],
+                          step: Optional[int]) -> tuple:
+    """Restore one engine (fresh when no snapshot exists — cold engines
+    replay the whole retained log) and replay its tail from the shared,
+    already-validated reader."""
+    if step is None and ckpt.latest_step() is None:
+        engine, log_tick = SearchAssistanceEngine(cfg, name), None
+    else:
+        _check_snapshot_layout(cfg, ckpt, step)
+        engine, log_tick = SearchAssistanceEngine.restore_from_snapshot(
+            cfg, ckpt, step=step, name=name)
+        assert int(engine.state.tick) == log_tick, "snapshot offset mismatch"
+    stats = CatchUpController(engine, reader, rcfg).catch_up(target_tick,
+                                                             refresh=False)
+    stats["restored_step"] = log_tick
+    stats["restore"] = dict(ckpt.last_restore)
+    return engine, stats
+
+
 def recover_engine(cfg: EngineConfig, ckpt: CheckpointManager, log_dir: str,
                    rcfg: ReplayConfig = ReplayConfig(), name: str = "rt",
                    log_name: str = "firehose",
@@ -173,15 +233,12 @@ def recover_engine(cfg: EngineConfig, ckpt: CheckpointManager, log_dir: str,
 
     Returns ``(engine, stats)``; the engine is caught up to the log head
     (or ``target_tick``) and ready for live ingestion. ``step`` picks a
-    specific snapshot (default: the newest).
+    specific snapshot (default: the newest). The restore walks the
+    snapshot's delta chain; a torn/corrupt chain member silently falls
+    back to the newest intact full snapshot (``stats["restore"]``) and the
+    replay tail grows to cover the difference.
     """
-    snap_layout = ckpt.manifest(step).get("meta", {}).get("layout")
-    if snap_layout is not None and snap_layout != cfg.cooc_layout:
-        raise ValueError(
-            f"snapshot was written under cooc_layout={snap_layout!r} but "
-            f"the restoring config uses {cfg.cooc_layout!r}; region "
-            f"metadata (chain directory, fills, freelist) is part of the "
-            f"checkpoint and cannot be reinterpreted")
+    _check_snapshot_layout(cfg, ckpt, step)
     engine, log_tick = SearchAssistanceEngine.restore_from_snapshot(
         cfg, ckpt, step=step, name=name)
     assert int(engine.state.tick) == log_tick, "snapshot offset mismatch"
@@ -189,4 +246,43 @@ def recover_engine(cfg: EngineConfig, ckpt: CheckpointManager, log_dir: str,
     stats = CatchUpController(engine, reader, rcfg).catch_up(target_tick,
                                                              refresh=False)
     stats["restored_step"] = log_tick
+    stats["restore"] = dict(ckpt.last_restore)
     return engine, stats
+
+
+def recover_service(rt_cfg: EngineConfig, rt_ckpt: CheckpointManager,
+                    bg_ckpt: CheckpointManager, log_dir: str,
+                    rcfg: ReplayConfig = ReplayConfig(), *,
+                    bg_cfg: Optional[EngineConfig] = None,
+                    alpha: float = 0.7, log_name: str = "firehose",
+                    target_tick: Optional[int] = None,
+                    rt_step: Optional[int] = None,
+                    bg_step: Optional[int] = None) -> tuple:
+    """Crash-recover the WHOLE serving stack (rt + bg + interpolation).
+
+    Restores the real-time and background engines from their respective
+    snapshot directories (each records its own ``log_tick`` offset) and
+    replays the shared firehose-log tail for each — the bg engine reuses
+    the same fused ``ingest_many`` scan under *its* cadence authority
+    (slow decay/prune cadences replay exactly as live), with ranking
+    suppressed per-engine until that engine's lag clears; each engine
+    ranks at its own handoff. An engine with no snapshot yet (crash before
+    its first persist) cold-starts and replays the whole retained log.
+    Finally the interpolation cache is rebuilt from both fresh tables.
+
+    Returns ``(service, stats)`` with per-engine stats under ``stats["rt"]``
+    and ``stats["bg"]``. The result is bit-exact vs. an uninterrupted
+    service run (property-tested at every log-segment boundary).
+    """
+    from ..core.background import AssistanceService, background_config
+    bg_cfg = bg_cfg if bg_cfg is not None else background_config(rt_cfg)
+    # ONE reader validates the log once; both engines replay from it.
+    reader = FirehoseLogReader(log_dir, name=log_name)
+    rt_eng, rt_stats = _restore_and_catch_up(
+        rt_cfg, rt_ckpt, reader, rcfg, "rt", target_tick, rt_step)
+    bg_eng, bg_stats = _restore_and_catch_up(
+        bg_cfg, bg_ckpt, reader, rcfg, "bg", target_tick, bg_step)
+    service = AssistanceService(rt_cfg, alpha=alpha, bg_cfg=bg_cfg,
+                                rt=rt_eng, bg=bg_eng)
+    service.refresh_cache()
+    return service, {"rt": rt_stats, "bg": bg_stats}

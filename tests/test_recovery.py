@@ -6,6 +6,14 @@ torn-tail truncation), EngineState snapshot round-trips, the fused
 crash-at-every-segment-boundary property (restore + replay == an
 uninterrupted run, exact under lazy/exponential decay), replay-mode rank
 suppression, frontend staleness metrics, and the leader-gated log writer.
+
+Whole-stack additions: ``recover_service`` crash-at-every-segment-boundary
+bit-exactness for the full rt + bg + interpolation stack (both decay
+policies x both cooc layouts, over delta-chained snapshots), the
+incremental-snapshot chain itself (delta restore == full restore
+bit-for-bit, corrupt/torn-delta fallback to the newest intact full with the
+longer replay tail, retention never stranding a delta without its base),
+and the per-engine frontend staleness metrics.
 """
 import dataclasses
 import os
@@ -15,17 +23,20 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.core.background import AssistanceService, interpolate
 from repro.core.decay import DecayConfig
 from repro.core.engine import (EngineConfig, SearchAssistanceEngine,
                                TickStack, ingest_many)
 from repro.core.hashing import split_fp
 from repro.data.stream import StreamConfig, SyntheticStream
-from repro.distributed.fault_tolerance import CheckpointManager, ReplicaGroup
+from repro.distributed.fault_tolerance import (CheckpointManager,
+                                               ReplicaGroup,
+                                               corrupt_snapshot)
 from repro.serving.serve import SuggestFrontend, pack_suggestions
 from repro.streaming import (CatchUpController, FirehoseLogReader,
                              FirehoseLogWriter, ReplayConfig, chunk_to_stack,
                              corrupt_segment, kill_writer_mid_segment,
-                             recover_engine)
+                             recover_engine, recover_service)
 from proptest import property_test
 
 
@@ -33,9 +44,19 @@ def _cfg(policy="lazy", **kw):
     base = dict(query_capacity=1 << 11, cooc_capacity=1 << 13,
                 session_capacity=1 << 10, session_window=3,
                 decay_every=4, prune_every=6, rank_every=5,
-                decay=DecayConfig(policy=policy))
+                region_width=16, decay=DecayConfig(policy=policy))
     base.update(kw)
     return EngineConfig(**base)
+
+
+def _bg_cfg(cfg: EngineConfig) -> EngineConfig:
+    """A background config with cadences deliberately DIFFERENT from the
+    rt engine's — replay must honor each engine's own cadence authority."""
+    slow = dataclasses.replace(cfg.decay,
+                               half_life_ticks=cfg.decay.half_life_ticks * 8,
+                               prune_threshold=cfg.decay.prune_threshold * 0.5)
+    return dataclasses.replace(cfg, decay=slow, rank_every=7,
+                               decay_every=6, prune_every=9)
 
 
 def _batches(n, seed=11, tweets=8):
@@ -401,3 +422,300 @@ def test_stale_standby_writer_failover(tmp_path):
     w_standby.append(2, *batches[2])
     r = FirehoseLogReader(str(tmp_path))
     assert [(s.first, s.last) for s in r.segments] == [(0, 0), (1, 1), (2, 2)]
+
+
+# ---------------------------------------------------------------------------
+# Whole-stack recovery: rt + bg + interpolation (the tentpole property)
+# ---------------------------------------------------------------------------
+
+def _run_live_service(cfg, bgc, batches, logd, rt_ckpt, bg_ckpt, tps,
+                      snap_every=2):
+    """Uninterrupted service run: log every tick, snapshot both engines
+    every ``snap_every`` ticks. Returns (service, rt_states, bg_states)."""
+    w = FirehoseLogWriter(str(logd), ticks_per_segment=tps)
+    svc = AssistanceService(cfg, bg_cfg=bgc)
+    rt_states, bg_states = {}, {}
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+        svc.step(ev, tw)
+        if (t + 1) % snap_every == 0:
+            svc.save_snapshot(rt_ckpt, bg_ckpt)
+        rt_states[t + 1] = svc.rt.state
+        bg_states[t + 1] = svc.bg.state
+    w.close()
+    return svc, rt_states, bg_states
+
+
+@pytest.mark.parametrize("policy,layout", [
+    ("lazy", "hash"), ("sweep", "hash"),
+    ("lazy", "region"), ("sweep", "region")])
+def test_service_crash_at_every_segment_boundary(tmp_path, policy, layout):
+    """Crash the WHOLE serving stack (rt + bg + interpolation cache) after
+    every sealed log segment; ``recover_service`` must reproduce the
+    uninterrupted run bit-for-bit — each engine restored from its own
+    delta-chained snapshot and replayed from its own offset under its own
+    cadence authority — and the interpolated suggestion dict with it."""
+    n_ticks, tps = 9, 3
+    cfg = _cfg(policy, cooc_layout=layout)
+    bgc = _bg_cfg(cfg)
+    batches = _batches(n_ticks, seed=17)
+    logd = tmp_path / "log"
+    # delta-chained snapshots ON the recovery hot path (full_interval=3)
+    rt_ckpt = CheckpointManager(str(tmp_path / "rt"), keep_n=20,
+                                full_interval=3)
+    bg_ckpt = CheckpointManager(str(tmp_path / "bg"), keep_n=20,
+                                full_interval=3)
+    _, rt_states, bg_states = _run_live_service(
+        cfg, bgc, batches, logd, rt_ckpt, bg_ckpt, tps)
+
+    for boundary in range(tps, n_ticks + 1, tps):
+        rt_steps = [s for s in rt_ckpt.steps() if s <= boundary]
+        bg_steps = [s for s in bg_ckpt.steps() if s <= boundary]
+        if not rt_steps or not bg_steps:
+            continue
+        # asymmetric offsets: rt restores its newest snapshot, bg an older
+        # one (the realistic case — the halves snapshot independently)
+        rec, stats = recover_service(
+            cfg, rt_ckpt, bg_ckpt, str(logd), ReplayConfig(chunk_ticks=4),
+            bg_cfg=bgc, target_tick=boundary,
+            rt_step=rt_steps[-1],
+            bg_step=bg_steps[-2] if len(bg_steps) > 1 else bg_steps[-1])
+        assert int(rec.rt.state.tick) == boundary
+        assert int(rec.bg.state.tick) == boundary
+        _assert_states_equal(rt_states[boundary], rec.rt.state)
+        _assert_states_equal(bg_states[boundary], rec.bg.state)
+        # identical states => identical per-engine tables AND identical
+        # interpolated frontend dict
+        ref_rt = SearchAssistanceEngine(cfg)
+        ref_rt.state = rt_states[boundary]
+        ref_rt.run_rank_cycle()
+        ref_bg = SearchAssistanceEngine(bgc)
+        ref_bg.state = bg_states[boundary]
+        ref_bg.run_rank_cycle()
+        rec.rt.run_rank_cycle()
+        rec.bg.run_rank_cycle()
+        rec.refresh_cache()
+        assert rec.rt.suggestions == ref_rt.suggestions
+        assert rec.bg.suggestions == ref_bg.suggestions
+        assert rec.suggestions == interpolate(
+            ref_rt.suggestions, ref_bg.suggestions, rec.alpha)
+
+
+def test_recover_service_cold_engines(tmp_path):
+    """A service that crashed before its first persist cold-starts both
+    engines and replays the whole retained log — still bit-exact."""
+    cfg = _cfg("lazy")
+    bgc = _bg_cfg(cfg)
+    batches = _batches(6, seed=5)
+    logd = tmp_path / "log"
+    rt_ckpt = CheckpointManager(str(tmp_path / "rt"))
+    bg_ckpt = CheckpointManager(str(tmp_path / "bg"))
+    w = FirehoseLogWriter(str(logd), ticks_per_segment=3)
+    live = AssistanceService(cfg, bg_cfg=bgc)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+        live.step(ev, tw)
+    w.close()
+    rec, stats = recover_service(cfg, rt_ckpt, bg_ckpt, str(logd),
+                                 ReplayConfig(chunk_ticks=4), bg_cfg=bgc)
+    assert stats["rt"]["restored_step"] is None
+    assert stats["rt"]["n_ticks"] == stats["bg"]["n_ticks"] == 6
+    _assert_states_equal(live.rt.state, rec.rt.state)
+    _assert_states_equal(live.bg.state, rec.bg.state)
+
+
+# ---------------------------------------------------------------------------
+# Incremental (delta) snapshot chains
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["hash", "region"])
+def test_delta_chain_restore_equals_full(tmp_path, layout):
+    """Delta-chain restore == full-snapshot restore, bit for bit, at every
+    step (both cooc layouts: region metadata — chain directory, fills,
+    freelist — rides delta snapshots too), and deltas are smaller."""
+    cfg = _cfg("lazy", cooc_layout=layout)
+    eng = SearchAssistanceEngine(cfg)
+    ck_full = CheckpointManager(str(tmp_path / "full"), keep_n=0)
+    ck_delta = CheckpointManager(str(tmp_path / "delta"), keep_n=0,
+                                 full_interval=3)
+    full_bytes, delta_bytes = [], []
+    for t, (ev, tw) in enumerate(_batches(8, seed=3)):
+        eng.step(ev, tw)
+        eng.save_snapshot(ck_full)
+        full_bytes.append(ck_full.last_save_bytes)
+        eng.save_snapshot(ck_delta)
+        if ck_delta.last_save_kind == "delta":
+            delta_bytes.append(ck_delta.last_save_bytes)
+    assert len(delta_bytes) >= 4, "chain must actually contain deltas"
+    for step in ck_full.steps():
+        a, sa = ck_full.restore(eng.state, step)
+        b, sb = ck_delta.restore(eng.state, step)
+        assert sa == sb == step
+        _assert_states_equal(a, b)
+    assert max(delta_bytes) < min(full_bytes), \
+        "a delta snapshot must write fewer bytes than any full"
+
+
+def test_corrupt_delta_mid_chain_falls_back(tmp_path):
+    """A corrupt/torn delta mid-chain falls back to the newest intact FULL
+    snapshot; recovery replays the longer log tail and still reproduces
+    the uninterrupted run bit-for-bit."""
+    cfg = _cfg("lazy")
+    batches = _batches(12, seed=7)
+    logd = str(tmp_path / "log")
+    ckpt = CheckpointManager(str(tmp_path / "ck"), keep_n=0, full_interval=4)
+    w = FirehoseLogWriter(logd, ticks_per_segment=3)
+    live = SearchAssistanceEngine(cfg)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+        live.step(ev, tw)
+        if (t + 1) % 2 == 0:
+            live.save_snapshot(ckpt)   # steps 2f 4d 6d 8d 10f 12d
+    w.close()
+    kinds = {s: ckpt.manifest(s)["kind"] for s in ckpt.steps()}
+    assert kinds == {2: "full", 4: "delta", 6: "delta", 8: "delta",
+                     10: "full", 12: "delta"}
+
+    # intact chain first: newest snapshot (12 = delta on full 10) restores
+    eng, stats = recover_engine(cfg, ckpt, logd)
+    assert not stats["restore"]["fell_back"]
+    _assert_states_equal(live.state, eng.state)
+
+    # corrupt a MID-chain delta (6): restoring 8 must fall back to full 2
+    # and replay the longer tail 2..12 — same final state
+    corrupt_snapshot(ckpt, 6)
+    eng, stats = recover_engine(cfg, ckpt, logd, step=8)
+    assert stats["restore"] == {"requested": 8, "restored": 2,
+                                "chain_len": 1, "fell_back": True}
+    assert stats["n_ticks"] == 10
+    _assert_states_equal(live.state, eng.state)
+
+    # corrupt the newest FULL (10): the newest delta's chain breaks too;
+    # fallback skips past it to full 2
+    corrupt_snapshot(ckpt, 10)
+    eng, stats = recover_engine(cfg, ckpt, logd)
+    assert stats["restore"]["fell_back"] and \
+        stats["restore"]["restored"] == 2
+    _assert_states_equal(live.state, eng.state)
+
+    # no intact full at all -> recovery fails loudly
+    corrupt_snapshot(ckpt, 2)
+    with pytest.raises(FileNotFoundError, match="intact full"):
+        recover_engine(cfg, ckpt, logd)
+
+
+def test_delta_retention_never_strands(tmp_path):
+    """keep_n retention must never unlink a full (or intermediate delta)
+    that a retained delta's chain still references — every retained step
+    stays restorable at all times."""
+    cfg = _cfg("lazy", rank_every=0)
+    eng = SearchAssistanceEngine(cfg)
+    ckpt = CheckpointManager(str(tmp_path), keep_n=2, full_interval=3)
+    for t, (ev, tw) in enumerate(_batches(8, seed=9)):
+        eng.step(ev, tw)
+        eng.save_snapshot(ckpt)
+        states = {}
+        for s in ckpt.steps():
+            # chain-walk every retained step via manifests only: each
+            # member must exist, ending at a full
+            cur, hops = s, 0
+            while True:
+                man = ckpt.manifest(cur)   # raises if stranded
+                if man["kind"] == "full":
+                    break
+                cur = man["base_step"]
+                hops += 1
+                assert hops <= ckpt.full_interval
+            restored, got = ckpt.restore(eng.state, s)
+            assert got == s and not ckpt.last_restore["fell_back"]
+            states[s] = restored
+        _assert_states_equal(eng.state, states[max(states)])
+    # kinds ran 1f 2d 3d 4f 5d 6d 7f 8d: the newest keep_n=2 steps are
+    # {7, 8} and 8's base is the full 7 — nothing else may survive
+    assert set(ckpt.steps()) == {7, 8}
+    assert ckpt.manifest(8)["base_step"] == 7
+    assert ckpt.manifest(7)["kind"] == "full"
+
+
+def test_torn_manifest_falls_back(tmp_path):
+    """A torn/garbled MANIFEST.json at the newest step (steps() lists the
+    dir, json.load fails) must not kill recovery: the layout pre-check
+    skips it and the chain walk falls back to the newest intact full."""
+    cfg = _cfg("lazy")
+    batches = _batches(6, seed=13)
+    logd = str(tmp_path / "log")
+    ckpt = CheckpointManager(str(tmp_path / "ck"), keep_n=0, full_interval=3)
+    w = FirehoseLogWriter(logd, ticks_per_segment=3)
+    live = SearchAssistanceEngine(cfg)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+        live.step(ev, tw)
+        if (t + 1) % 2 == 0:
+            live.save_snapshot(ckpt)    # steps 2f 4d 6d
+    w.close()
+    man_path = os.path.join(ckpt._step_dir(6), "MANIFEST.json")
+    with open(man_path, "w") as f:
+        f.write('{"step": 6, "kind"')   # torn mid-write
+    eng, stats = recover_engine(cfg, ckpt, logd)
+    assert stats["restore"]["fell_back"]
+    assert stats["restore"]["restored"] == 2
+    _assert_states_equal(live.state, eng.state)
+
+
+def test_service_engine_only_injection():
+    """AssistanceService(rt=engine) without any config must derive the bg
+    config from the injected engine's cfg, not crash."""
+    eng = SearchAssistanceEngine(_cfg("lazy"))
+    svc = AssistanceService(rt=eng)
+    assert svc.rt is eng
+    assert svc.bg.cfg.rank_every == eng.cfg.rank_every * 12
+
+
+def test_delta_shape_change_forces_full(tmp_path):
+    """A tree whose structure/shape changed since the shadow (e.g. a
+    different engine config) must be written as a full, never a bogus
+    delta."""
+    ckpt = CheckpointManager(str(tmp_path), full_interval=4)
+    ckpt.save(1, {"x": jnp.arange(8, dtype=jnp.float32)})
+    ckpt.save(2, {"x": jnp.arange(8, dtype=jnp.float32) * 2})
+    assert ckpt.last_save_kind == "delta"
+    ckpt.save(3, {"x": jnp.arange(16, dtype=jnp.float32)})
+    assert ckpt.last_save_kind == "full"
+    restored, _ = ckpt.restore({"x": jnp.zeros(16, jnp.float32)}, 3)
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.arange(16))
+    # a freshly constructed manager has no shadow: first save is full
+    ckpt2 = CheckpointManager(str(tmp_path), full_interval=4)
+    ckpt2.save(4, {"x": jnp.arange(16, dtype=jnp.float32)})
+    assert ckpt2.last_save_kind == "full"
+
+
+# ---------------------------------------------------------------------------
+# Per-engine frontend staleness (operators see BOTH halves catch up)
+# ---------------------------------------------------------------------------
+
+def test_frontend_bg_metrics(tmp_path):
+    rt_dir, bg_dir = str(tmp_path / "rt"), str(tmp_path / "bg")
+    log_dir = str(tmp_path / "log")
+    batches = _batches(10)
+    w = FirehoseLogWriter(log_dir, ticks_per_segment=2)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+    w.close()
+    rt_ckpt, bg_ckpt = CheckpointManager(rt_dir), CheckpointManager(bg_dir)
+    # rt persisted at the head, bg far behind (its half is still replaying)
+    rt_ckpt.save(9, pack_suggestions({1: [(2, 1.0)]}), meta={"log_tick": 10})
+    bg_ckpt.save(3, pack_suggestions({1: [(3, 0.5)]}), meta={"tick": 3})
+    f = SuggestFrontend(rt_dir, bg_dir, log_dir=log_dir, stale_lag_ticks=2)
+    f.poll()
+    m = f.metrics()
+    assert m["rt_tick"] == 9 and m["rt_lag_ticks"] == 0
+    assert not m["rt_catching_up"] and not m["catching_up"]
+    assert m["bg_step"] == 3 and m["bg_tick"] == 3
+    assert m["bg_age_s"] is not None and m["bg_age_s"] >= 0
+    # log holds ticks 0..9, bg tables reflect 0..3 -> 6 pending bg ticks
+    assert m["bg_lag_ticks"] == 6 and m["bg_catching_up"]
+    # bg catches up to the head -> its flag clears independently of rt
+    bg_ckpt.save(9, pack_suggestions({1: [(3, 0.5)]}), meta={"tick": 9})
+    f.poll()
+    m = f.metrics()
+    assert m["bg_lag_ticks"] == 0 and not m["bg_catching_up"]

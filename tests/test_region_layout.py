@@ -609,6 +609,55 @@ def test_region_crash_at_segment_boundaries_bit_exact(rng):
             assert ref.suggestions == eng.suggestions
 
 
+def test_region_delta_snapshot_chain_bit_exact(tmp_path):
+    """Incremental (delta) snapshots under the region layout: the region
+    metadata leaves (chain directory, owning fps, fills, freelist owners)
+    ride delta snapshots bit-exactly, and a corrupt delta falls back to
+    the newest intact full + longer replay — still bit-exact."""
+    cfg = _engine_cfg("region")
+    batches = _batches(8, seed=23)
+    logd = str(tmp_path / "log")
+    ckpt = CheckpointManager(str(tmp_path / "ck"), keep_n=0, full_interval=3)
+    w = FirehoseLogWriter(logd, ticks_per_segment=2)
+    live = SearchAssistanceEngine(cfg)
+    states_at = {}
+    n_delta = 0
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+        live.step(ev, tw)
+        live.save_snapshot(ckpt)
+        n_delta += ckpt.last_save_kind == "delta"
+        states_at[t + 1] = live.state
+    w.close()
+    assert n_delta >= 4
+    # every step restores bit-exactly through its chain (incl. the region
+    # metadata: leaf compare covers chain_region/chain_hi/lo/fill/owner)
+    for s in ckpt.steps():
+        restored, got = ckpt.restore(live.state, s)
+        assert got == s
+        la, ta = jax.tree.flatten(states_at[s])
+        lb, tb = jax.tree.flatten(restored)
+        assert ta == tb
+        for i, (x, y) in enumerate(zip(la, lb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"state leaf {i}")
+    # corrupt the newest chain's delta: recovery falls back to an older
+    # intact full and replays the longer tail to the same final state
+    from repro.distributed.fault_tolerance import corrupt_snapshot
+    newest = ckpt.steps()[-1]
+    assert ckpt.manifest(newest)["kind"] == "delta"
+    corrupt_snapshot(ckpt, newest)
+    eng, stats = recover_engine(cfg, ckpt, logd)
+    assert stats["restore"]["fell_back"]
+    assert stats["n_ticks"] == newest - stats["restore"]["restored"]
+    la, ta = jax.tree.flatten(states_at[newest])
+    lb, tb = jax.tree.flatten(eng.state)
+    assert ta == tb
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"state leaf {i}")
+
+
 def test_layout_mismatch_restore_raises(tmp_path):
     cfg = _engine_cfg("region")
     eng = SearchAssistanceEngine(cfg)

@@ -159,6 +159,69 @@ def test_restore_skips_manifestless_step_dirs(tmp_path):
     assert ckpt.restore_host()["leaf_0"].shape == (4,)
 
 
+def test_delta_checkpoint_chain_roundtrip(tmp_path):
+    """full_interval > 1 writes delta steps (changed rows only) chained to
+    the last full; every step restores exactly, manifests record the chain
+    (kind/base_step/sha256/nbytes), and bf16 leaves survive the delta
+    raw-view roundtrip."""
+    ckpt = CheckpointManager(str(tmp_path), keep_n=0, full_interval=3)
+    tree = {"a": jnp.zeros((64,), jnp.float32),
+            "b": jnp.zeros((8, 2), jnp.bfloat16),
+            "s": jnp.zeros((), jnp.int32)}
+    states = {}
+    cur = tree
+    for s in range(1, 7):
+        cur = {"a": cur["a"].at[s].set(float(s)),
+               "b": cur["b"].at[s % 8, 0].set(s),
+               "s": jnp.int32(s)}
+        ckpt.save(s, cur)
+        states[s] = cur
+    kinds = {s: ckpt.manifest(s)["kind"] for s in ckpt.steps()}
+    assert kinds == {1: "full", 2: "delta", 3: "delta", 4: "full",
+                     5: "delta", 6: "delta"}
+    assert ckpt.manifest(5)["base_step"] == 4
+    assert ckpt.manifest(6)["base_step"] == 5
+    for s in range(1, 7):
+        man = ckpt.manifest(s)
+        assert man["sha256"] and man["nbytes"] > 0
+        restored, got = ckpt.restore(tree, s)
+        assert got == s
+        for k in tree:
+            np.testing.assert_array_equal(
+                np.asarray(restored[k], np.float32),
+                np.asarray(states[s][k], np.float32), err_msg=f"{s}:{k}")
+        assert restored["b"].dtype == jnp.bfloat16
+    # restore_host walks the chain too (composed leaf_{i} arrays)
+    host = ckpt.restore_host(6)
+    np.testing.assert_array_equal(host["leaf_0"],
+                                  np.asarray(states[6]["a"]))
+
+
+def test_delta_shadow_does_not_alias_numpy_leaves(tmp_path):
+    """The diff shadow must hold the as-saved content: a caller mutating
+    its own numpy arrays in place between saves must still get a correct
+    delta (np.asarray of a numpy leaf aliases the caller's buffer)."""
+    ckpt = CheckpointManager(str(tmp_path), full_interval=4)
+    a = np.zeros(10, np.float32)
+    ckpt.save(1, {"x": a})
+    a[0] = 5.0                      # in-place mutation of the SAME buffer
+    ckpt.save(2, {"x": a})
+    assert ckpt.last_save_kind == "delta"
+    restored, _ = ckpt.restore({"x": jnp.zeros(10, jnp.float32)}, 2)
+    assert float(restored["x"][0]) == 5.0
+
+
+def test_full_interval_one_is_pure_fulls(tmp_path):
+    """The default manager (full_interval=1) never writes deltas — the
+    pre-delta behavior, byte-compatible manifests included."""
+    ckpt = CheckpointManager(str(tmp_path), full_interval=1)
+    for s in (1, 2, 3):
+        ckpt.save(s, {"x": jnp.full((4,), s, jnp.float32)})
+        assert ckpt.last_save_kind == "full"
+        assert ckpt.manifest(s)["kind"] == "full"
+        assert ckpt.manifest(s)["base_step"] is None
+
+
 def test_leader_election_and_failover(tmp_path):
     group = ReplicaGroup(3, CheckpointManager(str(tmp_path)))
     assert group.leader() == 0
