@@ -1,0 +1,174 @@
+"""R-overload (§1/§4): survive a 50x flash crowd within the step-latency SLO.
+
+The paper's motivating scenario end to end: a calm Zipf firehose, then a
+breaking-news spike that multiplies query volume ~50x within a few ticks
+(``streaming/workload.py``), driven through the overload-controlled
+serving stack (``streaming/overload.py``). Simulated arrival pacing turns
+slow processing into lag, which the controller must absorb by fusing ticks
+into ``ingest_many`` micro-batches and climbing the degradation ladder
+(shed rt ranking -> stretch bg ranking -> admission-control ingest).
+
+Reported rows:
+
+  * ``overload_calm_step``        — per-tick step cost before the spike;
+  * ``overload_spike_throughput`` — ingest rate through the spike window
+    (events/s, with the peak per-tick cost);
+  * ``overload_slo_recovery``     — ticks from the spike's plateau end
+    until the ladder is back at level 0 with the SLO met (the
+    "degrades gracefully, recovers to SLO within N ticks" property);
+  * ``overload_shed_fraction``    — fraction of offered events shed over
+    the whole run (every one of them counted, never silent);
+  * ``overload_lag_bound``        — max/final lag in ticks (no unbounded
+    growth under the spike).
+
+A shape-enumeration warm pass (raw and level-3-admitted bucket shapes, at
+K=1 and K=batch_max) compiles every dispatch the measured pass can hit
+before pacing starts, so jit compiles never masquerade as lag.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.background import AssistanceService
+from repro.core.decay import DecayConfig
+from repro.core.engine import EngineConfig
+from repro.streaming import (FirehoseWorkload, SLOConfig, SpikeSpec,
+                             WorkloadConfig, admit_events, admit_tweets)
+from .common import Row
+
+N_TICKS = 56
+SPIKE_AT = 10
+SPIKE = SpikeSpec(t_start=SPIKE_AT, mult=50.0, ramp_ticks=2.0,
+                  plateau_ticks=6.0, decay_ticks=4.0)
+PLATEAU_END = SPIKE_AT + 6
+
+
+def _wl() -> FirehoseWorkload:
+    return FirehoseWorkload(WorkloadConfig(
+        base_queries_per_tick=512, base_tweets_per_tick=32,
+        min_bucket=512, min_tweet_bucket=32, spikes=(SPIKE,)), seed=17)
+
+
+def _ecfg() -> EngineConfig:
+    return EngineConfig(query_capacity=1 << 14, cooc_capacity=1 << 17,
+                        session_capacity=1 << 13, rank_every=8,
+                        decay=DecayConfig(policy="lazy"))
+
+
+def _warm_shapes(slo: SLOConfig, batches) -> None:
+    """Compile every (K, bucket-shape) dispatch the paced run can hit.
+
+    The controller's shapes are data-dependent (adaptive K, level-3
+    compaction), so a paced throwaway run can follow a different
+    trajectory than the measured one and leave shapes cold — a single
+    jit compile then reads as several ticks of "lag". Enumerate instead:
+    each distinct raw tick shape and each distinct level-3 admitted
+    shape, dispatched as a K=1 flush and a K=batch_max chunk."""
+    svc = AssistanceService(_ecfg(), slo=slo)
+    for level in (0, 3):
+        svc.overload.ladder.force(level)
+        seen = set()
+        for ev, tw in batches:
+            aev, _ = admit_events(ev, level, slo)
+            atw, _ = admit_tweets(tw, level, slo)
+            key = (aev.q_fp.shape[0],
+                   None if atw is None else atw.grams.shape)
+            if key in seen:
+                continue
+            seen.add(key)
+            for lag in (0.0, 2.0 * slo.lag_batch * slo.batch_max):
+                for _ in range(slo.batch_max):
+                    svc.step(ev, tw, lag_hint=lag)
+                svc.drain()
+    svc.overload.ladder.force(None)
+
+
+def _run_paced(slo: SLOConfig, tick_ms: float, batches) -> dict:
+    """Drive the controlled service under simulated real-time arrivals:
+    tick t arrives at t*tick_ms of wall time; processing slower than that
+    accrues lag the controller must work off."""
+    svc = AssistanceService(_ecfg(), slo=slo)
+    lag_hist, level_hist, tick_ms_hist = [], [], []
+    wall0 = time.perf_counter()
+    for t, (ev, tw) in enumerate(batches):
+        arrived = (time.perf_counter() - wall0) * 1e3 / tick_ms
+        lag = max(0.0, arrived - t)
+        t0 = time.perf_counter()
+        svc.step(ev, tw, lag_hint=lag)
+        tick_ms_hist.append((time.perf_counter() - t0) * 1e3)
+        lag_hist.append(lag)
+        level_hist.append(svc.overload.ladder.level)
+    svc.drain()
+    return {"svc": svc, "lag": lag_hist, "level": level_hist,
+            "tick_ms": tick_ms_hist,
+            "stats": svc.overload.stats_snapshot()}
+
+
+def run() -> List[Row]:
+    wl = _wl()
+    batches = [wl.gen_tick(t) for t in range(N_TICKS)]
+    n_offered = sum(int(ev.valid.sum()) for ev, _ in batches)
+
+    # calibration + warm pass: un-paced (zero lag -> K=1, level 0 states
+    # stay reachable), then a paced throwaway to warm the batched shapes
+    warm = AssistanceService(_ecfg(), slo=SLOConfig(slo_ms=1e9))
+    calm_ms = []
+    for t, (ev, tw) in enumerate(batches):
+        t0 = time.perf_counter()
+        warm.step(ev, tw)
+        if t < SPIKE_AT:
+            calm_ms.append((time.perf_counter() - t0) * 1e3)
+    warm.drain()
+    calm_ms.sort()
+    calm_med = calm_ms[len(calm_ms) // 2]
+
+    # the SLO bench contract: a per-tick budget a calm tick easily meets
+    # and a 50x spike tick cannot — the ladder has to earn the difference.
+    # The profile is deliberately aggressive: escalate on the first hot
+    # tick (a 50x tick burns ~6 budgets, so every unshedded one matters),
+    # at level 3 hash-sample the WHOLE hose (tail_src=0) down to 8% —
+    # which brings a plateau tick back under the tick budget — and score
+    # p95 over a short rolling window so the spike's heavy ticks age out
+    # and the ladder can actually cool down afterwards.
+    tick_ms = max(8.0 * calm_med, 1.0)
+    slo = SLOConfig(slo_ms=3.0 * tick_ms, latency_window=16,
+                    batch_max=2, lag_batch=1.0,
+                    up_lag=2.0, down_lag=1.0, up_ticks=1, down_ticks=2,
+                    tail_src=0, tail_keep=0.08, compact_min=1024)
+    _warm_shapes(slo, batches)                 # warm the (K, bucket) pairs
+    r = _run_paced(slo, tick_ms, batches)      # measured
+
+    stats = r["stats"]
+    spike_ms = r["tick_ms"][SPIKE_AT:PLATEAU_END]
+    spike_ev = sum(int(ev.valid.sum())
+                   for ev, _ in batches[SPIKE_AT:PLATEAU_END])
+    spike_s = sum(spike_ms) / 1e3
+    # SLO recovery: first tick past the plateau at level 0 with its lag gone
+    rec = next((t for t in range(PLATEAU_END, N_TICKS)
+                if r["level"][t] == 0 and r["lag"][t] <= slo.down_lag),
+               None)
+    ticks_to_slo = -1 if rec is None else rec - PLATEAU_END
+    shed_frac = stats["n_shed_events"] / max(n_offered, 1)
+    max_lag, final_lag = max(r["lag"]), r["lag"][-1]
+
+    return [
+        ("overload_calm_step", calm_med * 1e3,
+         f"tick_budget={tick_ms:.1f}ms slo_p95={slo.slo_ms:.1f}ms"),
+        ("overload_spike_throughput", spike_s * 1e6 / max(spike_ev, 1),
+         f"{spike_ev / max(spike_s, 1e-9):.0f} ev/s through a "
+         f"{SPIKE.mult:.0f}x spike; peak_tick={max(spike_ms):.1f}ms"),
+        ("overload_slo_recovery", max(ticks_to_slo, 0) * tick_ms * 1e3,
+         f"ticks_to_slo={ticks_to_slo} max_level="
+         f"{max(r['level'])} esc={stats['n_escalations']} "
+         f"deesc={stats['n_deescalations']}"),
+        ("overload_shed_fraction", stats["step_p95_ms"] * 1e3
+         if stats["step_p95_ms"] else 0.0,
+         f"shed={shed_frac:.3f} of {n_offered} offered ev "
+         f"(+{stats['n_shed_tweets']} tweets, "
+         f"{stats['n_shed_rank_rt'] + stats['n_shed_rank_bg']} ranks); "
+         f"flushes={stats['n_flushes']}/{N_TICKS} ticks"),
+        ("overload_lag_bound", final_lag * tick_ms * 1e3,
+         f"max_lag={max_lag:.1f} final_lag={final_lag:.1f} ticks "
+         f"(bounded: {'yes' if final_lag <= max(2.0, max_lag / 2) else 'NO'})"),
+    ]

@@ -18,7 +18,7 @@ import time
 import traceback
 
 BENCHES = ["churn", "ingest", "latency", "ranking", "recovery", "spelling",
-           "store", "memory_coverage", "engine_perf", "roofline"]
+           "store", "memory_coverage", "engine_perf", "roofline", "overload"]
 
 
 def main() -> None:

@@ -22,4 +22,7 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
     python -m benchmarks.run --json results/BENCH_recovery.json recovery
     # store smoke: region-vs-fused-vs-twopass insert rows (the PR 4 layout)
     python -m benchmarks.run --json results/BENCH_store.json store
+    # overload smoke: 50x flash crowd -> spike throughput, ticks-to-SLO
+    # recovery, shed fraction (the degradation-ladder contract)
+    python -m benchmarks.run --json results/BENCH_overload.json overload
 fi

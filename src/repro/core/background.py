@@ -65,13 +65,21 @@ class AssistanceService:
     log tail per engine (``rt`` from its offset at the rt cadences, ``bg``
     from its offset at the bg cadences), then rebuilds this cache.
     ``rt``/``bg`` can be injected for exactly that recovery path.
+
+    With ``slo`` set (a ``streaming.overload.SLOConfig``), ``step`` routes
+    through an :class:`~repro.streaming.overload.OverloadController`:
+    lag-adaptive micro-batching over the fused ``ingest_many`` scan plus
+    the degradation ladder (shed rt ranking -> stretch bg ranking ->
+    admission-control ingest), every shed counted. ``mirrors`` are extra
+    follower rt engines fed the same flushed stacks (replica failover).
     """
 
     def __init__(self, rt_cfg: Optional[EngineConfig] = None,
                  alpha: float = 0.7,
                  bg_cfg: Optional[EngineConfig] = None,
                  rt: Optional[SearchAssistanceEngine] = None,
-                 bg: Optional[SearchAssistanceEngine] = None):
+                 bg: Optional[SearchAssistanceEngine] = None,
+                 slo=None, mirrors=()):
         assert rt is not None or rt_cfg is not None
         self.rt = rt if rt is not None \
             else SearchAssistanceEngine(rt_cfg, name="rt")
@@ -84,15 +92,42 @@ class AssistanceService:
         self.bg = bg
         self.alpha = alpha
         self._cache: Dict[int, List[Tuple[int, float]]] = {}
+        self.overload = None
+        if slo is not None:
+            from ..streaming.overload import OverloadController
+            self.overload = OverloadController(self, slo, mirrors=mirrors)
 
-    def step(self, query_events=None, tweets=None) -> Optional[Dict]:
+    def step(self, query_events=None, tweets=None, *, log_append=None,
+             lag_hint: float = 0.0) -> Optional[Dict]:
         """Feed one tick to both engines; returns the per-engine rank-cycle
-        stats (``{"rt": ..., "bg": ...}``) when either engine ranked."""
+        stats (``{"rt": ..., "bg": ...}``) when either engine ranked.
+
+        ``log_append(tick, events, tweets)`` is called BEFORE ingestion in
+        both paths (durability precedes state mutation — under overload
+        control it receives the admission-controlled batch, which is what
+        makes mid-shed crash recovery bit-exact). ``lag_hint`` is the
+        caller's external backlog estimate in ticks (arrival tick minus
+        ingested tick under simulated pacing); the overload controller
+        max-combines it with its own buffer backlog.
+        """
+        if self.overload is not None:
+            return self.overload.offer(query_events, tweets,
+                                       log_append=log_append,
+                                       lag_hint=lag_hint)
+        if log_append is not None:
+            log_append(int(self.rt.state.tick), query_events, tweets)
         r1 = self.rt.step(query_events, tweets)
         r2 = self.bg.step(query_events, tweets)
         if r1 is not None or r2 is not None:
             self.refresh_cache()
             return {"rt": r1, "bg": r2}
+        return None
+
+    def drain(self) -> Optional[Dict]:
+        """Flush any ticks the overload micro-batcher still buffers (no-op
+        without overload control)."""
+        if self.overload is not None:
+            return self.overload.drain()
         return None
 
     def refresh_cache(self) -> None:
@@ -117,6 +152,14 @@ class AssistanceService:
         delta snapshots pay off most — few slots change per interval, so
         the chain lets the snapshot cadence shrink without a write-volume
         blowup, and the replay tail (time-to-fresh) shrinks with it.
+
+        Under overload control the controller's stats ride along in the
+        meta (``overload`` key) so frontends can surface the degradation
+        level and shed counters of the backend that produced the tables.
         """
+        if self.overload is not None:
+            extra_meta = dict(extra_meta or {})
+            extra_meta.setdefault("overload",
+                                  self.overload.stats_snapshot())
         return (self.rt.save_snapshot(rt_ckpt, extra_meta),
                 self.bg.save_snapshot(bg_ckpt, extra_meta))

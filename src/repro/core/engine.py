@@ -348,6 +348,15 @@ class TickStack(NamedTuple):
         return self.sess_hi.shape[0]
 
 
+def rank_due(cfg: EngineConfig, tick: int) -> bool:
+    """Is a ranking cycle due at ``tick``? The single statement of the
+    rank cadence, shared by live ``step()``, the catch-up replay counting
+    (``streaming/replay.py``) and the overload controller's rank
+    governance (``streaming/overload.py``) — shed/suppressed cycles are
+    counted against exactly this predicate."""
+    return cfg.rank_every > 0 and tick > 0 and tick % cfg.rank_every == 0
+
+
 def cadence_due(cfg: EngineConfig, tick: int) -> Optional[str]:
     """Which maintenance cycle is due at ``tick`` (host-side, concrete).
 
@@ -509,7 +518,7 @@ class SearchAssistanceEngine:
                 self.state, jnp.int32(self.cfg.decay_every), cfg=self.cfg)
             self.n_decay_cycles += 1
             self.last_maintenance = {k: float(v) for k, v in stats.items()}
-        if self.cfg.rank_every > 0 and tick > 0 and tick % self.cfg.rank_every == 0:
+        if rank_due(self.cfg, tick):
             out = self.run_rank_cycle()
         self.state = advance_tick(self.state)
         return out

@@ -398,7 +398,17 @@ def save_sharded_snapshot(state: ShardedState, ckpt, meta=None) -> str:
     """Snapshot = checkpoint + log offset for the sharded engine.
 
     The whole ``ShardedState`` pytree (every shard's stores) goes into one
-    checkpoint; the manifest records the shared-log replay offset."""
+    checkpoint; the manifest records the shared-log replay offset.
+
+    The save routes through the manager's delta-snapshot chain exactly
+    like the unsharded engines: with ``CheckpointManager.full_interval >
+    1`` only the changed leading rows of each (fully-addressable, host-
+    readable) shard-stacked leaf are written between fulls, chained to the
+    last full via the manifest (``kind``/``base_step``). Sharded stores are
+    where this pays off most — per-shard capacity shrinks with the shard
+    count, so between snapshots each shard touches few rows of its lane.
+    ``restore_sharded_snapshot`` sees the composed state transparently
+    (chain walk + fallback live in the manager)."""
     tick = int(np.asarray(state.tick))
     m = {"log_tick": tick, "engine": "sharded"}
     if meta:

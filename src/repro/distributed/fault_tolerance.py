@@ -53,6 +53,12 @@ a full checkpoint, byte-identical behavior to the pre-delta manager. With
 delta diff runs against an in-memory shadow of the last-saved leaves, so a
 freshly constructed manager (e.g. after a process restart) always writes a
 full first.
+
+The manager is layout-agnostic: sharded engines route their shard-stacked
+leaves (``core.sharded_engine.save_sharded_snapshot``) through the same
+delta chains with no special casing, and live-serving snapshots taken
+under overload control carry the controller's shed/latency counters in
+``meta["overload"]`` so a restart resumes with its accounting intact.
 """
 from __future__ import annotations
 

@@ -14,8 +14,20 @@ replays the shared log tail faster than real time (ranking suppressed per
 engine until its lag clears), rebuilds the interpolation cache, and keeps
 serving from where it left off.
 
+With ``--slo-ms`` set the live path runs under the overload controller
+(``streaming/overload.py``): lag-adaptive micro-batching through the fused
+``ingest_many`` scan plus the degradation ladder (shed rt ranking ->
+stretch bg ranking -> admission-control ingest), every shed counted and
+surfaced in the status line. ``--workload firehose`` swaps the synthetic
+stream for the flash-crowd workload generator (``--spike-mult`` x volume
+at ``--spike-at``), ``--tick-ms`` paces simulated arrivals so falling
+behind real time shows up as lag, and ``--slow-io-ms`` injects disk
+latency into the log writer (chaos knob).
+
   python -m repro.launch.serve_assist --ticks 120 --out /tmp/assist
   python -m repro.launch.serve_assist --ticks 120 --out /tmp/assist --recover
+  python -m repro.launch.serve_assist --ticks 120 --out /tmp/assist \\
+      --slo-ms 80 --workload firehose --spike-mult 50 --tick-ms 40
 """
 from __future__ import annotations
 
@@ -25,7 +37,7 @@ import time
 
 import numpy as np
 
-from ..core.background import background_config
+from ..core.background import AssistanceService, background_config
 from ..core.engine import EngineConfig, SearchAssistanceEngine
 from ..core.spelling import SpellConfig, spelling_cycle
 from ..core import stores
@@ -34,7 +46,19 @@ from ..data.stream import StreamConfig, SyntheticStream, steve_jobs_scenario
 from ..distributed.fault_tolerance import CheckpointManager, ReplicaGroup
 from ..serving.serve import SuggestFrontend, ServerSet, pack_suggestions
 from ..streaming import (FirehoseLogReader, FirehoseLogWriter, ReplayConfig,
-                         recover_service)
+                         FirehoseWorkload, SLOConfig, SpamSpec, SpikeSpec,
+                         WorkloadConfig, recover_service, slow_io)
+
+
+def _fmt(v, nd: int = 1):
+    """Status-line formatting: a missing signal prints as '?', not None
+    (lag is None before the first log segment seals; latency percentiles
+    are None before the first overload-meta persist)."""
+    if v is None:
+        return "?"
+    if isinstance(v, float):
+        return f"{v:.{nd}f}"
+    return str(v)
 
 
 def main() -> None:
@@ -54,12 +78,39 @@ def main() -> None:
                     help="state-snapshot chain: one full every N snapshots, "
                          "deltas (changed slots only) in between")
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="enable overload control with this per-tick step "
+                         "latency SLO (0 = legacy per-tick path)")
+    ap.add_argument("--workload", choices=("synthetic", "firehose"),
+                    default="synthetic",
+                    help="'firehose' = flash-crowd workload generator "
+                         "(streaming/workload.py)")
+    ap.add_argument("--spike-mult", type=float, default=50.0,
+                    help="flash-crowd peak volume multiplier (firehose)")
+    ap.add_argument("--spike-at", type=int, default=30,
+                    help="flash-crowd onset tick (firehose)")
+    ap.add_argument("--tick-ms", type=float, default=0.0,
+                    help="simulated real-time budget per tick; processing "
+                         "slower than this accrues lag (0 = no pacing)")
+    ap.add_argument("--slow-io-ms", type=float, default=0.0,
+                    help="inject this much latency into every log-segment "
+                         "seal (chaos: degraded disk)")
     args = ap.parse_args()
 
-    scfg, event = steve_jobs_scenario(
-        base_cfg=StreamConfig(vocab_size=2048, queries_per_tick=1024,
-                              tweets_per_tick=128))
-    stream = SyntheticStream(scfg, seed=0)
+    if args.workload == "firehose":
+        wl = FirehoseWorkload(WorkloadConfig(
+            base_queries_per_tick=1024, base_tweets_per_tick=64,
+            spikes=(SpikeSpec(t_start=args.spike_at, mult=args.spike_mult),),
+            spam=SpamSpec()), seed=0)
+        gen_tick, tok = wl.gen_tick, wl.tok
+        head, head_t0 = "breaking0 term0", args.spike_at
+    else:
+        scfg, event = steve_jobs_scenario(
+            base_cfg=StreamConfig(vocab_size=2048, queries_per_tick=1024,
+                                  tweets_per_tick=128))
+        stream = SyntheticStream(scfg, seed=0)
+        gen_tick, tok = stream.gen_tick, stream.tok
+        head, head_t0 = "steve jobs", event.t_start
     ecfg = EngineConfig(query_capacity=1 << 14, cooc_capacity=1 << 17,
                         session_capacity=1 << 14, decay_every=6,
                         rank_every=12, use_kernel=args.use_kernel)
@@ -117,53 +168,111 @@ def main() -> None:
 
     writer = FirehoseLogWriter(log_dir, ticks_per_segment=8,
                                keep_segments=16)
+    if args.slow_io_ms > 0:
+        slow_io(writer, ("flush",), args.slow_io_ms / 1e3)
     bg_ckpt = CheckpointManager(bg_dir)
     spell_ckpt = CheckpointManager(spell_dir)
 
-    frontends = [SuggestFrontend(rt_dir, bg_dir, stream.tok,
+    frontends = [SuggestFrontend(rt_dir, bg_dir, tok,
                                  spell_dir=spell_dir, log_dir=log_dir)
                  for _ in range(2)]
     serverset = ServerSet(frontends)
-    head = "steve jobs"
 
+    # overload control (--slo-ms): one controller drives the whole stack —
+    # leader rt engine + bg engine, with the follower replicas as mirrors
+    # fed the same fused flushed stacks
+    svc = None
+    if args.slo_ms > 0:
+        svc = AssistanceService(rt=backends[0], bg=bg_engine,
+                                slo=SLOConfig(slo_ms=args.slo_ms),
+                                mirrors=backends[1:])
+
+    def log_all(tick, ev_a, tw_a):
+        # the elected leader appends (the admitted batch) to the durable log
+        for rid in rt_group.live():
+            rt_group.log_append(rid, writer, tick, ev_a, tw_a)
+
+    wall0 = time.perf_counter()
     for t in range(start_tick, args.ticks):
-        ev, tw = stream.gen_tick(t)
+        ev, tw = gen_tick(t)
         if args.fail_replica_at == t:
             rt_group.fail(0)
             print(f"[t={t}] replica 0 FAILED; leader is now {rt_group.leader()}")
-        # the elected leader appends the tick to the durable log
-        for rid in rt_group.live():
-            rt_group.log_append(rid, writer, t, ev, tw)
-        results = []
-        for rid, eng in enumerate(backends):
-            if not rt_group.alive[rid]:
-                continue
-            results.append((rid, eng.step(ev, tw)))
-        bg_res = bg_engine.step(ev, tw)
 
-        for rid, res in results:
-            if res is not None:   # a rank cycle ran -> leader persists
-                eng = backends[rid]
-                meta = {"tick": t, "layout": eng.cfg.cooc_layout}
-                if eng.last_maintenance:   # freelist pressure -> frontends
-                    meta["maintenance"] = eng.last_maintenance
+        if svc is not None:
+            # simulated arrival pacing: ticks arrive every --tick-ms of
+            # wall time; processing slower than that accrues lag the
+            # controller must batch/shed away
+            lag_hint = 0.0
+            if args.tick_ms > 0:
+                arrived = (time.perf_counter() - wall0) * 1e3 / args.tick_ms
+                lag_hint = max(0.0, start_tick + arrived - t)
+            res = svc.step(ev, tw, log_append=log_all, lag_hint=lag_hint)
+            leader = rt_group.leader()
+            ranked = res is not None and res.get("rt") is not None
+            # persist on a rank cycle — and heartbeat at the same cadence
+            # while ranking is shed, so frontends keep seeing fresh shed /
+            # latency telemetry (and the leader keeps snapshotting state
+            # for crash recovery) through a sustained overload. The
+            # heartbeat re-persists the STALE table under its honest
+            # ``tick`` (the last ranked tick), never claiming freshness.
+            heartbeat = (not ranked and t > 0
+                         and t % svc.rt.cfg.rank_every == 0)
+            if (ranked or heartbeat) and leader is not None:
+                done = int(svc.rt.state.tick) - 1   # stats watermark
+                meta = {"layout": svc.rt.cfg.cooc_layout,
+                        "overload": svc.overload.stats_snapshot()}
+                if ranked:
+                    meta["tick"] = done             # last reflected tick
+                elif svc.rt.last_rank_tick >= 0:
+                    meta["tick"] = int(svc.rt.last_rank_tick) - 1
+                if svc.rt.last_maintenance:
+                    meta["maintenance"] = svc.rt.last_maintenance
                 wrote = rt_group.persist(
-                    rid, t, pack_suggestions(eng.suggestions), meta)
+                    leader, done, pack_suggestions(svc.rt.suggestions), meta)
                 if wrote:
-                    # leader also snapshots BOTH engine states (delta-
-                    # chained) so a crashed stack restores rt AND bg
-                    eng.save_snapshot(state_rt_ckpt)
-                    bg_engine.save_snapshot(state_bg_ckpt)
-                    print(f"[t={t}] leader replica {rid} persisted "
-                          f"{len(backends[rid].suggestions)} suggestion rows"
-                          f" (state snapshots: rt="
-                          f"{state_rt_ckpt.last_save_kind}/"
-                          f"{state_rt_ckpt.last_save_bytes}B, bg="
-                          f"{state_bg_ckpt.last_save_kind}/"
-                          f"{state_bg_ckpt.last_save_bytes}B)")
-        if bg_res is not None:
-            bg_ckpt.save(t, pack_suggestions(bg_engine.suggestions),
-                         meta={"tick": t})
+                    svc.save_snapshot(state_rt_ckpt, state_bg_ckpt)
+                    print(f"[t={t}] leader persisted "
+                          f"{len(svc.rt.suggestions)} rows"
+                          f"{' (heartbeat)' if heartbeat else ''} at level "
+                          f"{svc.overload.ladder.name} (snapshots: rt="
+                          f"{state_rt_ckpt.last_save_kind}, bg="
+                          f"{state_bg_ckpt.last_save_kind})")
+            if res is not None and res.get("bg") is not None:
+                bg_ckpt.save(t, pack_suggestions(svc.bg.suggestions),
+                             meta={"tick": int(svc.bg.state.tick) - 1})
+        else:
+            log_all(t, ev, tw)
+            results = []
+            for rid, eng in enumerate(backends):
+                if not rt_group.alive[rid]:
+                    continue
+                results.append((rid, eng.step(ev, tw)))
+            bg_res = bg_engine.step(ev, tw)
+
+            for rid, res in results:
+                if res is not None:   # a rank cycle ran -> leader persists
+                    eng = backends[rid]
+                    meta = {"tick": t, "layout": eng.cfg.cooc_layout}
+                    if eng.last_maintenance:  # freelist pressure -> frontends
+                        meta["maintenance"] = eng.last_maintenance
+                    wrote = rt_group.persist(
+                        rid, t, pack_suggestions(eng.suggestions), meta)
+                    if wrote:
+                        # leader also snapshots BOTH engine states (delta-
+                        # chained) so a crashed stack restores rt AND bg
+                        eng.save_snapshot(state_rt_ckpt)
+                        bg_engine.save_snapshot(state_bg_ckpt)
+                        print(f"[t={t}] leader replica {rid} persisted "
+                              f"{len(backends[rid].suggestions)} suggestion "
+                              f"rows (state snapshots: rt="
+                              f"{state_rt_ckpt.last_save_kind}/"
+                              f"{state_rt_ckpt.last_save_bytes}B, bg="
+                              f"{state_bg_ckpt.last_save_kind}/"
+                              f"{state_bg_ckpt.last_save_bytes}B)")
+            if bg_res is not None:
+                bg_ckpt.save(t, pack_suggestions(bg_engine.suggestions),
+                             meta={"tick": t})
 
         # periodic spelling job (paper: a Pig job over a long span)
         if t > 0 and t % 60 == 0:
@@ -171,7 +280,7 @@ def main() -> None:
             if leader is not None:
                 exp = stores.export_live(backends[leader].state.qstore)
                 fps = join_fp(exp["key_hi"], exp["key_lo"])
-                texts = [stream.tok.text(int(f)) for f in fps]
+                texts = [tok.text(int(f)) for f in fps]
                 corr = spelling_cycle(fps, texts, exp["weight"],
                                       SpellConfig(use_kernel=args.use_kernel))
                 if corr:
@@ -185,18 +294,34 @@ def main() -> None:
         for f in frontends:
             f.poll()
 
-        if t % 12 == 0 and t >= event.t_start:
+        if t % 12 == 0 and t >= head_t0:
             sugg = serverset.request(head, k=5)
             m = frontends[0].metrics()
-            print(f"[t={t}] related('{head}') = "
-                  f"{[(s, round(sc, 3)) for s, sc in sugg]} "
-                  f"(rt_lag={m['rt_lag_ticks']} bg_lag={m['bg_lag_ticks']})")
+            line = (f"[t={t}] related('{head}') = "
+                    f"{[(s, round(sc, 3)) for s, sc in sugg]} "
+                    f"(rt_lag={_fmt(m['rt_lag_ticks'])} "
+                    f"bg_lag={_fmt(m['bg_lag_ticks'])}")
+            if svc is not None:
+                line += (f" | p50/p95/p99="
+                         f"{_fmt(m['step_p50_ms'])}/"
+                         f"{_fmt(m['step_p95_ms'])}/"
+                         f"{_fmt(m['step_p99_ms'])}ms"
+                         f" level={_fmt(m['shed_level_name'])}"
+                         f" shed={_fmt(m['n_shed_total'])}"
+                         f" [live: level={svc.overload.ladder.name}"
+                         f" shed={svc.overload.stats_snapshot()['n_shed_total']}]")
+            print(line + ")")
 
         if args.crash_at == t:
+            # no drain: buffered-but-unflushed ticks are already in the
+            # durable log, so --recover replays them (bit-exact mid-shed)
             print(f"[t={t}] CRASH (simulated): relaunch with --recover "
                   f"--out {args.out}")
             return
 
+    if svc is not None:
+        svc.drain()
+        print(f"[done] overload stats: {svc.overload.stats_snapshot()}")
     writer.close()
     print("final suggestions for head query:",
           serverset.request(head, k=8))

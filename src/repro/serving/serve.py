@@ -149,6 +149,16 @@ class SuggestFrontend:
         halves catch up independently (the bg engine typically snapshots
         less often and replays a longer tail), which is why operators need
         both. ``lag_ticks``/``catching_up`` remain the rt aliases.
+
+        Overload state (when the backend runs under
+        ``streaming.overload.OverloadController`` — its stats ride in the
+        snapshot meta): ``step_p50_ms``/``step_p95_ms``/``step_p99_ms``
+        per-tick step-latency percentiles, ``shed_level`` /
+        ``shed_level_name`` the degradation-ladder rung the backend was on,
+        ``n_shed_events``/``n_shed_rank``/``n_shed_total`` the shed
+        counters (nothing is shed silently), and the full raw counter dict
+        under ``overload``. All ``None`` for a backend without overload
+        control.
         """
         now = time.time() if now is None else now
         meta = self._rt_manifest.get("meta", {})
@@ -178,6 +188,23 @@ class SuggestFrontend:
             "store_layout": meta.get("layout"),
             "store": meta.get("maintenance"),
         }
+        # backend overload state (streaming.overload): the controller's
+        # stats ride in the snapshot meta. Surface the SLO-facing subset
+        # flat (step-latency percentiles, degradation level, shed
+        # counters) and the full counter dict raw under ``overload``.
+        ov = meta.get("overload")
+        out["overload"] = ov
+        ov = ov or {}
+        out["step_p50_ms"] = ov.get("step_p50_ms")
+        out["step_p95_ms"] = ov.get("step_p95_ms")
+        out["step_p99_ms"] = ov.get("step_p99_ms")
+        out["shed_level"] = ov.get("level")
+        out["shed_level_name"] = ov.get("level_name")
+        out["n_shed_events"] = ov.get("n_shed_events")
+        out["n_shed_rank"] = (
+            None if ov.get("n_shed_rank_rt") is None
+            else ov["n_shed_rank_rt"] + ov.get("n_shed_rank_bg", 0))
+        out["n_shed_total"] = ov.get("n_shed_total")
         if self._log_reader is not None:
             self._log_reader.refresh()
             head = self._log_reader.last_tick()

@@ -28,15 +28,57 @@ unlinks a full while a retained delta still references it. The shrunken
 write volume is what lets the snapshot cadence drop ~4x — and the replay
 tail (time-to-fresh after a crash) with it (bench_recovery rows
 ``recovery_snapshot_*``).
+
+**Overload control** (:mod:`.overload`) — the live-path twin of the
+recovery story (§1: the flash crowd is the paper's motivating workload).
+An :class:`~repro.streaming.overload.OverloadController` in front of the
+serving stack micro-batches live ticks through the same fused
+``ingest_many`` scan that replay uses (batch size K adapts to lag,
+quantized powers of two up to ``SLOConfig.batch_max``) and walks an
+explicit **degradation ladder** when batching alone cannot hold the SLO:
+
+  =====  =============  ==================================================
+  level  name           what is shed at this rung (cumulative)
+  =====  =============  ==================================================
+  0      normal         nothing — full service
+  1      shed_rank      rt ranking cycles (frontends serve the last
+                        persisted tables, the §4.2 staleness stance)
+  2      stretch_bg     bg ranking cadence stretched ``bg_stretch``x
+  3      sample_ingest  tweet-firehose ingest dropped; tail-source query
+                        events (``src >= tail_src``) sampled to ``tail_keep``
+  =====  =============  ==================================================
+
+*Triggers* (any): effective lag >= ``up_lag`` ticks, step-latency p95 over
+``slo_ms``, region-freelist fraction under ``freelist_min``. *Hysteresis*:
+one rung per ``up_ticks`` consecutive hot / ``down_ticks`` consecutive
+cool observations — the ladder cannot flap. *SLO knobs* live on
+:class:`~repro.streaming.overload.SLOConfig` (``slo_ms``, ``batch_max``,
+``lag_batch``, hysteresis, ``bg_stretch``, ``tail_src``/``tail_keep``).
+Every shed decision is counted in ``stats_snapshot()`` — never silent —
+and admission runs *before* the durable log append with a pure-hash
+sampler, so crash -> restore -> replay stays bit-exact mid-shed.
+:mod:`.workload` generates the firehose traffic (Zipf + topic drift,
+breaking-news flash crowds, spam bursts, multilingual sessions) that the
+benches and the chaos harness (``kill_writer_mid_segment`` /
+``corrupt_segment`` / ``corrupt_snapshot`` / :func:`~repro.streaming.log.slow_io`)
+drive this machinery with.
 """
 from .log import (FirehoseLogReader, FirehoseLogWriter, LogChunk,
-                  corrupt_segment, kill_writer_mid_segment)
+                  corrupt_segment, kill_writer_mid_segment, slow_io)
+from .overload import (DegradationLadder, LatencyTracker, OverloadController,
+                       SLOConfig, admit_events, admit_tweets)
 from .replay import (CatchUpController, ReplayConfig, chunk_to_stack,
                      recover_engine, recover_service)
+from .workload import (FirehoseWorkload, SpamSpec, SpikeSpec, WorkloadConfig,
+                       bucket_size)
 
 __all__ = [
     "FirehoseLogReader", "FirehoseLogWriter", "LogChunk",
-    "corrupt_segment", "kill_writer_mid_segment",
+    "corrupt_segment", "kill_writer_mid_segment", "slow_io",
     "CatchUpController", "ReplayConfig", "chunk_to_stack", "recover_engine",
     "recover_service",
+    "OverloadController", "SLOConfig", "DegradationLadder", "LatencyTracker",
+    "admit_events", "admit_tweets",
+    "FirehoseWorkload", "WorkloadConfig", "SpikeSpec", "SpamSpec",
+    "bucket_size",
 ]

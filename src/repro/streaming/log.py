@@ -259,6 +259,38 @@ def kill_writer_mid_segment(writer: FirehoseLogWriter,
     return fname
 
 
+def slow_io(obj, methods: Tuple[str, ...], delay_s: float):
+    """Latency injector: wrap the named bound methods of ``obj`` so each
+    call first sleeps ``delay_s`` (a degraded disk / network filesystem).
+
+    Chaos-harness companion to :func:`kill_writer_mid_segment` /
+    :func:`corrupt_segment`: those test crash recovery, this tests the
+    overload ladder — slow segment seals inflate step latency, which the
+    SLO tracker must absorb by batching/shedding instead of stalling the
+    hose. Works on any object (writers, readers, checkpoint managers).
+    Returns ``obj``; restore by calling the returned undo callable kept at
+    ``obj._slow_io_undo`` (last injection wins).
+    """
+    import time as _time
+    originals = [(m, getattr(obj, m)) for m in methods]
+
+    def _wrap(fn):
+        def slowed(*a, **kw):
+            _time.sleep(delay_s)
+            return fn(*a, **kw)
+        return slowed
+
+    for m, fn in originals:
+        setattr(obj, m, _wrap(fn))
+
+    def undo():
+        for m, fn in originals:
+            setattr(obj, m, fn)
+
+    obj._slow_io_undo = undo
+    return obj
+
+
 def corrupt_segment(directory: str, seg: Segment,
                     keep_fraction: float = 0.5) -> None:
     """Truncate a sealed segment's bytes in place (torn write on a

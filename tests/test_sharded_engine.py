@@ -106,12 +106,17 @@ _REPLAY_SCRIPT = textwrap.dedent("""
     for b in batches:
         live = tick_step(live, *b)
 
-    # crash after tick 4: snapshot + parallel catch-up replay of the tail
+    # crash after tick 4: snapshot + parallel catch-up replay of the tail.
+    # The snapshots are DELTA-CHAINED (full_interval=4): tick 2 writes the
+    # full, tick 4 writes only the changed leading rows of each shard-
+    # stacked leaf; restore composes the chain transparently.
     half = se.init_sharded_state(scfg, mesh)
-    for b in batches[:4]:
+    ckpt = CheckpointManager(tempfile.mkdtemp(), full_interval=4)
+    for i, b in enumerate(batches[:4]):
         half = tick_step(half, *b)
-    ckpt = CheckpointManager(tempfile.mkdtemp())
-    se.save_sharded_snapshot(half, ckpt)
+        if i in (1, 3):
+            se.save_sharded_snapshot(half, ckpt)
+    assert ckpt.last_save_kind == "delta", ckpt.last_save_kind
     restored, log_tick = se.restore_sharded_snapshot(scfg, mesh, ckpt)
     assert log_tick == 4
     stacked = tuple(jnp.stack([b[i] for b in batches[4:]]) for i in range(6))
