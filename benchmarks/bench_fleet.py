@@ -1,0 +1,175 @@
+"""R-fleet (robustness): self-healing replicated serving under chaos.
+
+Runs the fleet chaos composition end to end, measured: a 3-replica
+``ServingFleet`` rides a 50x flash crowd while (1) one replica answers
+through a slow disk (client hedges around it), (2) the log-writer leader
+is killed *mid-segment* (epoch-fenced failover, torn tail truncated,
+survivors' rings heal the gap), and (3) a follower is killed during the
+spike. Every tick a client request is routed through the ``ServerSet``;
+the run only counts if **zero** requests fail throughout.
+
+Reported rows:
+
+  * ``fleet_tick``      — steady-state per-tick fleet cost (detect +
+    leader append + N replica steps) while the fleet is whole;
+  * ``fleet_request``   — median client request latency through the
+    chaos run (and the zero-failures count);
+  * ``fleet_failover``  — wall cost of the failover tick, plus the
+    detection gap in ticks from leader kill to epoch bump;
+  * ``fleet_recovery``  — wall cost of a readmission tick (snapshot
+    restore + sealed-log catch-up + rejoin), kill->live gaps, healed
+    vs lost log ticks;
+  * ``fleet_hedge_rate`` — fraction of requests hedged (slow-disk window
+    forces real hedges + timeouts).
+
+Short mode is the default (it is the CI smoke); ``--seed``/``--ticks``
+vary the chaos schedule's workload without editing the file:
+
+  PYTHONPATH=src python -m benchmarks.bench_fleet --seed 5 --ticks 32
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+from typing import List
+
+from repro.core.decay import DecayConfig
+from repro.core.engine import EngineConfig
+from repro.distributed.fleet import FleetConfig, ServingFleet
+from repro.streaming import (FirehoseWorkload, SpamSpec, SpikeSpec,
+                             WorkloadConfig, slow_io)
+from .common import Row
+
+KILL_LEADER_AT = 7     # mid-segment (segment 4..7 is open)
+KILL_FOLLOWER_AT = 12  # during the spike plateau
+
+
+def _wl(seed: int) -> FirehoseWorkload:
+    return FirehoseWorkload(WorkloadConfig(
+        vocab_per_lang=128, n_langs=3, n_users=500,
+        base_queries_per_tick=64, base_tweets_per_tick=8,
+        min_bucket=64, min_tweet_bucket=8,
+        spikes=(SpikeSpec(t_start=6, mult=50.0),),
+        spam=SpamSpec(period=9, burst_ticks=2)), seed=seed)
+
+
+def run(seed: int = 3, n_ticks: int = 24) -> List[Row]:
+    out = tempfile.mkdtemp(prefix="bench_fleet_")
+    try:
+        return _run(out, seed, max(n_ticks, 16))
+    finally:
+        shutil.rmtree(out, ignore_errors=True)
+
+
+def _run(out: str, seed: int, n_ticks: int) -> List[Row]:
+    ecfg = EngineConfig(query_capacity=1 << 11, cooc_capacity=1 << 13,
+                        session_capacity=1 << 10, session_window=3,
+                        decay_every=4, prune_every=6, rank_every=5,
+                        region_width=16, decay=DecayConfig(policy="lazy"))
+    fcfg = FleetConfig(n_replicas=3, heartbeat_timeout=2, restart_after=1,
+                       snapshot_every=8, ticks_per_segment=4)
+    fleet = ServingFleet(out, ecfg, fcfg)
+    wl = _wl(seed)
+    ss = fleet.serverset(timeout_s=0.01, max_retries=1)
+    slow_io(fleet.handles[2], ("related",), delay_s=0.05)
+
+    probe = int(wl.fps[0])
+    tick_wall = {}           # t -> offer_tick wall seconds
+    req_wall = []
+    failover_tick = None
+    readmit_ticks = []       # ticks where n_recoveries bumped
+    kill_tick = {}           # rid -> tick it was killed
+    seen_down = set()        # rids observed non-live (detection lags kill)
+    live_tick = {}           # rid -> tick it came back live
+    prev_failovers = prev_recoveries = 0
+
+    t = 0
+    while t < n_ticks or (t < n_ticks + 16
+                          and any(r.status != "live"
+                                  for r in fleet._replicas)):
+        ev, tw = wl.gen_tick(t)
+        if t == KILL_LEADER_AT:
+            fleet.handles[2]._slow_io_undo()
+            lead = fleet.leader()
+            fleet.kill(lead, mid_segment=True)
+            kill_tick[lead] = t
+        if t == KILL_FOLLOWER_AT:
+            victim = next(r.rid for r in fleet._replicas
+                          if r.status == "live" and r.rid != fleet.leader())
+            fleet.kill(victim)
+            kill_tick[victim] = t
+        t0 = time.perf_counter()
+        fleet.offer_tick(t, ev, tw)
+        tick_wall[t] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ss.request(probe)    # raises iff NO live replica answers
+        req_wall.append(time.perf_counter() - t0)
+        m = fleet.metrics()
+        if m["n_failovers"] > prev_failovers and failover_tick is None:
+            failover_tick = t
+        if m["n_recoveries"] > prev_recoveries:
+            readmit_ticks.append(t)
+        prev_failovers = m["n_failovers"]
+        prev_recoveries = m["n_recoveries"]
+        for rid in list(kill_tick):
+            if fleet._replicas[rid].status != "live":
+                seen_down.add(rid)
+            elif rid in seen_down and rid not in live_tick:
+                live_tick[rid] = t
+        t += 1
+
+    m = fleet.metrics()
+    assert all(r.status == "live" for r in fleet._replicas), m
+    assert m["n_lost_ticks"] == 0, m
+
+    # steady-state tick cost: whole fleet, post-compile, pre-chaos
+    calm = [tick_wall[i] for i in range(2, KILL_LEADER_AT)]
+    mean = lambda xs: sum(xs) / max(len(xs), 1)
+    req_wall.sort()
+    req_p50 = req_wall[len(req_wall) // 2]
+    gaps = {rid: live_tick[rid] - kill_tick[rid] for rid in kill_tick}
+    readmit_wall = mean([tick_wall[i] for i in readmit_ticks])
+
+    rows = [
+        ("fleet_tick", mean(calm) * 1e6,
+         f"3-replica fleet step (detect+append+3x ingest) "
+         f"{mean(calm) * 1e3:.1f} ms/tick steady-state"),
+        ("fleet_request", req_p50 * 1e6,
+         f"{len(req_wall)} requests, 0 failures through 50x spike + "
+         f"leader kill mid-segment + follower kill (p50 "
+         f"{req_p50 * 1e3:.2f} ms)"),
+        ("fleet_failover", tick_wall[failover_tick] * 1e6,
+         f"leader killed t={KILL_LEADER_AT} mid-segment, detected + "
+         f"epoch-fenced failover at t={failover_tick} "
+         f"({failover_tick - KILL_LEADER_AT} ticks), final epoch "
+         f"{m['epoch']}, {m['n_failovers']} failovers"),
+        ("fleet_recovery", readmit_wall * 1e6,
+         f"{m['n_recoveries']} replicas restarted + caught up; "
+         f"kill->live gaps {sorted(gaps.values())} ticks; log healed "
+         f"{m['n_healed_ticks']} ticks from survivor rings, "
+         f"{m['n_lost_ticks']} lost"),
+        ("fleet_hedge_rate", 0.0,
+         f"{ss.n_hedged}/{ss.n_requests} requests hedged "
+         f"({ss.n_hedged / max(ss.n_requests, 1):.1%}), "
+         f"{ss.n_timeouts} slow-disk timeouts, "
+         f"{ss.n_breaker_skips} breaker skips"),
+    ]
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=3,
+                    help="workload seed (varies the chaos-run traffic)")
+    ap.add_argument("--ticks", type=int, default=24,
+                    help="chaos run length in ticks (min 16)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(seed=args.seed, n_ticks=args.ticks):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

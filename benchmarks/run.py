@@ -18,7 +18,8 @@ import time
 import traceback
 
 BENCHES = ["churn", "ingest", "latency", "ranking", "recovery", "spelling",
-           "store", "memory_coverage", "engine_perf", "roofline", "overload"]
+           "store", "memory_coverage", "engine_perf", "roofline", "overload",
+           "fleet"]
 
 
 def main() -> None:

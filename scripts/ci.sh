@@ -25,4 +25,7 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
     # overload smoke: 50x flash crowd -> spike throughput, ticks-to-SLO
     # recovery, shed fraction (the degradation-ladder contract)
     python -m benchmarks.run --json results/BENCH_overload.json overload
+    # fleet chaos smoke: leader kill mid-segment + follower kill under a
+    # 50x spike -- zero failed requests, epoch-fenced failover, healed log
+    python -m benchmarks.run --json results/BENCH_fleet.json fleet
 fi

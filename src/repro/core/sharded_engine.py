@@ -42,7 +42,7 @@ from .decay import (prune_sweep, region_decay_sweep, region_prune_sweep,
                     sweep_decay_prune)
 from .engine import (EngineConfig, cooc_insert_pairs, maintenance_cadence,
                      make_cooc_store, _Q_MODES)
-from .hashing import probe_hash
+from .hashing import combine_fp_device, probe_hash
 from .ranking import RankConfig, SuggestionTable
 from .stores import HashTable, SessionTable
 
@@ -454,3 +454,293 @@ def merge_sharded_suggestions(table: SuggestionTable, top_k: int
                 d[fp] = max(d.get(fp, 0.0), float(score[i, j]))
     return {s: sorted(d.items(), key=lambda t: (-t[1], t[0]))[:top_k]
             for s, d in merged.items()}
+
+
+# ---------------------------------------------------------------------------
+# Live shard split/merge (elastic scaling).
+#
+# Re-partitions a running ShardedState across a different shard count
+# without losing state: every live cooccurrence pair and session is
+# exported to a canonical host-side form, merged (the same (src, dst) pair
+# can legitimately live in several old shards — a source that crossed
+# hot_threshold mid-run salted its later inserts), then re-inserted into
+# freshly initialized per-shard stores under the NEW ownership rule — the
+# exact rule the live ingest path routes by, so post-reshard inserts land
+# on the rows the reshard placed. The qstore is replicated and copied
+# verbatim, which also keeps every region-directory slot id valid.
+#
+# The reshard is a pure function of the state content: two runs that
+# reshard at the same tick from bit-identical states produce bit-identical
+# new states, which is what makes the zero-downtime handoff testable
+# (serve from the old state while ticks keep arriving, replay the interim
+# ticks from the shared log into the new state, compare against a clean
+# run — see distributed.elastic.live_reshard).
+# ---------------------------------------------------------------------------
+
+_SET_PAIR_MODES = (("weight", "set"), ("count", "set"), ("last_tick", "set"))
+_SET_HASH_MODES = _SET_PAIR_MODES + (("src_hi", "set"), ("src_lo", "set"),
+                                     ("dst_hi", "set"), ("dst_lo", "set"))
+_PAIR_COLS = ("src_hi", "src_lo", "dst_hi", "dst_lo",
+              "weight", "count", "last_tick")
+_SESS_COLS = ("key_hi", "key_lo", "ring_hi", "ring_lo", "ring_src",
+              "cursor", "filled", "last_tick")
+
+
+def _shard_view(tree, i: int, n: int, scalar_fields=("n_dropped",)):
+    """Slice shard ``i`` out of a shard-stacked store tree (inverse of
+    ``_stack_shards`` for one shard): leading dims are n x per-shard, the
+    named scalar counters are stacked to (n,)."""
+    def f(path, x):
+        name = path[-1].name if hasattr(path[-1], "name") else str(path[-1])
+        if name in scalar_fields and x.ndim == 1 and x.shape[0] == n:
+            return x[i]
+        m = x.shape[0] // n
+        return x[i * m:(i + 1) * m]
+    return jax.tree_util.tree_map_with_path(f, tree)
+
+
+def _stack_trees(trees):
+    """Stack per-shard store trees back into the leading-dim layout
+    (scalars -> (n,), arrays concatenated — same layout as _stack_shards)."""
+    return jax.tree.map(
+        lambda *xs: (jnp.stack(xs, 0) if xs[0].ndim == 0
+                     else jnp.concatenate(xs, 0)), *trees)
+
+
+def _export_hash_pairs(tab: HashTable) -> Dict[str, np.ndarray]:
+    e = stores.export_live(tab)
+    return {k: e[k] for k in _PAIR_COLS}
+
+
+def _export_region_pairs(tab, qstore: HashTable) -> Dict[str, np.ndarray]:
+    """Live pairs of one region-layout shard: walk the packed region pool
+    under the shared chain-validity invariant (orphaned chains and stale
+    directory rows export nothing, exactly as ranking skips them)."""
+    _, _, referenced = stores.region_chain_state(tab, qstore)
+    referenced = np.asarray(referenced)
+    fill = np.asarray(tab.region_fill)
+    owner = np.asarray(tab.region_owner)
+    chain_hi = np.asarray(tab.chain_hi)
+    chain_lo = np.asarray(tab.chain_lo)
+    khi, klo = np.asarray(tab.key_hi), np.asarray(tab.key_lo)
+    W, C = tab.width, tab.capacity
+    slot = np.arange(C)
+    reg, pos = slot // W, slot % W
+    live = referenced[reg] & (pos < fill[reg]) & ((khi != 0) | (klo != 0))
+    idx = np.nonzero(live)[0]
+    src_slot = owner[reg[idx]]
+    out = {"src_hi": chain_hi[src_slot], "src_lo": chain_lo[src_slot],
+           "dst_hi": khi[idx], "dst_lo": klo[idx]}
+    for name in ("weight", "count", "last_tick"):
+        out[name] = np.asarray(tab.lanes[name])[idx]
+    return out
+
+
+def _merge_duplicate_pairs(base: EngineConfig, e: Dict[str, np.ndarray]
+                           ) -> Dict[str, np.ndarray]:
+    """Canonical-sort and merge multi-shard duplicates of a (src, dst) pair.
+
+    Under the lazy decay policy the duplicates' (weight, last_tick)
+    encodings differ; each weight is rebased to the group's max last_tick
+    with the SAME decay formula the device reads use, so the merged entry
+    decays to the same effective value as the duplicates summed."""
+    if e["src_hi"].size == 0:
+        return e
+    order = np.lexsort((e["dst_lo"], e["dst_hi"], e["src_lo"], e["src_hi"]))
+    s = {k: v[order] for k, v in e.items()}
+    key = np.stack([s["src_hi"], s["src_lo"], s["dst_hi"], s["dst_lo"]], 1)
+    new_grp = np.any(key[1:] != key[:-1], axis=1)
+    starts = np.concatenate([[0], np.nonzero(new_grp)[0] + 1])
+    seg = np.concatenate([[0], np.cumsum(new_grp.astype(np.int64))])
+    lt_max = np.maximum.reduceat(s["last_tick"], starts)
+    w = s["weight"].astype(np.float32)
+    if base.lazy_decay:
+        dt = (lt_max[seg] - s["last_tick"]).astype(np.float32)
+        f = np.asarray(base.decay.factor(dt), np.float32)
+        w = (w * f).astype(np.float32)
+    out = {k: s[k][starts] for k in ("src_hi", "src_lo", "dst_hi", "dst_lo")}
+    out["weight"] = np.add.reduceat(w, starts).astype(np.float32)
+    out["count"] = np.add.reduceat(
+        s["count"].astype(np.float32), starts).astype(np.float32)
+    out["last_tick"] = lt_max.astype(np.int32)
+    return out
+
+
+def export_sharded_pairs(cfg: ShardedConfig, state: ShardedState
+                         ) -> Dict[str, np.ndarray]:
+    """All live (src -> dst) pairs across shards, canonical order, merged."""
+    n = state.n_route_drop.shape[0]
+    cols: Dict[str, list] = {k: [] for k in _PAIR_COLS}
+    for i in range(n):
+        tab = _shard_view(state.cooc, i, n)
+        e = (_export_region_pairs(tab, state.qstore)
+             if cfg.base.region_cooc else _export_hash_pairs(tab))
+        for k in _PAIR_COLS:
+            cols[k].append(e[k])
+    merged = {k: np.concatenate(v) for k, v in cols.items()}
+    return _merge_duplicate_pairs(cfg.base, merged)
+
+
+def export_sharded_sessions(state: ShardedState) -> Dict[str, np.ndarray]:
+    """All live sessions across shards, full rows, canonical key order.
+    Session ownership is total (one owner per key), so no merging."""
+    n = state.n_route_drop.shape[0]
+    cols: Dict[str, list] = {k: [] for k in _SESS_COLS}
+    for i in range(n):
+        t = _shard_view(state.sessions, i, n)
+        mask = np.asarray((t.key_hi != 0) | (t.key_lo != 0))
+        for k in _SESS_COLS:
+            cols[k].append(np.asarray(getattr(t, k))[mask])
+    e = {k: np.concatenate(v) for k, v in cols.items()}
+    order = np.lexsort((e["key_lo"], e["key_hi"]))
+    return {k: v[order] for k, v in e.items()}
+
+
+def _fill_cooc_shard(cfg: ShardedConfig, new_n: int, qstore: HashTable,
+                     pairs: Dict[str, np.ndarray], idx: np.ndarray):
+    base = cfg.base
+    tab = make_cooc_store(base, capacity=base.cooc_capacity // new_n)
+    if idx.size == 0:
+        return tab, 0
+    upd = {k: jnp.asarray(pairs[k][idx])
+           for k in ("weight", "count", "last_tick")}
+    valid = jnp.ones((idx.size,), bool)
+    s_hi, s_lo = jnp.asarray(pairs["src_hi"][idx]), \
+        jnp.asarray(pairs["src_lo"][idx])
+    d_hi, d_lo = jnp.asarray(pairs["dst_hi"][idx]), \
+        jnp.asarray(pairs["dst_lo"][idx])
+    # all-SET modes, no decay kwargs: the merged (weight, last_tick) pairs
+    # are copied bit-exactly, which preserves lazy-decay semantics.
+    if base.region_cooc:
+        tab = stores.region_insert_accumulate(
+            tab, qstore, s_hi, s_lo, d_hi, d_lo, upd, valid,
+            modes=_SET_PAIR_MODES, probe_rounds=base.probe_rounds,
+            use_kernel=base.use_kernel)
+    else:
+        p_hi, p_lo = combine_fp_device(s_hi, s_lo, d_hi, d_lo)
+        upd.update({"src_hi": s_hi, "src_lo": s_lo,
+                    "dst_hi": d_hi, "dst_lo": d_lo})
+        tab = stores.insert_accumulate(
+            tab, p_hi, p_lo, upd, valid, modes=_SET_HASH_MODES,
+            probe_rounds=base.probe_rounds)
+    return tab, int(np.asarray(tab.n_dropped))
+
+
+def _fill_session_shard(base: EngineConfig, new_n: int,
+                        sess: Dict[str, np.ndarray], idx: np.ndarray):
+    cap = base.session_capacity // new_n
+    tab = stores.make_session_table(cap, base.session_window)
+    if idx.size == 0:
+        return tab, 0
+    kh, kl = jnp.asarray(sess["key_hi"][idx]), jnp.asarray(sess["key_lo"][idx])
+    alive = jnp.ones((idx.size,), bool)
+    # probe-consistent placement (later live update_sessions probes must
+    # FIND these rows) + direct full-row scatter: update_sessions cannot
+    # reproduce per-session last_tick (its tick argument is a scalar), and
+    # the ring/cursor/filled triple must carry over verbatim.
+    key_hi, key_lo, slot, placed, dropped = stores._find_or_claim(
+        tab.key_hi, tab.key_lo, kh, kl, alive, base.probe_rounds)
+    drop_slot = jnp.where(placed, slot, cap)
+
+    def put(lane, col):
+        return lane.at[drop_slot].set(jnp.asarray(sess[col][idx]),
+                                      mode="drop")
+
+    tab = tab._replace(
+        key_hi=key_hi, key_lo=key_lo,
+        ring_hi=put(tab.ring_hi, "ring_hi"),
+        ring_lo=put(tab.ring_lo, "ring_lo"),
+        ring_src=put(tab.ring_src, "ring_src"),
+        cursor=put(tab.cursor, "cursor"),
+        filled=put(tab.filled, "filled"),
+        last_tick=put(tab.last_tick, "last_tick"),
+        n_dropped=tab.n_dropped + dropped)
+    return tab, int(np.asarray(dropped))
+
+
+def reshard_sharded_state(cfg: ShardedConfig, state: ShardedState,
+                          new_n: int) -> Tuple[ShardedState, Dict]:
+    """Re-partition a live sharded state across ``new_n`` shards.
+
+    Deterministic in the state content (no RNG, canonical ordering
+    throughout); ``tick`` and the replicated qstore carry over unchanged,
+    so the new state replays the shared log from the same offset. Routing
+    hotness is re-decided against the current qstore — the same decision
+    the live ingest path would make next tick. Per-shard drop counters
+    restart at the insertion drops (old totals are returned in stats).
+    """
+    base = cfg.base
+    old_n = state.n_route_drop.shape[0]
+    assert new_n >= 1 and new_n & (new_n - 1) == 0, \
+        f"new_n must be a power of two, got {new_n}"
+    assert base.cooc_capacity % new_n == 0 \
+        and base.cooc_capacity // new_n >= base.region_width, \
+        "cooc capacity does not divide into new_n region-layout shards"
+    assert base.session_capacity % new_n == 0, \
+        "session capacity not divisible by new_n"
+
+    pairs = export_sharded_pairs(cfg, state)
+    sess = export_sharded_sessions(state)
+
+    # ownership under new_n — the SAME rule as the live ingest path
+    s_hi, s_lo = jnp.asarray(pairs["src_hi"]), jnp.asarray(pairs["src_lo"])
+    d_hi, d_lo = jnp.asarray(pairs["dst_hi"]), jnp.asarray(pairs["dst_lo"])
+    svals, sfound, _ = stores.lookup(state.qstore, s_hi, s_lo,
+                                     probe_rounds=base.probe_rounds)
+    hot = np.asarray(sfound) & (np.asarray(svals["count"])
+                                >= cfg.hot_threshold)
+    salt = np.where(hot,
+                    np.asarray(probe_hash(d_hi, d_lo)) % np.uint32(
+                        max(cfg.n_salts, 1)),
+                    np.uint32(0)).astype(np.uint64)
+    owner = ((np.asarray(probe_hash(s_hi, s_lo)).astype(np.uint64) + salt)
+             % new_n).astype(np.int64)
+    sess_owner = (np.asarray(
+        probe_hash(jnp.asarray(sess["key_hi"]),
+                   jnp.asarray(sess["key_lo"]))).astype(np.uint64)
+        % new_n).astype(np.int64)
+
+    coocs, sessions, n_pair_drop, n_sess_drop = [], [], 0, 0
+    for j in range(new_n):
+        c, dc = _fill_cooc_shard(cfg, new_n, state.qstore, pairs,
+                                 np.nonzero(owner == j)[0])
+        s, ds = _fill_session_shard(base, new_n, sess,
+                                    np.nonzero(sess_owner == j)[0])
+        coocs.append(c)
+        sessions.append(s)
+        n_pair_drop += dc
+        n_sess_drop += ds
+
+    new_state = ShardedState(
+        qstore=state.qstore,
+        cooc=_stack_trees(coocs),
+        sessions=_stack_trees(sessions),
+        tick=state.tick,
+        n_route_drop=jnp.zeros((new_n,), jnp.int32))
+    # hand back UNCOMMITTED arrays: leaves assembled here inherit the OLD
+    # mesh's placement (and the qstore its old replication), which the new
+    # layout's shard_map would reject — round-tripping through host leaves
+    # the new mesh free to place them.
+    new_state = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), new_state)
+    stats = {"old_n": old_n, "new_n": new_n,
+             "n_pairs": int(pairs["src_hi"].size),
+             "n_sessions": int(sess["key_hi"].size),
+             "n_pair_drop": n_pair_drop, "n_sess_drop": n_sess_drop,
+             "old_route_drop": int(np.asarray(state.n_route_drop).sum()),
+             "tick": int(np.asarray(state.tick))}
+    return new_state, stats
+
+
+def split_shards(cfg: ShardedConfig, state: ShardedState
+                 ) -> Tuple[ShardedState, Dict]:
+    """Double the shard count (scale out under lag/memory pressure)."""
+    return reshard_sharded_state(cfg, state,
+                                 2 * state.n_route_drop.shape[0])
+
+
+def merge_shards(cfg: ShardedConfig, state: ShardedState
+                 ) -> Tuple[ShardedState, Dict]:
+    """Halve the shard count (scale in when shards run underfilled)."""
+    n = state.n_route_drop.shape[0]
+    assert n % 2 == 0, "cannot merge an odd shard count"
+    return reshard_sharded_state(cfg, state, n // 2)

@@ -415,6 +415,14 @@ class ReplicaGroup:
     def __init__(self, n_replicas: int, ckpt: CheckpointManager):
         self.alive = {i: True for i in range(n_replicas)}
         self.ckpt = ckpt
+        # leadership epoch: bumped on EVERY leadership change (fail of the
+        # leader, or a lower-id replica rejoining and re-winning the
+        # deterministic election). The fencing token for the shared log:
+        # the winner stamps it into the log manifest
+        # (``FirehoseLogWriter.assume_epoch``) before its first append, so
+        # a zombie ex-leader's stray appends are rejected.
+        self.epoch = 0
+        self._last_leader = self.leader()
 
     def live(self) -> List[int]:
         return [i for i, ok in self.alive.items() if ok]
@@ -422,12 +430,25 @@ class ReplicaGroup:
     def leader(self) -> Optional[int]:
         return elect_leader(self.live())
 
+    def _note_leadership(self) -> Optional[int]:
+        lead = self.leader()
+        if lead != self._last_leader:
+            self.epoch += 1
+            self._last_leader = lead
+        return lead
+
     def fail(self, rid: int) -> None:
         self.alive[rid] = False
+        self._note_leadership()
 
     def recover(self, rid: int) -> Optional[int]:
-        """Rejoin; returns the checkpoint step to cold-start from."""
+        """Rejoin; returns the checkpoint step to cold-start from.
+
+        Rejoining may retake leadership (lowest live id wins) — that too is
+        a leadership change and bumps the epoch, so the previous leader's
+        writer is fenced the moment the rejoiner stamps the manifest."""
         self.alive[rid] = True
+        self._note_leadership()
         return self.ckpt.latest_step()
 
     def persist(self, rid: int, step: int, tree: Any,
@@ -448,6 +469,13 @@ class ReplicaGroup:
         appends continue the log seamlessly because ticks, not writers,
         define the offset space, and a (possibly long-standby) writer
         re-syncs its manifest view at every segment start.
+
+        Election alone cannot stop a partitioned/paused ex-leader that
+        still believes it leads — that is what the epoch fence is for: the
+        new leader calls ``writer.assume_epoch(group.epoch)`` before its
+        first append, and the zombie's next append/flush raises
+        ``streaming.log.WriterFencedError`` (see ``distributed.fleet`` for
+        the full failover choreography).
         """
         if rid != self.leader():
             return False

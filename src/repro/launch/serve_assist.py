@@ -24,10 +24,21 @@ at ``--spike-at``), ``--tick-ms`` paces simulated arrivals so falling
 behind real time shows up as lag, and ``--slow-io-ms`` injects disk
 latency into the log writer (chaos knob).
 
+With ``--fleet N`` the run switches to the self-healing replicated fleet
+(``distributed.fleet.ServingFleet``): N full serving stacks replaying one
+leader-written, epoch-fenced durable log, heartbeat failure detection,
+lag-gated readmission, and hedged staleness-aware routing. The chaos
+knobs ``--kill-leader-at`` (mid-segment) and ``--kill-follower-at``
+demonstrate failover + self-healing live; requests keep being answered
+throughout.
+
   python -m repro.launch.serve_assist --ticks 120 --out /tmp/assist
   python -m repro.launch.serve_assist --ticks 120 --out /tmp/assist --recover
   python -m repro.launch.serve_assist --ticks 120 --out /tmp/assist \\
       --slo-ms 80 --workload firehose --spike-mult 50 --tick-ms 40
+  python -m repro.launch.serve_assist --ticks 48 --out /tmp/assist \\
+      --fleet 3 --workload firehose --spike-at 6 \\
+      --kill-leader-at 7 --kill-follower-at 12
 """
 from __future__ import annotations
 
@@ -61,11 +72,54 @@ def _fmt(v, nd: int = 1):
     return str(v)
 
 
+def _run_fleet(args, ecfg, gen_tick, head, head_t0) -> None:
+    """--fleet N: the self-healing replicated fleet, chaos knobs wired."""
+    from ..distributed.fleet import FleetConfig, ServingFleet
+    fleet = ServingFleet(args.out, ecfg, FleetConfig(n_replicas=args.fleet))
+    ss = fleet.serverset(timeout_s=0.25, max_retries=1)
+    for t in range(args.ticks):
+        ev, tw = gen_tick(t)
+        if t == args.kill_leader_at:
+            lead = fleet.leader()
+            fleet.kill(lead, mid_segment=True)
+            print(f"[t={t}] leader {lead} KILLED mid-segment (torn tail)")
+        if t == args.kill_follower_at:
+            victim = next((r.rid for r in fleet._replicas
+                           if r.status == "live"
+                           and r.rid != fleet.leader()), None)
+            if victim is not None:
+                fleet.kill(victim)
+                print(f"[t={t}] follower {victim} killed")
+        fleet.offer_tick(t, ev, tw)
+        if t % 6 == 0 and t >= head_t0:
+            res = ss.request_info(head, k=5)
+            m = fleet.metrics()
+            print(f"[t={t}] related('{head}') via replica {res.replica} "
+                  f"(tick={_fmt(res.tick)} staleness={_fmt(res.staleness)}"
+                  f"{' HEDGED' if res.hedged else ''}) "
+                  f"{len(res.suggestions)} rows | leader={m['leader']} "
+                  f"epoch={m['epoch']} "
+                  f"status={[r['status'] for r in m['replicas'].values()]}")
+    m = fleet.metrics()
+    print(f"[done] fleet: {ss.n_requests} requests ({ss.n_hedged} hedged), "
+          f"{m['n_failovers']} failovers, {m['n_recoveries']} recoveries, "
+          f"log healed {m['n_healed_ticks']} ticks "
+          f"({m['n_lost_ticks']} lost), epoch {m['epoch']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ticks", type=int, default=120)
     ap.add_argument("--out", default="/tmp/assist")
     ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="run N self-healing fleet replicas instead of the "
+                         "single-stack path (distributed.fleet)")
+    ap.add_argument("--kill-leader-at", type=int, default=-1,
+                    help="fleet chaos: kill the log-writer leader "
+                         "mid-segment at this tick")
+    ap.add_argument("--kill-follower-at", type=int, default=-1,
+                    help="fleet chaos: kill a live follower at this tick")
     ap.add_argument("--fail-replica-at", type=int, default=-1,
                     help="tick at which backend replica 0 dies (failover demo)")
     ap.add_argument("--crash-at", type=int, default=-1,
@@ -114,6 +168,9 @@ def main() -> None:
     ecfg = EngineConfig(query_capacity=1 << 14, cooc_capacity=1 << 17,
                         session_capacity=1 << 14, decay_every=6,
                         rank_every=12, use_kernel=args.use_kernel)
+    if args.fleet > 0:
+        _run_fleet(args, ecfg, gen_tick, head, head_t0)
+        return
     bgcfg = background_config(ecfg, rank_every_mult=3)
 
     rt_dir = os.path.join(args.out, "rt")

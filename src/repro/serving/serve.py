@@ -10,7 +10,10 @@ Here: ``SuggestFrontend`` polls a checkpoint directory for the newest
 persisted suggestion tables (real-time + background), interpolates them at
 serve time (§4.5), and resolves fingerprints back to strings through the
 tokenizer. ``ServerSet`` is the client-side balancer over frontend replicas
-with liveness-based failover.
+with liveness-based failover, staleness-aware ordering (freshest tables
+first), bounded retry-with-backoff, hedged second requests, and per-replica
+circuit breakers; every response is tagged with the serving replica's tick
+and staleness (:class:`RouteResult`).
 
 Staleness (§4.2): during a backend crash + catch-up replay the frontends
 keep serving "the most recently persisted results" — deliberately stale.
@@ -21,6 +24,7 @@ a restarted backend is still replaying).
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import os
 import time
@@ -225,6 +229,12 @@ class SuggestFrontend:
         return out
 
     # ---- request path ----
+    def freshness_tick(self) -> Optional[int]:
+        """The engine tick this frontend's served tables reflect (the
+        router's staleness key — no disk I/O, reads the loaded manifest)."""
+        nxt = self._next_tick(self._rt_manifest.get("meta", {}))
+        return None if nxt is None else nxt - 1
+
     def related(self, query: str, k: int = 8) -> List[Tuple[str, float]]:
         fp = fingerprint(" ".join(query.lower().split()))
         return [(self.tok.text(d), s) for d, s in self._cache.get(fp, [])[:k]]
@@ -235,19 +245,151 @@ class SuggestFrontend:
         return self.tok.text(hit[0]) if hit else None
 
 
+@dataclasses.dataclass(frozen=True)
+class RouteResult:
+    """One answered request, tagged so degraded answers are honest."""
+    suggestions: List[Tuple[str, float]]
+    replica: int                 # index of the replica that answered
+    tick: Optional[int]          # freshness tick of that replica's tables
+    staleness: Optional[int]     # ticks behind the freshest live replica
+    hedged: bool                 # answered by a hedge, not the primary
+    attempts: int                # replicas tried (1 = primary answered)
+
+
+class _Breaker:
+    """Per-replica circuit breaker on a deterministic request-count clock:
+    ``threshold`` consecutive failures open the circuit for ``cooldown``
+    subsequent requests, after which one half-open probe is allowed."""
+
+    def __init__(self, threshold: int, cooldown: int):
+        self.threshold = threshold
+        self.cooldown = cooldown
+        self.failures = 0
+        self.open_until = -1
+
+    def allow(self, now: int) -> bool:
+        return self.failures < self.threshold or now >= self.open_until
+
+    def record(self, ok: bool, now: int) -> None:
+        if ok:
+            self.failures = 0
+            return
+        self.failures += 1
+        if self.failures >= self.threshold:
+            self.open_until = now + self.cooldown
+
+
 class ServerSet:
     """Client-side load-balanced access to replicated frontends with
-    failover (the paper's ZooKeeper-coordinated ServerSet, simulated)."""
+    failover (the paper's ZooKeeper-coordinated ServerSet, simulated).
 
-    def __init__(self, replicas: List[SuggestFrontend]):
+    Routing is health- and staleness-aware: live replicas are tried
+    freshest-first (``freshness_tick()``, missing = oldest; ties rotate
+    round-robin so equally-fresh replicas share load). A replica that is
+    marked dead, raises, or exceeds ``timeout_s`` fails the attempt and the
+    request is *hedged* to the next-freshest replica; a full pass over the
+    candidates backs off ``backoff_s * 2**attempt`` and retries, up to
+    ``max_retries`` extra passes. Repeated failures open a per-replica
+    circuit breaker (``breaker_failures`` consecutive misses skip it for
+    ``breaker_cooldown`` requests, then one half-open probe) so a flapping
+    replica stops eating the hedge budget. Every response carries the
+    serving replica's ``tick`` and its ``staleness`` vs the freshest live
+    candidate (:class:`RouteResult`) — stale answers are served, but never
+    silently.
+    """
+
+    def __init__(self, replicas: List[SuggestFrontend], *,
+                 timeout_s: Optional[float] = None, max_retries: int = 1,
+                 backoff_s: float = 0.0, breaker_failures: int = 3,
+                 breaker_cooldown: int = 16):
         self.replicas = replicas
+        self.timeout_s = timeout_s
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
         self._rr = itertools.count()
+        self._clock = 0
+        self._breakers = [_Breaker(breaker_failures, breaker_cooldown)
+                          for _ in replicas]
+        # observability: the chaos bench reads these
+        self.n_requests = 0
+        self.n_hedged = 0
+        self.n_failures = 0     # individual replica attempt failures
+        self.n_timeouts = 0
+        self.n_breaker_skips = 0
+
+    @staticmethod
+    def _fresh(r) -> int:
+        f = getattr(r, "freshness_tick", None)
+        if f is None:
+            return -1
+        tick = f()
+        return -1 if tick is None else int(tick)
+
+    def _candidates(self) -> Tuple[List[int], int]:
+        """Live replica indices in try-order + the freshest live tick.
+        Freshest first; round-robin rotation within the leading equal-
+        freshness group; breaker-open replicas demoted to last resort."""
+        live = [i for i, r in enumerate(self.replicas) if r.alive]
+        if not live:
+            raise RuntimeError("no live frontend replicas")
+        fresh = {i: self._fresh(self.replicas[i]) for i in live}
+        live.sort(key=lambda i: (-fresh[i], i))
+        top = [i for i in live if fresh[i] == fresh[live[0]]]
+        if len(top) > 1:           # spread load over equally-fresh replicas
+            rot = next(self._rr) % len(top)
+            live[:len(top)] = top[rot:] + top[:rot]
+        closed = [i for i in live if self._breakers[i].allow(self._clock)]
+        demoted = [i for i in live if i not in closed]
+        self.n_breaker_skips += len(demoted)
+        return closed + demoted, max(fresh.values())
+
+    def request_info(self, query: str, k: int = 8) -> RouteResult:
+        """Route one request; raises RuntimeError only when every live
+        replica failed every retry pass (or none is live at all)."""
+        self._clock += 1
+        self.n_requests += 1
+        now = self._clock
+        order, max_fresh = self._candidates()
+        n_tried = 0
+        errors: List[str] = []
+        for attempt in range(self.max_retries + 1):
+            if attempt > 0 and self.backoff_s > 0:
+                time.sleep(self.backoff_s * (2 ** (attempt - 1)))
+            for i in order:
+                r = self.replicas[i]
+                if not r.alive:      # died mid-pass
+                    continue
+                n_tried += 1
+                t0 = time.perf_counter()
+                try:
+                    sugg = r.related(query, k)
+                except Exception as e:   # noqa: BLE001 — any replica fault
+                    self.n_failures += 1
+                    self._breakers[i].record(False, now)
+                    errors.append(f"replica {i}: {type(e).__name__}: {e}")
+                    continue
+                if (self.timeout_s is not None
+                        and time.perf_counter() - t0 > self.timeout_s):
+                    # too slow counts as failure: the answer is discarded
+                    # and the request hedges to the next-freshest replica
+                    self.n_failures += 1
+                    self.n_timeouts += 1
+                    self._breakers[i].record(False, now)
+                    errors.append(f"replica {i}: timeout")
+                    continue
+                self._breakers[i].record(True, now)
+                tick = self._fresh(r)
+                hedged = n_tried > 1
+                self.n_hedged += int(hedged)
+                return RouteResult(
+                    suggestions=sugg, replica=i,
+                    tick=None if tick < 0 else tick,
+                    staleness=(None if tick < 0 or max_fresh < 0
+                               else max_fresh - tick),
+                    hedged=hedged, attempts=n_tried)
+        raise RuntimeError(
+            f"no live frontend replicas answered after {n_tried} attempts: "
+            + "; ".join(errors[-len(order):]))
 
     def request(self, query: str, k: int = 8) -> List[Tuple[str, float]]:
-        n = len(self.replicas)
-        start = next(self._rr)
-        for i in range(n):
-            r = self.replicas[(start + i) % n]
-            if r.alive:
-                return r.related(query, k)
-        raise RuntimeError("no live frontend replicas")
+        return self.request_info(query, k).suggestions

@@ -60,11 +60,36 @@ sampler, so crash -> restore -> replay stays bit-exact mid-shed.
 :mod:`.workload` generates the firehose traffic (Zipf + topic drift,
 breaking-news flash crowds, spam bursts, multilingual sessions) that the
 benches and the chaos harness (``kill_writer_mid_segment`` /
-``corrupt_segment`` / ``corrupt_snapshot`` / :func:`~repro.streaming.log.slow_io`)
-drive this machinery with.
+``corrupt_segment`` / ``corrupt_snapshot`` / :func:`~repro.streaming.log.slow_io`
+/ :func:`~repro.streaming.log.flaky_io`) drive this machinery with.
+
+**Failure model & fleet operations** — the fleet control plane
+(``distributed.fleet.ServingFleet``) composes this package into a
+replicated serving story. Who writes the log: exactly one replica — the
+``ReplicaGroup``-elected leader — appends; every leadership change bumps
+an **epoch** that the new leader stamps into the log manifest
+(``FirehoseLogWriter.assume_epoch``) *before* its first append. Fencing
+semantics: a writer whose epoch is older than the manifest's raises
+:class:`~repro.streaming.log.WriterFencedError` at its next segment seal
+and is permanently dead — a paused/partitioned ex-leader can never land a
+stray segment, so split-brain on the durable log is structurally
+impossible (``log_epoch`` reads the current fence token). Transient I/O:
+the reader retries each segment read up to ``io_retries`` times with
+exponential backoff before surfacing the error, so an NFS blip during
+catch-up replay does not become a failed recovery (``flaky_io`` injects
+exactly this fault class). What each state means for answer staleness:
+a *live* replica answers at the current tick; the degradation ladder's
+``shed_rank``/``stretch_bg`` rungs serve last-persisted rankings (§4.2:
+stale-but-fast beats fresh-but-late); a *dead* replica is skipped by the
+router and its requests hedge to the next-freshest survivor; a
+*recovering* replica (snapshot restore + log-tail replay) is not routed
+to until its lag clears, so clients never observe a rewound tick. Every
+answer is tagged with its serving tick and staleness vs the freshest live
+replica (``serving.serve.RouteResult``) — degraded answers are honest.
 """
 from .log import (FirehoseLogReader, FirehoseLogWriter, LogChunk,
-                  corrupt_segment, kill_writer_mid_segment, slow_io)
+                  WriterFencedError, corrupt_segment, flaky_io,
+                  kill_writer_mid_segment, log_epoch, slow_io)
 from .overload import (DegradationLadder, LatencyTracker, OverloadController,
                        SLOConfig, admit_events, admit_tweets)
 from .replay import (CatchUpController, ReplayConfig, chunk_to_stack,
@@ -74,7 +99,8 @@ from .workload import (FirehoseWorkload, SpamSpec, SpikeSpec, WorkloadConfig,
 
 __all__ = [
     "FirehoseLogReader", "FirehoseLogWriter", "LogChunk",
-    "corrupt_segment", "kill_writer_mid_segment", "slow_io",
+    "WriterFencedError", "corrupt_segment", "flaky_io",
+    "kill_writer_mid_segment", "log_epoch", "slow_io",
     "CatchUpController", "ReplayConfig", "chunk_to_stack", "recover_engine",
     "recover_service",
     "OverloadController", "SLOConfig", "DegradationLadder", "LatencyTracker",

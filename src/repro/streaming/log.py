@@ -31,6 +31,17 @@ Design — one log = one directory (several named logs may share it):
     in order and truncates the log at the first bad segment: everything up
     to the last complete segment replays, the torn tail is ignored (the
     paper's stance: losing a little state is tolerable, §4.2).
+  * **epoch fencing**: the manifest carries a monotonic leadership
+    ``epoch``. A failing-over leader calls ``assume_epoch(e)`` — which
+    re-syncs its segment view and durably rewrites the manifest at the new
+    epoch BEFORE any of its appends — and from then on any writer still
+    holding an older epoch is a *zombie*: its ``append``/``flush`` re-reads
+    the on-disk epoch and raises :class:`WriterFencedError` without writing
+    a segment or touching the manifest. The fencing token thus rides in the
+    same atomically-renamed manifest that defines log visibility, so "the
+    manifest the new leader owns" and "the manifest readers trust" are one
+    object (``distributed.fault_tolerance.ReplicaGroup`` bumps the epoch on
+    every leadership change).
 
 The reader seeks by tick and yields stacked chunks ready for the fused
 ``engine.ingest_many`` replay step.
@@ -92,6 +103,12 @@ class Segment:
     sha256: str
 
 
+class WriterFencedError(RuntimeError):
+    """A zombie ex-leader's append/flush was rejected: the on-disk manifest
+    carries a newer leadership epoch than this writer holds. Nothing was
+    written — neither segment bytes nor manifest."""
+
+
 def _record_arrays(tick: int, events: Optional[QueryEvents],
                    tweets: Optional[TweetBatch]) -> Dict[str, np.ndarray]:
     if events is None:
@@ -118,12 +135,16 @@ class FirehoseLogWriter:
     see ``distributed.fault_tolerance.ReplicaGroup.log_append``)."""
 
     def __init__(self, directory: str, ticks_per_segment: int = 8,
-                 keep_segments: int = 0, name: str = "firehose"):
+                 keep_segments: int = 0, name: str = "firehose",
+                 epoch: int = 0):
         assert ticks_per_segment > 0
         self.dir = directory
         self.name = name
         self.ticks_per_segment = ticks_per_segment
         self.keep_segments = keep_segments  # 0 = keep everything
+        # leadership epoch this writer believes it holds; appends are fenced
+        # against the manifest's epoch (see ``assume_epoch``)
+        self.epoch = int(epoch)
         os.makedirs(directory, exist_ok=True)
         self._buf: List[Dict[str, np.ndarray]] = []
         self._buf_ticks: List[int] = []
@@ -140,6 +161,39 @@ class FirehoseLogWriter:
     def _manifest_path(self) -> str:
         return _manifest_path(self.dir, self.name)
 
+    # -- leadership epoch / fencing --
+    def assume_epoch(self, epoch: int) -> "FirehoseLogWriter":
+        """Take over as the single log writer at leadership ``epoch``.
+
+        Re-syncs the segment view from disk, verifies the epoch is not
+        older than the manifest's, then durably rewrites the manifest at
+        the new epoch — BEFORE any append. That ordering is the fence: the
+        moment the bump lands, a zombie ex-leader's next ``append``/
+        ``flush`` observes ``manifest.epoch > writer.epoch`` and is
+        rejected, even if the new leader has not sealed a segment yet.
+        """
+        doc = _load_manifest_doc(self.dir, self.name)
+        cur = int(doc.get("epoch", 0))
+        if int(epoch) < cur:
+            raise WriterFencedError(
+                f"cannot assume epoch {epoch}: manifest already at {cur}")
+        self.segments = [Segment(**s) for s in doc.get("segments", [])]
+        self.epoch = int(epoch)
+        self._dead = False
+        self._write_manifest()
+        return self
+
+    def _check_fence(self) -> None:
+        cur = int(_load_manifest_doc(self.dir, self.name).get("epoch", 0))
+        if cur > self.epoch:
+            # fenced writers stay fenced: drop the buffer so a later retry
+            # cannot resurrect the stray ticks either
+            self._buf, self._buf_ticks = [], []
+            self._dead = True
+            raise WriterFencedError(
+                f"writer (epoch {self.epoch}) fenced by manifest epoch "
+                f"{cur}: a newer leader owns log '{self.name}'")
+
     # -- append path --
     def append(self, tick: int, events: Optional[QueryEvents],
                tweets: Optional[TweetBatch]) -> None:
@@ -152,7 +206,9 @@ class FirehoseLogWriter:
             # leadership (ReplicaGroup.log_append failover); without the
             # re-sync its stale cached view would both accept duplicate
             # ticks and rewrite the manifest without the old leader's
-            # segments. One small json read per segment.
+            # segments. One small json read per segment — which doubles as
+            # the fencing read: a zombie is rejected before it buffers.
+            self._check_fence()
             self.segments = _load_manifest(self.dir, self.name)
         tick = int(tick)
         last = self.last_tick
@@ -179,9 +235,13 @@ class FirehoseLogWriter:
         return bio.getvalue(), fname
 
     def flush(self) -> Optional[Segment]:
-        """Seal the buffered ticks as one segment (atomic rename)."""
+        """Seal the buffered ticks as one segment (atomic rename).
+
+        Fenced: the manifest epoch is re-read first — a zombie ex-leader's
+        seal raises :class:`WriterFencedError` before any bytes land."""
         if not self._buf:
             return None
+        self._check_fence()
         blob, fname = self._serialize_buffer()
         digest = hashlib.sha256(blob).hexdigest()
         fd, tmp = tempfile.mkstemp(dir=self.dir,
@@ -211,7 +271,7 @@ class FirehoseLogWriter:
 
     # -- manifest + retention --
     def _write_manifest(self) -> None:
-        doc = {"name": self.name, "version": 1,
+        doc = {"name": self.name, "version": 1, "epoch": self.epoch,
                "segments": [dataclasses.asdict(s) for s in self.segments]}
         fd, tmp = tempfile.mkstemp(dir=self.dir,
                                    prefix=f".tmp_{self.name}_man_")
@@ -291,6 +351,38 @@ def slow_io(obj, methods: Tuple[str, ...], delay_s: float):
     return obj
 
 
+def flaky_io(obj, methods: Tuple[str, ...], n_failures: int = 1,
+             exc=OSError):
+    """Transient-fault injector: wrap the named bound methods of ``obj`` so
+    the first ``n_failures`` calls (counted across all wrapped methods)
+    raise ``exc`` before the real call runs — an NFS hiccup / EINTR-style
+    blip rather than ``slow_io``'s latency or ``corrupt_segment``'s
+    permanent damage. The reader's bounded retry must absorb these.
+    Returns ``obj``; restore via ``obj._flaky_io_undo`` (last wins)."""
+    originals = [(m, getattr(obj, m)) for m in methods]
+    budget = {"left": int(n_failures), "raised": 0}
+
+    def _wrap(fn):
+        def flaked(*a, **kw):
+            if budget["left"] > 0:
+                budget["left"] -= 1
+                budget["raised"] += 1
+                raise exc("injected transient I/O failure")
+            return fn(*a, **kw)
+        return flaked
+
+    for m, fn in originals:
+        setattr(obj, m, _wrap(fn))
+
+    def undo():
+        for m, fn in originals:
+            setattr(obj, m, fn)
+
+    obj._flaky_io_undo = undo
+    obj._flaky_io_stats = budget
+    return obj
+
+
 def corrupt_segment(directory: str, seg: Segment,
                     keep_fraction: float = 0.5) -> None:
     """Truncate a sealed segment's bytes in place (torn write on a
@@ -311,13 +403,23 @@ def _manifest_path(directory: str, name: str) -> str:
     return os.path.join(directory, f"{name}-MANIFEST.json")
 
 
-def _load_manifest(directory: str, name: str) -> List[Segment]:
+def _load_manifest_doc(directory: str, name: str) -> Dict:
+    """The full manifest document (segments + leadership epoch)."""
     path = _manifest_path(directory, name)
     if not os.path.exists(path):
-        return []
+        return {}
     with open(path) as f:
-        doc = json.load(f)
-    return [Segment(**s) for s in doc.get("segments", [])]
+        return json.load(f)
+
+
+def _load_manifest(directory: str, name: str) -> List[Segment]:
+    return [Segment(**s)
+            for s in _load_manifest_doc(directory, name).get("segments", [])]
+
+
+def log_epoch(directory: str, name: str = "firehose") -> int:
+    """The current leadership epoch recorded in the log manifest."""
+    return int(_load_manifest_doc(directory, name).get("epoch", 0))
 
 
 class FirehoseLogReader:
@@ -328,16 +430,28 @@ class FirehoseLogReader:
     first bad/missing segment truncates the readable log there. Files at
     segment names that the manifest does not list (a crashed writer's torn
     tail) are counted and ignored.
+
+    Transient I/O errors (an NFS blip mid-replay) are absorbed by a
+    bounded retry-with-backoff around every segment read: up to
+    ``io_retries`` re-reads, sleeping ``io_backoff_s * 2**attempt`` between
+    attempts (``n_io_retries`` counts them). Only after the budget is
+    exhausted does the error surface — as a bad segment during
+    verification (truncating the readable log there, same as corruption)
+    or as the raised ``OSError`` during a chunk read.
     """
 
     def __init__(self, directory: str, name: str = "firehose",
-                 verify: bool = True):
+                 verify: bool = True, io_retries: int = 2,
+                 io_backoff_s: float = 0.005):
         self.dir = directory
         self.name = name
         self.verify = verify
+        self.io_retries = int(io_retries)
+        self.io_backoff_s = float(io_backoff_s)
         self.segments: List[Segment] = []
         self.n_truncated_segments = 0   # manifested but failed verification
         self.n_unmanifested_files = 0   # torn tail beyond the manifest
+        self.n_io_retries = 0           # transient read errors absorbed
         self.refresh()
 
     def refresh(self) -> "FirehoseLogReader":
@@ -363,14 +477,34 @@ class FirehoseLogReader:
             and f not in listed)
         return self
 
+    def _read_bytes(self, path: str) -> bytes:
+        """The one raw segment read (injection point for ``flaky_io``)."""
+        with open(path, "rb") as f:
+            return f.read()
+
+    def _read_bytes_retry(self, path: str) -> bytes:
+        """Bounded retry-with-backoff over ``_read_bytes``: a transient
+        hiccup must not surface as a hard replay failure."""
+        import time as _time
+        for attempt in range(self.io_retries + 1):
+            try:
+                return self._read_bytes(path)
+            except OSError:
+                if attempt >= self.io_retries:
+                    raise
+                self.n_io_retries += 1
+                if self.io_backoff_s > 0:
+                    _time.sleep(self.io_backoff_s * (2 ** attempt))
+        raise AssertionError("unreachable")
+
     def _ok(self, path: str, seg: Segment) -> bool:
         if not self.verify:
             return True
         try:
-            with open(path, "rb") as f:
-                return hashlib.sha256(f.read()).hexdigest() == seg.sha256
+            blob = self._read_bytes_retry(path)
         except OSError:
             return False
+        return hashlib.sha256(blob).hexdigest() == seg.sha256
 
     # -- seek info --
     def first_tick(self) -> Optional[int]:
@@ -381,7 +515,8 @@ class FirehoseLogReader:
 
     # -- reads --
     def _load_segment(self, seg: Segment) -> LogChunk:
-        with np.load(os.path.join(self.dir, seg.file)) as z:
+        blob = self._read_bytes_retry(os.path.join(self.dir, seg.file))
+        with np.load(io.BytesIO(blob)) as z:
             return LogChunk(**{k: z[k] for k in _LANES})
 
     def read_chunks(self, from_tick: int, chunk_ticks: Optional[int] = None,

@@ -1,0 +1,230 @@
+"""Self-healing replicated serving fleet (the ISSUE 7 chaos property).
+
+Covers: the full chaos composition — a 50x firehose flash crowd with the
+log-writer leader killed mid-segment AND a follower crashed, while a third
+replica serves every request through a degraded (slow) disk — with zero
+client request failures, the fenced zombie ex-leader rejected, the durable
+log healed gap-free from the survivors' rings, and every recovered
+replica's engine state bit-exact against an uninterrupted single-service
+run over the same stream. Plus: lag-gated readmission (a recovering
+replica is invisible to routing until its lag clears; a starved catch-up
+budget keeps it out forever), and epoch fencing at the writer API level.
+
+Everything is tick-clocked (no wall time in liveness decisions), so the
+chaos schedule is exactly reproducible.
+"""
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.background import AssistanceService
+from repro.core.decay import DecayConfig
+from repro.core.engine import EngineConfig
+from repro.distributed.fleet import FleetConfig, ServingFleet
+from repro.streaming import (FirehoseLogReader, FirehoseLogWriter,
+                             FirehoseWorkload, SpamSpec, SpikeSpec,
+                             WorkloadConfig, WriterFencedError, log_epoch,
+                             slow_io)
+
+
+def _cfg(policy="lazy", **kw):
+    base = dict(query_capacity=1 << 11, cooc_capacity=1 << 13,
+                session_capacity=1 << 10, session_window=3,
+                decay_every=4, prune_every=6, rank_every=5,
+                region_width=16, decay=DecayConfig(policy=policy))
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _wl(seed=3, spike_mult=50.0, spike_at=6, **kw):
+    base = dict(vocab_per_lang=128, n_langs=3, n_users=500,
+                base_queries_per_tick=64, base_tweets_per_tick=8,
+                min_bucket=64, min_tweet_bucket=8,
+                spikes=(SpikeSpec(t_start=spike_at, mult=spike_mult),),
+                spam=SpamSpec(period=9, burst_ticks=2))
+    base.update(kw)
+    return FirehoseWorkload(WorkloadConfig(**base), seed=seed)
+
+
+def _assert_states_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"state leaf {i}")
+
+
+def _all_live(fleet):
+    return all(r.status == "live" for r in fleet._replicas)
+
+
+# ---------------------------------------------------------------------------
+# The chaos property (ISSUE 7 acceptance): 50x spike + leader kill
+# mid-segment + follower kill + slow disk — zero request failures, fenced
+# zombie rejected, log gap-free, recovered replicas bit-exact.
+# ---------------------------------------------------------------------------
+
+def test_fleet_chaos_leader_and_follower_kill_under_spike(tmp_path):
+    rt_cfg = _cfg()
+    fcfg = FleetConfig(n_replicas=3, heartbeat_timeout=2, restart_after=1,
+                       snapshot_every=8, ticks_per_segment=4)
+    fleet = ServingFleet(str(tmp_path), rt_cfg, fcfg)
+    wl = _wl(seed=3)                      # 50x flash crowd from t=6
+    ref = AssistanceService(rt_cfg, alpha=fcfg.alpha, bg_cfg=fleet.bg_cfg)
+
+    # chaos composition: the routing path itself is degraded too — replica
+    # 2 answers through a slow disk while the fleet is whole; the client's
+    # timeout discards its answers, so requests that try it first hedge.
+    # (The injection is undone before the kills: once two replicas are down
+    # the slow one may be the only fast-path survivor left.)
+    ss = fleet.serverset(timeout_s=0.01, max_retries=1)
+    slow_io(fleet.handles[2], ("related",), delay_s=0.05)
+
+    probe = int(wl.fps[0])
+    n_answered = 0
+    torn = None
+    t, n_ticks = 0, 24
+    while t < n_ticks or (t < n_ticks + 16 and not _all_live(fleet)):
+        ev, tw = wl.gen_tick(t)
+        if t == 7:                        # kill the LEADER mid-segment
+            fleet.handles[2]._slow_io_undo()
+            assert fleet.leader() == 0
+            torn = fleet.kill(0, mid_segment=True)
+        if t == 12:                       # kill a follower (replica 2)
+            assert fleet._replicas[2].status == "live" and fleet.leader() != 2
+            fleet.kill(2)
+        fleet.offer_tick(t, ev, tw)
+        res = ss.request_info(probe)      # raises iff NO live replica answers
+        assert isinstance(res.suggestions, list)
+        n_answered += 1
+        ref.step(ev, tw)
+        t += 1
+
+    # zero failed requests throughout the kills, failovers and recoveries
+    assert n_answered == t >= n_ticks
+    assert _all_live(fleet), fleet.metrics()
+    assert torn is not None               # the crash really tore a segment
+    # the slow replica forced real hedges (and timeouts) along the way
+    assert ss.n_hedged > 0 and ss.n_timeouts > 0
+
+    m = fleet.metrics()
+    assert m["n_deaths_detected"] == 2 and m["n_recoveries"] == 2
+    # failover 0->1 at detection, then 0 retakes on readmission
+    assert m["n_failovers"] == 2 and m["epoch"] == 2
+    assert m["leader"] == 0
+
+    # the log healed gap-free from the survivors' rings: ticks the dead
+    # leader had buffered (and the undetected-death window) were re-appended
+    assert m["n_healed_ticks"] >= 3 and m["n_lost_ticks"] == 0
+    fleet._replicas[fleet.leader()].writer.flush()
+    reader = FirehoseLogReader(fleet.log_dir)
+    ticks = [tk for tk, _, _ in reader.read_ticks(0)]
+    assert ticks == list(range(t)), "durable log must be gap-free"
+
+    # the fenced zombie: an ex-leader writer still at epoch 0 wakes up and
+    # tries to append — rejected before any bytes land, manifest untouched
+    epoch = log_epoch(fleet.log_dir)
+    assert epoch == m["epoch"] == 2
+    segs_before = [(s.first, s.last, s.sha256) for s in reader.segments]
+    zombie = FirehoseLogWriter(fleet.log_dir, ticks_per_segment=4, epoch=0)
+    with pytest.raises(WriterFencedError):
+        zombie.append(t + 100, ev, tw)
+    with pytest.raises(WriterFencedError):
+        zombie.assume_epoch(1)            # cannot rewind the fence either
+    assert log_epoch(fleet.log_dir) == epoch
+    reader.refresh()
+    assert [(s.first, s.last, s.sha256) for s in reader.segments] \
+        == segs_before
+
+    # every replica — the survivor AND both recovered ones — is bit-exact
+    # against the uninterrupted single-service reference run
+    states = fleet.states()
+    assert set(states) == {0, 1, 2}
+    for rid, (rt_state, bg_state) in states.items():
+        _assert_states_equal(ref.rt.state, rt_state)
+        _assert_states_equal(ref.bg.state, bg_state)
+    assert fleet._replicas[0].n_restarts == 1
+    assert fleet._replicas[1].n_restarts == 0
+    assert fleet._replicas[2].n_restarts == 1
+
+
+# ---------------------------------------------------------------------------
+# Lag-gated readmission
+# ---------------------------------------------------------------------------
+
+def test_replica_readmitted_only_when_lag_clears(tmp_path):
+    """A restarted replica recovers to the SEALED log head only — until a
+    seal covers the current tick it stays ``recovering``: out of routing
+    (``alive`` False), out of membership, invisible to clients. Readmission
+    happens exactly when catch-up reaches the live tick, and the readmitted
+    state is bit-exact with the uninterrupted run."""
+    rt_cfg = _cfg()
+    fcfg = FleetConfig(n_replicas=2, heartbeat_timeout=0, restart_after=1,
+                       catchup_budget_ticks=6, ticks_per_segment=4,
+                       snapshot_every=4)
+    fleet = ServingFleet(str(tmp_path), rt_cfg, fcfg)
+    # flat load, one query bucket size (spam bursts included), no tweet
+    # lane: constant shapes mean segments seal exactly at ticks_per_segment
+    # boundaries, so the readmission tick is exact
+    wl = _wl(seed=5, spike_mult=1.0, min_bucket=256,
+             base_tweets_per_tick=0)
+    ref = AssistanceService(rt_cfg, alpha=fcfg.alpha, bg_cfg=fleet.bg_cfg)
+    ss = fleet.serverset()
+    probe = int(wl.fps[0])
+    status_at = {}
+    for t in range(12):
+        ev, tw = wl.gen_tick(t)
+        if t == 4:
+            fleet.kill(1)                 # follower: no failover involved
+        fleet.offer_tick(t, ev, tw)
+        res = ss.request_info(probe)
+        status_at[t] = fleet._replicas[1].status
+        if status_at[t] != "live":
+            # a dead/recovering replica is never routed to
+            assert not fleet.handles[1].alive
+            assert res.replica == 0 and res.attempts == 1
+        ref.step(ev, tw)
+
+    # killed before tick 4 -> detected at 4 -> restarted at 5 -> the log is
+    # only sealed through 3 there, so it must WAIT (recovering) until the
+    # segment 4..7 seals at tick 7, then catch up and rejoin
+    assert status_at[4] == "dead"
+    assert status_at[5] == status_at[6] == "recovering"
+    assert status_at[7] == "live"
+    assert fleet.metrics()["n_recoveries"] == 1
+    assert fleet.metrics()["n_failovers"] == 0   # leader 0 never wavered
+    for rid, (rt_state, bg_state) in fleet.states().items():
+        _assert_states_equal(ref.rt.state, rt_state)
+        _assert_states_equal(ref.bg.state, bg_state)
+
+
+def test_starved_catchup_budget_keeps_replica_quarantined(tmp_path):
+    """With a catch-up budget slower than the hose, a recovering replica
+    can never clear its lag: the gate keeps it out of routing indefinitely
+    (stale answers are never served from it) while the survivor answers."""
+    rt_cfg = _cfg()
+    fcfg = FleetConfig(n_replicas=2, heartbeat_timeout=0, restart_after=1,
+                       catchup_budget_ticks=1, ticks_per_segment=4,
+                       snapshot_every=4)
+    fleet = ServingFleet(str(tmp_path), rt_cfg, fcfg)
+    wl = _wl(seed=7, spike_mult=1.0, min_bucket=256,
+             base_tweets_per_tick=0)    # constant shapes: exact seal points
+    ss = fleet.serverset()
+    probe = int(wl.fps[0])
+    for t in range(14):
+        ev, tw = wl.gen_tick(t)
+        if t == 4:
+            fleet.kill(1)
+        fleet.offer_tick(t, ev, tw)
+        res = ss.request_info(probe)
+        if t >= 4:
+            assert res.replica == 0
+    rep = fleet._replicas[1]
+    assert rep.status == "recovering" and not fleet.handles[1].alive
+    assert fleet.metrics()["n_recoveries"] == 0
+    # ... but it IS making (budgeted) progress behind the gate
+    assert int(rep.service.rt.state.tick) > 4
+    assert int(rep.service.rt.state.tick) < 15

@@ -35,8 +35,9 @@ from repro.distributed.fault_tolerance import (CheckpointManager,
 from repro.serving.serve import SuggestFrontend, pack_suggestions
 from repro.streaming import (CatchUpController, FirehoseLogReader,
                              FirehoseLogWriter, ReplayConfig, chunk_to_stack,
-                             corrupt_segment, kill_writer_mid_segment,
-                             recover_engine, recover_service)
+                             corrupt_segment, flaky_io,
+                             kill_writer_mid_segment, recover_engine,
+                             recover_service)
 from proptest import property_test
 
 
@@ -149,6 +150,63 @@ def test_torn_tail_truncation(tmp_path):
     assert r.last_tick() == 2 and r.n_truncated_segments == 1
     assert r.repair() >= 1   # torn tail debris removed
     assert FirehoseLogReader(str(tmp_path)).n_unmanifested_files == 0
+
+
+def test_reader_retries_transient_io_errors(tmp_path):
+    """An NFS blip / EINTR-style transient read error must be absorbed by
+    the reader's bounded retry-with-backoff, not surface as a hard replay
+    failure (and not as a bogus torn-tail truncation during verify)."""
+    batches = _batches(8)
+    w = FirehoseLogWriter(str(tmp_path), ticks_per_segment=4)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+    w.close()
+    r = FirehoseLogReader(str(tmp_path), io_backoff_s=1e-4)
+    # blip during verification: refresh() must still accept every segment
+    flaky_io(r, ("_read_bytes",), n_failures=1)
+    r.refresh()
+    assert r.n_io_retries == 1 and r.n_truncated_segments == 0
+    assert (r.first_tick(), r.last_tick()) == (0, 7)
+    # blip during a chunk read mid-replay: the data still comes back exact
+    flaky_io(r, ("_read_bytes",), n_failures=2)
+    got = list(r.read_ticks(0))
+    assert [t for t, _, _ in got] == list(range(8))
+    np.testing.assert_array_equal(got[5][1].q_fp, batches[5][0].q_fp)
+    assert r.n_io_retries == 3
+    # a PERSISTENT fault exhausts the budget: verify treats the segment as
+    # bad and truncates there (same stance as corruption) instead of hanging
+    flaky_io(r, ("_read_bytes",), n_failures=100)
+    r.refresh()
+    assert r.segments == [] and r.n_truncated_segments == 2
+    r._flaky_io_undo()
+    assert r.refresh().last_tick() == 7   # fault cleared -> log intact
+    # ... and during a read, the exhausted budget surfaces the real error
+    flaky_io(r, ("_read_bytes",), n_failures=100)
+    with pytest.raises(OSError):
+        list(r.read_ticks(0))
+
+
+def test_recovery_replay_through_flaky_io(tmp_path):
+    """End-to-end: a transient read fault mid catch-up replay is retried
+    and the recovered engine is still bit-exact."""
+    cfg = _cfg("lazy")
+    batches = _batches(8)
+    ckpt = CheckpointManager(str(tmp_path / "ck"))
+    w = FirehoseLogWriter(str(tmp_path / "log"), ticks_per_segment=3)
+    live = SearchAssistanceEngine(cfg)
+    live.save_snapshot(ckpt)                      # offset 0: replay all
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+        live.step(ev, tw)
+    w.close()
+    reader = FirehoseLogReader(str(tmp_path / "log"), io_backoff_s=1e-4)
+    flaky_io(reader, ("_read_bytes",), n_failures=2)
+    eng = SearchAssistanceEngine(cfg)
+    ctl = CatchUpController(eng, reader, ReplayConfig(chunk_ticks=4))
+    stats = ctl.catch_up()
+    assert stats["n_ticks"] == 8
+    assert reader.n_io_retries >= 1
+    _assert_states_equal(live.state, eng.state)
 
 
 # ---------------------------------------------------------------------------

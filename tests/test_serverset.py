@@ -1,0 +1,146 @@
+"""ServerSet routing semantics: health, staleness, hedging, breakers.
+
+Covers the failure paths with duck-typed fake replicas (no engines): dead
+replicas skipped outright, all-dead raising a clear error, freshest-first
+staleness ordering with round-robin tie-breaking, hedging on raise AND on
+timeout (the slow answer is discarded), the per-replica circuit breaker
+opening/half-open probing, retry passes with backoff, and the RouteResult
+staleness tagging.
+"""
+import time
+
+import pytest
+
+from repro.serving.serve import RouteResult, ServerSet
+
+
+class _Fake:
+    """Duck-typed replica: scripted liveness/freshness/faults."""
+
+    def __init__(self, name, tick=None, alive=True, fail=0, delay=0.0):
+        self.name = name
+        self.alive = alive
+        self.tick = tick
+        self.fail = fail            # raise on the first `fail` calls (-1 = always)
+        self.delay = delay
+        self.calls = 0
+
+    def freshness_tick(self):
+        return self.tick
+
+    def related(self, query, k=8):
+        self.calls += 1
+        if self.fail == -1 or self.calls <= self.fail:
+            raise ConnectionError(f"{self.name} is down")
+        if self.delay:
+            time.sleep(self.delay)
+        return [(self.name, 1.0)]
+
+
+def test_dead_replica_skipped_outright():
+    dead, live = _Fake("dead", alive=False), _Fake("live", tick=4)
+    ss = ServerSet([dead, live])
+    res = ss.request_info("breaking news")
+    assert res.suggestions == [("live", 1.0)]
+    assert res.replica == 1 and res.attempts == 1 and not res.hedged
+    assert dead.calls == 0, "a dead replica must never even be tried"
+
+
+def test_all_dead_raises_clear_error():
+    ss = ServerSet([_Fake("a", alive=False), _Fake("b", alive=False)])
+    with pytest.raises(RuntimeError, match="no live frontend replicas"):
+        ss.request("q")
+    # all live but all failing exhausts every retry pass, then raises with
+    # the per-replica errors in the message
+    ss = ServerSet([_Fake("a", fail=-1), _Fake("b", fail=-1)], max_retries=1)
+    with pytest.raises(RuntimeError, match="ConnectionError"):
+        ss.request("q")
+    assert ss.n_failures == 4    # 2 replicas x 2 passes
+
+
+def test_staleness_ordering_picks_freshest():
+    stale, fresh, mid = _Fake("stale", tick=5), _Fake("fresh", tick=9), \
+        _Fake("mid", tick=7)
+    ss = ServerSet([stale, fresh, mid])
+    res = ss.request_info("q")
+    assert res.suggestions == [("fresh", 1.0)]
+    assert res.tick == 9 and res.staleness == 0 and not res.hedged
+    # a replica with no freshness at all sorts last
+    assert ServerSet([_Fake("unknown"), fresh]).request("q") \
+        == [("fresh", 1.0)]
+
+
+def test_hedge_to_next_freshest_and_staleness_tag():
+    fresh = _Fake("fresh", tick=9, fail=-1)       # freshest but broken
+    backup = _Fake("backup", tick=7)
+    ss = ServerSet([backup, fresh])
+    res = ss.request_info("q")
+    assert res.suggestions == [("backup", 1.0)]
+    assert res.hedged and res.attempts == 2
+    # the answer is honest about being stale vs the freshest LIVE replica
+    assert res.tick == 7 and res.staleness == 2
+    assert ss.n_hedged == 1 and ss.n_failures == 1
+
+
+def test_timeout_discards_slow_answer_and_hedges():
+    slow = _Fake("slow", tick=9, delay=0.05)      # freshest but too slow
+    fast = _Fake("fast", tick=8)
+    ss = ServerSet([slow, fast], timeout_s=0.01)
+    res = ss.request_info("q")
+    assert res.suggestions == [("fast", 1.0)]     # slow answer discarded
+    assert res.hedged and ss.n_timeouts == 1 and ss.n_failures == 1
+    assert slow.calls == 1
+
+
+def test_equal_freshness_rotates_round_robin():
+    a, b = _Fake("a", tick=5), _Fake("b", tick=5)
+    ss = ServerSet([a, b])
+    served = {ss.request("q")[0][0] for _ in range(4)}
+    assert served == {"a", "b"}, "equally-fresh replicas must share load"
+
+
+def test_circuit_breaker_opens_and_half_open_probes():
+    flaky = _Fake("flaky", tick=9, fail=-1)       # freshest, always failing
+    ok = _Fake("ok", tick=5)
+    ss = ServerSet([flaky, ok], breaker_failures=2, breaker_cooldown=4)
+    # first two requests: flaky tried first (freshest), fails, hedged
+    for _ in range(2):
+        assert ss.request("q") == [("ok", 1.0)]
+    assert flaky.calls == 2 and ss.n_hedged == 2
+    # breaker now open: flaky demoted to last resort, not tried at all
+    for _ in range(3):
+        assert ss.request("q") == [("ok", 1.0)]
+    assert flaky.calls == 2 and ss.n_breaker_skips >= 3
+    assert ss.n_hedged == 2, "no hedges while the breaker shields the flaky"
+    # cooldown expiry: one half-open probe goes through (and fails again)
+    for _ in range(4):
+        ss.request("q")
+    assert flaky.calls >= 3
+    # recovery: flaky comes back healthy; the probe closes the breaker and
+    # freshest-first routing resumes
+    flaky.fail = 0
+    for _ in range(8):
+        last = ss.request_info("q")
+    assert last.suggestions == [("flaky", 1.0)] and last.staleness == 0
+
+
+def test_retry_pass_with_backoff_recovers_transient_fault():
+    # both replicas fail once (a transient blip), succeed on the retry pass
+    a, b = _Fake("a", tick=3, fail=1), _Fake("b", tick=3, fail=1)
+    ss = ServerSet([a, b], max_retries=1, backoff_s=0.001)
+    res = ss.request_info("q")
+    assert res.suggestions in ([("a", 1.0)], [("b", 1.0)])
+    assert res.attempts == 3 and res.hedged
+    assert ss.n_failures == 2
+    # without any retry budget the same blip is fatal
+    a2, b2 = _Fake("a", tick=3, fail=1), _Fake("b", tick=3, fail=1)
+    with pytest.raises(RuntimeError):
+        ServerSet([a2, b2], max_retries=0).request("q")
+
+
+def test_route_result_fields_without_freshness():
+    ss = ServerSet([_Fake("anon")])               # freshness unknown
+    res = ss.request_info("q")
+    assert isinstance(res, RouteResult)
+    assert res.tick is None and res.staleness is None
+    assert res.replica == 0 and res.attempts == 1

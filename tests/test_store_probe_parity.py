@@ -307,8 +307,13 @@ def test_ranking_compaction_parity_and_overflow_counting():
     for f in s_full:
         a = sorted(s_full[f], key=lambda t: (-t[1], t[0]))
         b = sorted(s_comp[f], key=lambda t: (-t[1], t[0]))
+        # rtol 1e-4, not 1e-6: compaction reorders the surviving pairs, so
+        # the per-source f32 normalization sums accumulate in a different
+        # order than the uncompacted pass — occasionally past 1e-6, which
+        # made this flaky. A real parity break (missing pair, wrong
+        # normalizer) shifts scores by >1e-2 here.
         np.testing.assert_allclose([s for _, s in a], [s for _, s in b],
-                                   rtol=1e-6)
+                                   rtol=1e-4)
         assert {d for d, _ in a} == {d for d, _ in b}
 
     # a pathologically small compaction buffer must COUNT what it cuts, and
@@ -321,7 +326,7 @@ def test_ranking_compaction_parity_and_overflow_counting():
     s_tiny = ranking.suggestions_to_host(tiny)
     best_full = max(s for row in s_full.values() for _, s in row)
     best_tiny = max(s for row in s_tiny.values() for _, s in row)
-    np.testing.assert_allclose(best_tiny, best_full, rtol=1e-6)
+    np.testing.assert_allclose(best_tiny, best_full, rtol=1e-4)
 
 
 # ---------------------------------------------------------------------------
