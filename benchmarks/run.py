@@ -19,7 +19,7 @@ import traceback
 
 BENCHES = ["churn", "ingest", "latency", "ranking", "recovery", "spelling",
            "store", "memory_coverage", "engine_perf", "roofline", "overload",
-           "fleet"]
+           "fleet", "compaction"]
 
 
 def main() -> None:

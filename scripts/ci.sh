@@ -28,4 +28,8 @@ if [ "${SKIP_BENCH:-0}" != "1" ]; then
     # fleet chaos smoke: leader kill mid-segment + follower kill under a
     # 50x spike -- zero failed requests, epoch-fenced failover, healed log
     python -m benchmarks.run --json results/BENCH_fleet.json fleet
+    # compaction smoke: 2000-tick run -- on-disk bytes bounded by the
+    # working set (vs linear growth), base+tail replay bit-exact vs
+    # replay-from-zero, fold pause p95
+    python -m benchmarks.run --json results/BENCH_compaction.json compaction
 fi

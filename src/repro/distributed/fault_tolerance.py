@@ -33,7 +33,12 @@ slots; see ``core.stores.diff_leading_rows``). One manifest per step dir:
 
 arrays.npz holds ``leaf_{i}`` whole for a full (and for 0-d leaves always);
 a delta stores ``leaf_{i}_idx`` (changed leading indices, i64) +
-``leaf_{i}_val`` (the rows at those indices) per array leaf.
+``leaf_{i}_val`` (the rows at those indices) per array leaf. Both full and
+delta payloads are wrapped in a ``streaming.codec`` compressed container
+(manifest ``codec``/``raw_sha256``/``raw_nbytes``; ``sha256``/``nbytes``
+stay over the on-disk bytes so torn-write detection and the
+``corrupt_snapshot`` injector are codec-oblivious); pre-codec raw-npz
+checkpoints restore transparently.
 
 Restore **chain-walk**: resolve the requested step back through
 ``base_step`` links to its base full (verifying each member's sha256), then
@@ -63,7 +68,6 @@ under overload control carry the controller's shed/latency counters in
 from __future__ import annotations
 
 import hashlib
-import io
 import json
 import os
 import shutil
@@ -77,6 +81,14 @@ import numpy as np
 from ..core.stores import apply_row_delta, diff_leading_rows
 
 
+def _codec():
+    # Lazy: ``streaming.replay`` imports this module at its top level, so a
+    # top-level import of ``streaming.codec`` here would make the package
+    # import order circular. By first call, both packages are initialized.
+    from ..streaming import codec as c
+    return c
+
+
 def _raw_view(a: np.ndarray) -> Tuple[np.ndarray, Optional[str]]:
     """npz cannot store ml_dtypes (bf16 etc): raw-view them, remember why."""
     if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
@@ -87,10 +99,19 @@ def _raw_view(a: np.ndarray) -> Tuple[np.ndarray, Optional[str]]:
 
 class CheckpointManager:
     def __init__(self, directory: str, keep_n: int = 3,
-                 tmp_ttl_s: float = 3600.0, full_interval: int = 1):
+                 tmp_ttl_s: float = 3600.0, full_interval: int = 1,
+                 codec: str = "zlib"):
         assert full_interval >= 1
         self.dir = directory
         self.keep_n = keep_n
+        # payload codec (``streaming.codec``): full AND delta arrays.npz
+        # blobs are wrapped in a compressed container; the manifest's
+        # ``sha256``/``nbytes`` describe the on-disk (compressed) bytes —
+        # ``corrupt_snapshot`` and the chain walk's integrity pass operate
+        # on file bytes exactly as before — while ``raw_sha256``/
+        # ``raw_nbytes`` describe the npz body inside. ``codec="raw"``
+        # restores the pre-codec byte-identical format; either decodes.
+        self.codec = codec
         # ``.tmp_*`` dirs older than this are debris from crashed writers
         # (a live writer holds its tmp dir only for the duration of one
         # save); retention removes them.
@@ -172,9 +193,8 @@ class CheckpointManager:
                     if raw is not None:
                         dtypes[f"leaf_{i}"] = raw
                     arrays[f"leaf_{i}"] = whole
-            bio = io.BytesIO()
-            np.savez(bio, **arrays)
-            blob = bio.getvalue()
+            blob, cinfo = _codec().encode_payload(arrays, codec=self.codec,
+                                                  fp_lanes=())
             with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
                 f.write(blob)
                 f.flush()
@@ -187,6 +207,9 @@ class CheckpointManager:
                 "raw_dtypes": dtypes,
                 "sha256": hashlib.sha256(blob).hexdigest(),
                 "nbytes": len(blob),
+                "codec": cinfo["codec"],
+                "raw_sha256": cinfo.get("raw_sha256"),
+                "raw_nbytes": cinfo.get("raw_nbytes"),
                 "time": time.time(),
                 "meta": meta or {},
             }
@@ -228,9 +251,11 @@ class CheckpointManager:
         if want is not None and hashlib.sha256(blob).hexdigest() != want:
             return None
         try:
-            with np.load(io.BytesIO(blob)) as z:
-                return {k: z[k] for k in z.files}
-        except Exception:   # noqa: BLE001 — short/garbled npz
+            # decodes compressed containers and legacy raw npz alike; a
+            # CodecError (torn container / failed raw_sha256) means torn
+            payload, _info = _codec().decode_payload(blob)
+            return payload
+        except Exception:   # noqa: BLE001 — short/garbled blob
             return None
 
     def _collect_chain(self, step: int) -> Optional[List[Tuple[int, Dict,

@@ -51,6 +51,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from ..core.background import AssistanceService, background_config
 from ..core.engine import EngineConfig
 from ..core.hashing import fingerprint
+from ..streaming.compaction import CompactionConfig, LogCompactor
 from ..streaming.log import (FirehoseLogReader, FirehoseLogWriter,
                              WriterFencedError, kill_writer_mid_segment)
 from ..streaming.replay import (CatchUpController, ReplayConfig,
@@ -75,6 +76,11 @@ class FleetConfig:
     rank_lag_ticks: int = 4
     alpha: float = 0.7
     log_name: str = "firehose"
+    compact_every: int = 0       # fold the log into a base snapshot at this
+                                 # cadence (0 = no compaction); leader-only,
+                                 # epoch-fenced like the writer
+    keep_bases: int = 2          # compaction fallback depth (old bases +
+                                 # their log tail retained after each swap)
 
 
 class _Replica:
@@ -162,6 +168,18 @@ class ServingFleet:
             for i in range(cfg.n_replicas)]
         self.handles = [ReplicaHandle(self, i) for i in range(cfg.n_replicas)]
         self._reader = FirehoseLogReader(self.log_dir, name=cfg.log_name)
+        # compaction (leader-only; the compactor re-adopts the group epoch
+        # before every cycle so a deposed leader's fold can never swap the
+        # manifest — see streaming.compaction)
+        self.compactor: Optional[LogCompactor] = None
+        if cfg.compact_every > 0:
+            self.compactor = LogCompactor(
+                self.log_dir, {"rt": rt_cfg, "bg": self.bg_cfg},
+                name=cfg.log_name,
+                cfg=CompactionConfig(keep_bases=cfg.keep_bases,
+                                     chunk_ticks=cfg.chunk_ticks))
+        self.n_compactions = 0
+        self.last_compaction: Optional[Dict] = None
         # counters (the chaos bench reads these)
         self.n_failovers = 0
         self.n_deaths_detected = 0
@@ -299,6 +317,21 @@ class ServingFleet:
             leader_rep = self._replicas[self.group.leader()]
             if leader_rep.service is not None:
                 leader_rep.service.save_snapshot(self.rt_ckpt, self.bg_ckpt)
+
+        # leader folds the sealed log into a base on cadence: retention
+        # becomes [base, head] while replay-from-zero stays possible. Only
+        # an *appending* leader compacts (same single-writer discipline),
+        # and the compactor re-adopts the current epoch so its manifest
+        # swap is fenced against any failover since the fold started.
+        if self.compactor is not None and info["appended"] \
+                and self.cfg.compact_every > 0 \
+                and (t + 1) % self.cfg.compact_every == 0:
+            self.compactor.assume_epoch(self.group.epoch)
+            stats = self.compactor.compact()
+            self.last_compaction = stats
+            if not stats.get("noop"):
+                self.n_compactions += 1
+                info["compacted"] = stats["floor"]
         return info
 
     def _catchup_target(self, cur: int, head: Optional[int]) -> Optional[int]:
@@ -382,6 +415,9 @@ class ServingFleet:
             "leader": self.group.leader(),
             "epoch": self.group.epoch,
             "log_head_tick": head,
+            "log_floor_tick": self._reader.floor_tick(),
+            "n_log_bases": len(self._reader.bases),
+            "n_compactions": self.n_compactions,
             "n_failovers": self.n_failovers,
             "n_deaths_detected": self.n_deaths_detected,
             "n_recoveries": self.n_recoveries,

@@ -24,6 +24,11 @@ at ``--spike-at``), ``--tick-ms`` paces simulated arrivals so falling
 behind real time shows up as lag, and ``--slow-io-ms`` injects disk
 latency into the log writer (chaos knob).
 
+With ``--compact-every N`` the leader periodically folds the sealed log
+into a base snapshot (``streaming/compaction.py``): on-disk log bytes stay
+bounded while replay-from-zero survives via the newest base — the fleet
+path takes the same flag through ``FleetConfig.compact_every``.
+
 With ``--fleet N`` the run switches to the self-healing replicated fleet
 (``distributed.fleet.ServingFleet``): N full serving stacks replaying one
 leader-written, epoch-fenced durable log, heartbeat failure detection,
@@ -75,7 +80,10 @@ def _fmt(v, nd: int = 1):
 def _run_fleet(args, ecfg, gen_tick, head, head_t0) -> None:
     """--fleet N: the self-healing replicated fleet, chaos knobs wired."""
     from ..distributed.fleet import FleetConfig, ServingFleet
-    fleet = ServingFleet(args.out, ecfg, FleetConfig(n_replicas=args.fleet))
+    fleet = ServingFleet(args.out, ecfg,
+                         FleetConfig(n_replicas=args.fleet,
+                                     compact_every=args.compact_every,
+                                     keep_bases=args.keep_bases))
     ss = fleet.serverset(timeout_s=0.25, max_retries=1)
     for t in range(args.ticks):
         ev, tw = gen_tick(t)
@@ -104,7 +112,9 @@ def _run_fleet(args, ecfg, gen_tick, head, head_t0) -> None:
     print(f"[done] fleet: {ss.n_requests} requests ({ss.n_hedged} hedged), "
           f"{m['n_failovers']} failovers, {m['n_recoveries']} recoveries, "
           f"log healed {m['n_healed_ticks']} ticks "
-          f"({m['n_lost_ticks']} lost), epoch {m['epoch']}")
+          f"({m['n_lost_ticks']} lost), epoch {m['epoch']}, "
+          f"{m['n_compactions']} compactions "
+          f"(floor={_fmt(m['log_floor_tick'])})")
 
 
 def main() -> None:
@@ -149,6 +159,13 @@ def main() -> None:
     ap.add_argument("--slow-io-ms", type=float, default=0.0,
                     help="inject this much latency into every log-segment "
                          "seal (chaos: degraded disk)")
+    ap.add_argument("--compact-every", type=int, default=0,
+                    help="fold the sealed log into a base snapshot every N "
+                         "ticks: bounded on-disk bytes, replay-from-zero "
+                         "kept alive via the base (0 = no compaction)")
+    ap.add_argument("--keep-bases", type=int, default=2,
+                    help="compaction fallback depth: old bases (and their "
+                         "log tail) retained after each floor swap")
     args = ap.parse_args()
 
     if args.workload == "firehose":
@@ -227,6 +244,13 @@ def main() -> None:
                                keep_segments=16)
     if args.slow_io_ms > 0:
         slow_io(writer, ("flush",), args.slow_io_ms / 1e3)
+    compactor = None
+    if args.compact_every > 0:
+        from ..streaming.compaction import CompactionConfig, LogCompactor
+        # folds under the names recover_service restores ("rt"/"bg")
+        compactor = LogCompactor(
+            log_dir, {"rt": ecfg, "bg": bgcfg},
+            cfg=CompactionConfig(keep_bases=args.keep_bases))
     bg_ckpt = CheckpointManager(bg_dir)
     spell_ckpt = CheckpointManager(spell_dir)
 
@@ -330,6 +354,19 @@ def main() -> None:
             if bg_res is not None:
                 bg_ckpt.save(t, pack_suggestions(bg_engine.suggestions),
                              meta={"tick": t})
+
+        # leader folds the sealed log into a base on cadence (bounded
+        # on-disk bytes; replay-from-zero survives via the base)
+        if compactor is not None and t > 0 \
+                and t % args.compact_every == 0 \
+                and rt_group.leader() is not None:
+            writer.flush()          # seal the tail so the floor reaches t
+            compactor.assume_epoch(rt_group.epoch)
+            cst = compactor.compact()
+            if not cst.get("noop"):
+                print(f"[t={t}] compacted: floor={cst['floor']} "
+                      f"dropped {cst['n_segments_dropped']} segments "
+                      f"({cst['wall_s']:.2f}s)")
 
         # periodic spelling job (paper: a Pig job over a long span)
         if t > 0 and t % 60 == 0:

@@ -179,6 +179,9 @@ class SuggestFrontend:
                          if "time" in self._bg_manifest else None),
             "bg_tick": None if bg_next is None else bg_next - 1,
             "log_head_tick": None,
+            "log_floor_tick": None,
+            "log_first_tick": None,
+            "n_log_bases": 0,
             "lag_ticks": None,
             "rt_lag_ticks": None,
             "bg_lag_ticks": None,
@@ -213,6 +216,13 @@ class SuggestFrontend:
             self._log_reader.refresh()
             head = self._log_reader.last_tick()
             out["log_head_tick"] = head
+            # compacted storage tier: the replay floor (newest advertised
+            # base) and how far back the on-disk tail actually reaches —
+            # "can this frontend's backend still rebuild from zero, and
+            # from where" at a glance.
+            out["log_floor_tick"] = self._log_reader.floor_tick()
+            out["log_first_tick"] = self._log_reader.first_tick()
+            out["n_log_bases"] = len(self._log_reader.bases)
             if head is not None:
                 # pending = logged ticks the served tables don't reflect
                 out["rt_lag_ticks"] = max(

@@ -86,10 +86,40 @@ router and its requests hedge to the next-freshest survivor; a
 to until its lag clears, so clients never observe a rewound tick. Every
 answer is tagged with its serving tick and staleness vs the freshest live
 replica (``serving.serve.RouteResult``) — degraded answers are honest.
+
+**Compaction contract** (:mod:`.compaction` + :mod:`.codec`) — the
+storage tier under all of the above. Sealed segments and checkpoint
+payloads are compressed (fingerprint lanes XOR-delta encoded first; codec
+id + uncompressed sha256 in the manifest, on-disk sha256 unchanged), and
+a :class:`~repro.streaming.compaction.LogCompactor` periodically folds
+the sealed log prefix into per-engine **base snapshots** advertised in
+the log manifest's ``bases`` list. *Who may compact*: only the current
+leader — the compactor adopts the leadership epoch
+(``LogCompactor.assume_epoch``) and re-validates it against the manifest
+immediately before its atomic manifest swap, so a deposed (zombie)
+compactor raises ``WriterFencedError`` without touching the manifest;
+its orphaned fold output is never advertised and gets GC'd. *What the
+replay floor means*: a base at tick T holds engine state covering every
+tick < T — recovery (``recover_engine``/``recover_service``), fleet
+restarts and ``elastic.live_reshard``'s log-tail replay all start from
+the newest base ≤ their target instead of zero, so trimming segments
+below the floor is safe and "replay from zero" stays possible forever
+with bounded disk. Fleet **log-healing is floor-oblivious**: healing
+re-appends missing ticks at the head, compaction trims the tail — the
+two never touch the same segments. ``keep_bases`` old bases (plus the
+log tail from the oldest retained base) remain on disk, so a torn or
+corrupt newest base (``corrupt_base`` injection) degrades to the
+previous base + a longer replay — counted, never a dead log. The
+writer's blunt ``keep_segments`` retention warns-and-clamps rather than
+trim a segment at/after the newest base.
 """
+from .codec import (CodecError, decode_payload, encode_payload,
+                    xor_delta_decode, xor_delta_encode)
+from .compaction import (CompactionConfig, LogCompactor, corrupt_base,
+                         restore_from_base)
 from .log import (FirehoseLogReader, FirehoseLogWriter, LogChunk,
                   WriterFencedError, corrupt_segment, flaky_io,
-                  kill_writer_mid_segment, log_epoch, slow_io)
+                  kill_writer_mid_segment, log_bases, log_epoch, slow_io)
 from .overload import (DegradationLadder, LatencyTracker, OverloadController,
                        SLOConfig, admit_events, admit_tweets)
 from .replay import (CatchUpController, ReplayConfig, chunk_to_stack,
@@ -100,7 +130,11 @@ from .workload import (FirehoseWorkload, SpamSpec, SpikeSpec, WorkloadConfig,
 __all__ = [
     "FirehoseLogReader", "FirehoseLogWriter", "LogChunk",
     "WriterFencedError", "corrupt_segment", "flaky_io",
-    "kill_writer_mid_segment", "log_epoch", "slow_io",
+    "kill_writer_mid_segment", "log_bases", "log_epoch", "slow_io",
+    "CodecError", "decode_payload", "encode_payload",
+    "xor_delta_decode", "xor_delta_encode",
+    "CompactionConfig", "LogCompactor", "corrupt_base",
+    "restore_from_base",
     "CatchUpController", "ReplayConfig", "chunk_to_stack", "recover_engine",
     "recover_service",
     "OverloadController", "SLOConfig", "DegradationLadder", "LatencyTracker",

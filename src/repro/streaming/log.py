@@ -17,13 +17,34 @@ Design — one log = one directory (several named logs may share it):
     readers always see a consistent prefix of the log.
   * **rotation** by tick count (``ticks_per_segment``), and also whenever
     the micro-batch shapes change (a segment is one stackable block).
+  * **codec**: sealed segment blobs go through ``streaming.codec`` —
+    fingerprint lanes XOR-delta encoded, then zlib (exact round-trip).
+    The manifest records the codec id plus BOTH digests: ``sha256`` over
+    the on-disk (compressed) bytes — what the reader's integrity pass and
+    ``corrupt_segment`` operate on, unchanged — and ``raw_sha256`` over
+    the uncompressed npz body, re-verified at decode time. ``codec="raw"``
+    writes plain npz; readers decode either transparently.
   * **retention**: ``keep_segments`` newest segments are kept; older ones
     leave the manifest first, then their files are unlinked — a reader can
-    never observe a manifested-but-deleted segment. Retention must cover
-    the oldest snapshot offset recovery may restore from: with delta
-    snapshots (``CheckpointManager.full_interval > 1``) a torn chain falls
-    back to the last *full* snapshot, so size ``keep_segments`` for a
-    full-snapshot interval of ticks, not a delta interval.
+    never observe a manifested-but-deleted segment. Without a compaction
+    base in the manifest, retention must cover the oldest snapshot offset
+    recovery may restore from: with delta snapshots
+    (``CheckpointManager.full_interval > 1``) a torn chain falls back to
+    the last *full* snapshot, so size ``keep_segments`` for a
+    full-snapshot interval of ticks, not a delta interval. Once a
+    ``LogCompactor`` advertises a base (replay floor) in the manifest,
+    the guard below applies: ``_retain`` will never trim a segment that
+    holds ticks at/after the newest base — it warns and keeps the
+    segment instead of silently making replay-from-base impossible.
+  * **compaction bases**: the manifest's ``bases`` list advertises folded
+    base snapshots (``{"tick", "epoch", "engines": {name: step}}``):
+    engine state reflecting every tick ``< tick``, written through
+    ``CheckpointManager`` by ``streaming.compaction.LogCompactor``. The
+    newest base ≤ a requested tick is the replay floor: readers/recovery
+    restore it and replay only ``[tick, head]``. Only the compactor
+    rewrites ``bases`` (epoch-fenced, same manifest rename as the
+    writer); the writer carries them through untouched on every
+    manifest rewrite.
   * **torn-tail detection**: a crashed writer can leave (a) ``.tmp_*``
     scratch files, (b) a partial segment file at its final name that never
     made the manifest, or (c) — with non-atomic filesystems — a manifested
@@ -50,16 +71,17 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import io
 import json
 import os
 import re
 import tempfile
+import warnings
 from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
 from ..data.stream import QueryEvents, TweetBatch
+from .codec import DEFAULT_CODEC, decode_payload, encode_payload
 
 _FMT = "{name}-{first:012d}-{last:012d}.npz"
 _SEG_RE = re.compile(r"^(?P<name>.+)-(?P<first>\d{12})-(?P<last>\d{12})\.npz$")
@@ -100,7 +122,15 @@ class Segment:
     first: int
     last: int
     n_ticks: int
-    sha256: str
+    sha256: str               # over the on-disk (possibly compressed) bytes
+    codec: str = "raw"        # pre-codec manifests decode as raw npz
+    raw_sha256: Optional[str] = None   # over the uncompressed npz body
+
+
+def newest_base_tick(bases: List[Dict]) -> Optional[int]:
+    """Replay floor of a manifest's ``bases`` list: the newest advertised
+    base tick (state covers every tick strictly below it), or None."""
+    return max((int(b["tick"]) for b in bases), default=None)
 
 
 class WriterFencedError(RuntimeError):
@@ -136,12 +166,13 @@ class FirehoseLogWriter:
 
     def __init__(self, directory: str, ticks_per_segment: int = 8,
                  keep_segments: int = 0, name: str = "firehose",
-                 epoch: int = 0):
+                 epoch: int = 0, codec: str = DEFAULT_CODEC):
         assert ticks_per_segment > 0
         self.dir = directory
         self.name = name
         self.ticks_per_segment = ticks_per_segment
         self.keep_segments = keep_segments  # 0 = keep everything
+        self.codec = codec
         # leadership epoch this writer believes it holds; appends are fenced
         # against the manifest's epoch (see ``assume_epoch``)
         self.epoch = int(epoch)
@@ -149,7 +180,12 @@ class FirehoseLogWriter:
         self._buf: List[Dict[str, np.ndarray]] = []
         self._buf_ticks: List[int] = []
         self._dead = False
-        self.segments: List[Segment] = _load_manifest(directory, name)
+        doc = _load_manifest_doc(directory, name)
+        self.segments: List[Segment] = [Segment(**s)
+                                        for s in doc.get("segments", [])]
+        # compaction bases are owned by the LogCompactor; the writer only
+        # carries them through its manifest rewrites
+        self.bases: List[Dict] = list(doc.get("bases", []))
 
     # -- state --
     @property
@@ -178,6 +214,7 @@ class FirehoseLogWriter:
             raise WriterFencedError(
                 f"cannot assume epoch {epoch}: manifest already at {cur}")
         self.segments = [Segment(**s) for s in doc.get("segments", [])]
+        self.bases = list(doc.get("bases", []))
         self.epoch = int(epoch)
         self._dead = False
         self._write_manifest()
@@ -194,6 +231,17 @@ class FirehoseLogWriter:
                 f"writer (epoch {self.epoch}) fenced by manifest epoch "
                 f"{cur}: a newer leader owns log '{self.name}'")
 
+    def _sync_from_disk(self) -> None:
+        """Fence-check, then adopt the on-disk manifest as truth. Called at
+        segment start AND before every seal: a ``LogCompactor`` may have
+        rewritten the manifest (new bases, floor-trimmed segments) between
+        this writer's appends, and a stale cached view would resurrect
+        segments whose files were already unlinked."""
+        self._check_fence()
+        doc = _load_manifest_doc(self.dir, self.name)
+        self.segments = [Segment(**s) for s in doc.get("segments", [])]
+        self.bases = list(doc.get("bases", []))
+
     # -- append path --
     def append(self, tick: int, events: Optional[QueryEvents],
                tweets: Optional[TweetBatch]) -> None:
@@ -208,8 +256,7 @@ class FirehoseLogWriter:
             # ticks and rewrite the manifest without the old leader's
             # segments. One small json read per segment — which doubles as
             # the fencing read: a zombie is rejected before it buffers.
-            self._check_fence()
-            self.segments = _load_manifest(self.dir, self.name)
+            self._sync_from_disk()
         tick = int(tick)
         last = self.last_tick
         if last is not None and tick <= last:
@@ -223,16 +270,15 @@ class FirehoseLogWriter:
         if len(self._buf) >= self.ticks_per_segment:
             self.flush()
 
-    def _serialize_buffer(self) -> Tuple[bytes, str]:
+    def _serialize_buffer(self) -> Tuple[bytes, str, Dict]:
         """The segment wire format, shared with the failure injector (one
         definition — torn-tail tests must tear exactly what flush writes).
-        Returns (npz blob, final segment file name)."""
+        Returns (encoded blob, final segment file name, codec info)."""
         payload = {k: np.stack([r[k] for r in self._buf]) for k in _LANES}
-        bio = io.BytesIO()
-        np.savez(bio, **payload)
+        blob, info = encode_payload(payload, codec=self.codec)
         fname = _FMT.format(name=self.name, first=self._buf_ticks[0],
                             last=self._buf_ticks[-1])
-        return bio.getvalue(), fname
+        return blob, fname, info
 
     def flush(self) -> Optional[Segment]:
         """Seal the buffered ticks as one segment (atomic rename).
@@ -241,8 +287,8 @@ class FirehoseLogWriter:
         seal raises :class:`WriterFencedError` before any bytes land."""
         if not self._buf:
             return None
-        self._check_fence()
-        blob, fname = self._serialize_buffer()
+        self._sync_from_disk()
+        blob, fname, info = self._serialize_buffer()
         digest = hashlib.sha256(blob).hexdigest()
         fd, tmp = tempfile.mkstemp(dir=self.dir,
                                    prefix=f".tmp_{self.name}_seg_")
@@ -259,7 +305,8 @@ class FirehoseLogWriter:
                 pass
             raise
         seg = Segment(fname, self._buf_ticks[0], self._buf_ticks[-1],
-                      len(self._buf), digest)
+                      len(self._buf), digest, codec=info["codec"],
+                      raw_sha256=info.get("raw_sha256"))
         self.segments.append(seg)
         self._buf, self._buf_ticks = [], []
         self._write_manifest()
@@ -272,7 +319,8 @@ class FirehoseLogWriter:
     # -- manifest + retention --
     def _write_manifest(self) -> None:
         doc = {"name": self.name, "version": 1, "epoch": self.epoch,
-               "segments": [dataclasses.asdict(s) for s in self.segments]}
+               "segments": [dataclasses.asdict(s) for s in self.segments],
+               "bases": self.bases}
         fd, tmp = tempfile.mkstemp(dir=self.dir,
                                    prefix=f".tmp_{self.name}_man_")
         with os.fdopen(fd, "w") as f:
@@ -284,8 +332,29 @@ class FirehoseLogWriter:
     def _retain(self) -> None:
         if self.keep_segments <= 0 or len(self.segments) <= self.keep_segments:
             return
-        drop, self.segments = (self.segments[: -self.keep_segments],
-                               self.segments[-self.keep_segments:])
+        n_drop = len(self.segments) - self.keep_segments
+        floor = newest_base_tick(self.bases)
+        if floor is not None:
+            # Guard: with a compaction base advertised, replay starts at the
+            # base tick — a segment holding any tick >= the newest base is
+            # load-bearing for replay-from-base and must never be trimmed by
+            # blunt keep-N retention (segments are tick-ordered, so the
+            # droppable ones form a prefix). Warn-and-clamp rather than
+            # raise: the leader's append path must keep the hose moving.
+            safe = sum(1 for s in self.segments if s.last < floor)
+            if n_drop > safe:
+                warnings.warn(
+                    f"keep_segments={self.keep_segments} would trim "
+                    f"{n_drop - safe} segment(s) at/after the newest "
+                    f"compaction base (tick {floor}) of log "
+                    f"'{self.name}'; keeping them — rely on the "
+                    f"LogCompactor's floor-based retention instead",
+                    RuntimeWarning, stacklevel=2)
+                n_drop = safe
+        if n_drop <= 0:
+            return
+        drop, self.segments = (self.segments[:n_drop],
+                               self.segments[n_drop:])
         self._write_manifest()   # readers stop seeing them first
         for seg in drop:
             try:
@@ -310,7 +379,7 @@ def kill_writer_mid_segment(writer: FirehoseLogWriter,
     """
     fname = None
     if writer._buf:
-        blob, fname = writer._serialize_buffer()
+        blob, fname, _info = writer._serialize_buffer()
         n = max(1, int(len(blob) * torn_fraction))
         with open(os.path.join(writer.dir, fname), "wb") as f:
             f.write(blob[:n])
@@ -422,6 +491,11 @@ def log_epoch(directory: str, name: str = "firehose") -> int:
     return int(_load_manifest_doc(directory, name).get("epoch", 0))
 
 
+def log_bases(directory: str, name: str = "firehose") -> List[Dict]:
+    """The compaction bases advertised in the log manifest (tick order)."""
+    return list(_load_manifest_doc(directory, name).get("bases", []))
+
+
 class FirehoseLogReader:
     """Seek-by-tick reader with torn-tail truncation.
 
@@ -449,6 +523,7 @@ class FirehoseLogReader:
         self.io_retries = int(io_retries)
         self.io_backoff_s = float(io_backoff_s)
         self.segments: List[Segment] = []
+        self.bases: List[Dict] = []     # compaction bases (replay floors)
         self.n_truncated_segments = 0   # manifested but failed verification
         self.n_unmanifested_files = 0   # torn tail beyond the manifest
         self.n_io_retries = 0           # transient read errors absorbed
@@ -459,9 +534,12 @@ class FirehoseLogReader:
             # no log yet (e.g. a frontend starting before the backend's
             # writer): an empty log, not an error
             self.segments = []
+            self.bases = []
             self.n_truncated_segments = self.n_unmanifested_files = 0
             return self
-        manifested = _load_manifest(self.dir, self.name)
+        doc = _load_manifest_doc(self.dir, self.name)
+        self.bases = list(doc.get("bases", []))
+        manifested = [Segment(**s) for s in doc.get("segments", [])]
         good: List[Segment] = []
         for seg in manifested:
             path = os.path.join(self.dir, seg.file)
@@ -513,11 +591,22 @@ class FirehoseLogReader:
     def last_tick(self) -> Optional[int]:
         return self.segments[-1].last if self.segments else None
 
+    def floor_tick(self) -> Optional[int]:
+        """Newest advertised compaction base tick (replay floor), or None."""
+        return newest_base_tick(self.bases)
+
+    def newest_base(self, max_tick: Optional[int] = None) -> Optional[Dict]:
+        """The newest base entry whose tick is ≤ ``max_tick`` (None = any):
+        the cheapest legitimate replay start for a target at that tick."""
+        cands = [b for b in self.bases
+                 if max_tick is None or int(b["tick"]) <= int(max_tick)]
+        return max(cands, key=lambda b: int(b["tick"])) if cands else None
+
     # -- reads --
     def _load_segment(self, seg: Segment) -> LogChunk:
         blob = self._read_bytes_retry(os.path.join(self.dir, seg.file))
-        with np.load(io.BytesIO(blob)) as z:
-            return LogChunk(**{k: z[k] for k in _LANES})
+        payload, _info = decode_payload(blob)
+        return LogChunk(**{k: payload[k] for k in _LANES})
 
     def read_chunks(self, from_tick: int, chunk_ticks: Optional[int] = None,
                     upto_tick: Optional[int] = None) -> Iterator[LogChunk]:

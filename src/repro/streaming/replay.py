@@ -201,13 +201,42 @@ def _check_snapshot_layout(cfg: EngineConfig, ckpt: CheckpointManager,
             f"checkpoint and cannot be reinterpreted")
 
 
+def _maybe_restore_base(engine: SearchAssistanceEngine,
+                        reader: FirehoseLogReader,
+                        target_tick: Optional[int]) -> Optional[Dict]:
+    """Tiered restore: when the log manifest advertises a compaction base
+    NEWER than the engine's current offset (and ≤ the replay target), jump
+    the engine onto it before replaying. This is what keeps replay-from-
+    zero alive under compaction — the log below the floor may no longer
+    exist on disk — and even when it does, the base is the cheaper
+    legitimate start. A torn newest base transparently falls back to an
+    older retained one (``info['fell_back']``); no usable base at all
+    leaves the engine untouched (the pre-compaction gap rules apply)."""
+    if not reader.bases:
+        return None
+    from .compaction import restore_from_base   # lazy: avoids import cycle
+    head = reader.last_tick()
+    end = target_tick if target_tick is not None else (
+        head + 1 if head is not None else None)
+    res = restore_from_base(reader.dir, engine.name, engine.state,
+                            max_tick=end, log_name=reader.name)
+    if res is None:
+        return None
+    state, tick, info = res
+    if tick <= int(engine.state.tick):
+        return None         # own snapshot is fresher than any base
+    engine.state = state
+    return dict(info, base_tick=tick)
+
+
 def _restore_and_catch_up(cfg: EngineConfig, ckpt: CheckpointManager,
                           reader: FirehoseLogReader,
                           rcfg: ReplayConfig, name: str,
                           target_tick: Optional[int],
                           step: Optional[int]) -> tuple:
     """Restore one engine (fresh when no snapshot exists — cold engines
-    replay the whole retained log) and replay its tail from the shared,
+    replay the whole retained log, hopping onto the newest compaction base
+    first when one is advertised) and replay its tail from the shared,
     already-validated reader."""
     if step is None and ckpt.latest_step() is None:
         engine, log_tick = SearchAssistanceEngine(cfg, name), None
@@ -216,10 +245,13 @@ def _restore_and_catch_up(cfg: EngineConfig, ckpt: CheckpointManager,
         engine, log_tick = SearchAssistanceEngine.restore_from_snapshot(
             cfg, ckpt, step=step, name=name)
         assert int(engine.state.tick) == log_tick, "snapshot offset mismatch"
+    restore_info = dict(ckpt.last_restore)
+    base_info = _maybe_restore_base(engine, reader, target_tick)
     stats = CatchUpController(engine, reader, rcfg).catch_up(target_tick,
                                                              refresh=False)
     stats["restored_step"] = log_tick
-    stats["restore"] = dict(ckpt.last_restore)
+    stats["restore"] = restore_info
+    stats["base"] = base_info
     return engine, stats
 
 
@@ -236,17 +268,23 @@ def recover_engine(cfg: EngineConfig, ckpt: CheckpointManager, log_dir: str,
     specific snapshot (default: the newest). The restore walks the
     snapshot's delta chain; a torn/corrupt chain member silently falls
     back to the newest intact full snapshot (``stats["restore"]``) and the
-    replay tail grows to cover the difference.
+    replay tail grows to cover the difference. Under log compaction, a
+    base newer than the restored snapshot is hopped onto before replay
+    (``stats["base"]``) — mandatory when the log tail below the floor was
+    trimmed, cheaper even when it was not.
     """
     _check_snapshot_layout(cfg, ckpt, step)
     engine, log_tick = SearchAssistanceEngine.restore_from_snapshot(
         cfg, ckpt, step=step, name=name)
     assert int(engine.state.tick) == log_tick, "snapshot offset mismatch"
     reader = FirehoseLogReader(log_dir, name=log_name)
+    restore_info = dict(ckpt.last_restore)
+    base_info = _maybe_restore_base(engine, reader, target_tick)
     stats = CatchUpController(engine, reader, rcfg).catch_up(target_tick,
                                                              refresh=False)
     stats["restored_step"] = log_tick
-    stats["restore"] = dict(ckpt.last_restore)
+    stats["restore"] = restore_info
+    stats["base"] = base_info
     return engine, stats
 
 

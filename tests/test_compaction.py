@@ -1,0 +1,514 @@
+"""Compacted + compressed firehose storage tier (PR 8).
+
+Covers: the segment codec (XOR-delta fingerprint transform + compressed
+container, exact round-trip, legacy raw-npz decode, corrupt-container
+rejection), compressed checkpoint payloads (full AND delta chain),
+``LogCompactor`` folding the log tail into advertised base snapshots
+(bit-exact at EVERY compaction boundary, hash + region layouts, lazy
+decay), the tiered restore path (``restore_from_base`` /
+``recover_service`` hopping onto the newest base when the log tail below
+the floor is gone), crash-safety of the compaction cycle (crash before
+the manifest swap leaves inert orphans; crash after the swap leaves
+repair()-able debris), epoch fencing of a zombie compactor, the writer's
+keep-N retention guard (warn-and-clamp at the replay floor), and the
+failure injectors extended over the compaction path (``corrupt_base``
+fallback to an older base, ``flaky_io``/``slow_io`` on the compactor).
+"""
+import dataclasses
+import os
+import time
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.background import AssistanceService
+from repro.core.decay import DecayConfig
+from repro.core.engine import EngineConfig, SearchAssistanceEngine
+from repro.data.stream import StreamConfig, SyntheticStream
+from repro.distributed.fault_tolerance import CheckpointManager
+from repro.streaming import (CatchUpController, CodecError, CompactionConfig,
+                             FirehoseLogReader, FirehoseLogWriter,
+                             LogCompactor, ReplayConfig, WriterFencedError,
+                             corrupt_base, decode_payload, encode_payload,
+                             flaky_io, log_bases, recover_service,
+                             restore_from_base, slow_io, xor_delta_decode,
+                             xor_delta_encode)
+from repro.streaming.codec import (CODECS, FP_ZLIB, RAW, ZLIB,
+                                   lane_compression_report)
+from repro.streaming.compaction import base_manager
+from proptest import property_test
+
+
+def _cfg(policy="lazy", **kw):
+    base = dict(query_capacity=1 << 11, cooc_capacity=1 << 13,
+                session_capacity=1 << 10, session_window=3,
+                decay_every=4, prune_every=6, rank_every=5,
+                region_width=16, decay=DecayConfig(policy=policy))
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _bg_cfg(cfg: EngineConfig) -> EngineConfig:
+    slow = dataclasses.replace(cfg.decay,
+                               half_life_ticks=cfg.decay.half_life_ticks * 8,
+                               prune_threshold=cfg.decay.prune_threshold * 0.5)
+    return dataclasses.replace(cfg, decay=slow, rank_every=7,
+                               decay_every=6, prune_every=9)
+
+
+def _batches(n, seed=11, tweets=8):
+    stream = SyntheticStream(
+        StreamConfig(vocab_size=256, n_users=120, queries_per_tick=96,
+                     tweets_per_tick=tweets, tweet_words=3, tweet_grams=4),
+        seed=seed)
+    return [stream.gen_tick(t) for t in range(n)]
+
+
+def _assert_states_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"state leaf {i}")
+
+
+def _write_log(tmp_path, batches, ticks_per_segment=3, **kw):
+    logd = str(tmp_path / "log")
+    w = FirehoseLogWriter(logd, ticks_per_segment=ticks_per_segment, **kw)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+    w.close()
+    return logd
+
+
+# ---------------------------------------------------------------------------
+# Codec: exact transforms + container
+# ---------------------------------------------------------------------------
+
+@property_test(n_cases=12)
+def test_xor_delta_roundtrip_fuzz(rng):
+    dtypes = [np.uint64, np.uint32, np.int64, np.int32]
+    shapes = [(), (0,), (1,), (7,), (5, 3), (2, 3, 4)]
+    a = rng.integers(0, 1 << 31,
+                     size=shapes[rng.integers(len(shapes))]).astype(
+        dtypes[rng.integers(len(dtypes))])
+    enc = xor_delta_encode(a)
+    assert enc.shape == a.shape and enc.dtype == a.dtype
+    np.testing.assert_array_equal(xor_delta_decode(enc), a)
+    # repeated values become zero words (what the byte compressor eats)
+    rep = np.full(16, 12345, np.uint64)
+    assert (xor_delta_encode(rep)[1:] == 0).all()
+
+
+@property_test(n_cases=10)
+def test_codec_roundtrip_fuzz(rng):
+    R = int(rng.integers(0, 5))
+    B = int(rng.integers(0, 64))
+    G = int(rng.integers(0, 6))
+    # heavy repetition in the fp lanes, like real sessions/head queries
+    vocab = rng.integers(1, 1 << 62, size=max(B, 1), dtype=np.uint64)
+    payload = {
+        "ticks": rng.integers(0, 1000, size=R),
+        "sess_fp": vocab[rng.integers(0, max(B, 1), size=(R, B))],
+        "q_fp": vocab[rng.integers(0, max(B, 1), size=(R, B))],
+        "src": rng.integers(0, 4, size=(R, B)).astype(np.int32),
+        "q_valid": rng.random((R, B)) < 0.8,
+        "grams": vocab[rng.integers(0, max(B, 1), size=(R, 3, G))],
+        "t_valid": rng.random((R, 3)) < 0.5,
+    }
+    for codec in CODECS:
+        blob, info = encode_payload(payload, codec=codec)
+        assert info["codec"] == codec and info["nbytes"] == len(blob)
+        out, dinfo = decode_payload(blob)
+        assert dinfo["codec"] == codec
+        assert set(out) == set(payload)
+        for k in payload:
+            assert out[k].dtype == np.asarray(payload[k]).dtype, k
+            np.testing.assert_array_equal(out[k], payload[k], err_msg=k)
+
+
+def test_codec_edge_payloads():
+    # empty payload, 0-size lanes, and a 1-tick segment all round-trip
+    for payload in ({},
+                    {"sess_fp": np.zeros((0,), np.uint64)},
+                    {"q_fp": np.array([7], np.uint64),
+                     "src": np.array([1], np.int32)}):
+        blob, _ = encode_payload(payload)
+        out, _ = decode_payload(blob)
+        assert set(out) == set(payload)
+        for k in payload:
+            np.testing.assert_array_equal(out[k], payload[k])
+    # shape-change across segments is a non-issue: each blob is standalone
+    a = encode_payload({"q_fp": np.arange(4, dtype=np.uint64)})[0]
+    b = encode_payload({"q_fp": np.arange(9, dtype=np.uint64).reshape(3, 3)})[0]
+    assert decode_payload(a)[0]["q_fp"].shape == (4,)
+    assert decode_payload(b)[0]["q_fp"].shape == (3, 3)
+
+
+def test_codec_legacy_and_corrupt_blobs():
+    import io
+    payload = {"q_fp": np.arange(32, dtype=np.uint64)}
+    # a raw npz (pre-codec segment / snapshot) decodes transparently
+    bio = io.BytesIO()
+    np.savez(bio, **payload)
+    out, info = decode_payload(bio.getvalue())
+    assert info["codec"] == RAW
+    np.testing.assert_array_equal(out["q_fp"], payload["q_fp"])
+    # torn container, garbled body, and plain garbage all raise CodecError
+    blob, _ = encode_payload(payload, codec=FP_ZLIB)
+    with pytest.raises(CodecError):
+        decode_payload(blob[: len(blob) // 2])
+    tampered = bytearray(blob)
+    tampered[-3] ^= 0xFF
+    with pytest.raises(CodecError):
+        decode_payload(bytes(tampered))
+    with pytest.raises(CodecError):
+        decode_payload(b"garbage bytes, neither magic nor npz")
+    with pytest.raises(ValueError):
+        encode_payload(payload, codec="lz4-someday")
+
+
+def test_codec_compression_pays_on_fp_lanes():
+    rng = np.random.default_rng(0)
+    vocab = rng.integers(1, 1 << 62, size=32, dtype=np.uint64)
+    payload = {"sess_fp": vocab[rng.integers(0, 4, size=(8, 256))],
+               "q_fp": vocab[rng.integers(0, 32, size=(8, 256))]}
+    raw_n = len(encode_payload(payload, codec=RAW)[0])
+    zl_n = len(encode_payload(payload, codec=ZLIB)[0])
+    fp_n = len(encode_payload(payload, codec=FP_ZLIB)[0])
+    assert fp_n < raw_n and zl_n < raw_n
+    # the repetitive session lane is where the xor transform pays
+    rep = lane_compression_report(payload)
+    assert rep["sess_fp"]["ratio"] > 2.0
+    assert rep["sess_fp"]["raw_bytes"] == 8 * 256 * 8
+
+
+def test_log_segments_compressed_on_disk(tmp_path):
+    batches = _batches(9)
+
+    def disk_bytes(sub, codec):
+        d = str(tmp_path / sub)
+        w = FirehoseLogWriter(d, ticks_per_segment=3, codec=codec)
+        for t, (ev, tw) in enumerate(batches):
+            w.append(t, ev, tw)
+        w.close()
+        return d, sum(os.path.getsize(os.path.join(d, f))
+                      for f in os.listdir(d) if f.endswith(".npz"))
+
+    draw, n_raw = disk_bytes("raw", RAW)
+    dcmp, n_cmp = disk_bytes("cmp", FP_ZLIB)
+    assert n_cmp < n_raw, "compressed segments must beat raw npz on disk"
+    # manifest records the codec + the uncompressed digest; reads are exact
+    r = FirehoseLogReader(dcmp)
+    assert all(s.codec == FP_ZLIB and s.raw_sha256 for s in r.segments)
+    for (t, ev, tw), (oev, otw) in zip(r.read_ticks(0), batches):
+        np.testing.assert_array_equal(ev.q_fp, oev.q_fp)
+        np.testing.assert_array_equal(ev.sess_fp, oev.sess_fp)
+        np.testing.assert_array_equal(tw.grams, otw.grams)
+
+
+def test_checkpoint_codec_roundtrip_and_delta_chain(tmp_path):
+    """CheckpointManager payloads ride the same codec — full and delta
+    snapshots both — and restore bit-exact across the chain."""
+    cfg = _cfg()
+    batches = _batches(8)
+    eng = SearchAssistanceEngine(cfg)
+    ck = CheckpointManager(str(tmp_path / "zl"), full_interval=3)
+    ck_raw = CheckpointManager(str(tmp_path / "raw"), codec="raw")
+    for t, (ev, tw) in enumerate(batches):
+        eng.step(ev, tw)
+        if (t + 1) % 2 == 0:
+            eng.save_snapshot(ck)
+    eng.save_snapshot(ck_raw)
+    assert ck.manifest(6)["kind"] == "delta"    # 2=full, 4/6=deltas, 8=full
+    assert ck.manifest(6)["codec"] == "zlib" == ck.manifest(8)["codec"]
+    assert ck.manifest(6)["raw_sha256"] and ck.manifest(8)["raw_sha256"]
+    assert ck_raw.manifest(8)["codec"] == "raw"
+    for mgr in (ck, ck_raw):
+        restored, got = mgr.restore(SearchAssistanceEngine(cfg).state)
+        assert got == 8
+        _assert_states_equal(restored, eng.state)
+    # the delta chain walk decodes compressed members too (full@2 -> 4 -> 6)
+    _, got = ck.restore(SearchAssistanceEngine(cfg).state, 6)
+    assert got == 6 and ck.last_restore["chain_len"] == 3
+    assert not ck.last_restore["fell_back"]
+
+
+# ---------------------------------------------------------------------------
+# Compaction: fold is bit-exact at every boundary, disk stays bounded
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["hash", "region"])
+def test_compaction_bit_exact_at_every_boundary(tmp_path, layout):
+    """For EVERY segment-aligned floor: fold -> restore_from_base is
+    bit-for-bit the uninterrupted engine at that tick, and the final
+    replay-from-'zero' (base + tail) matches the live head state even
+    though the early segments are gone from disk."""
+    kw = dict(cooc_layout=layout, region_chain=8) if layout == "region" else {}
+    cfg = _cfg(**kw)
+    n = 18
+    batches = _batches(n)
+    logd = str(tmp_path / "log")
+    w = FirehoseLogWriter(logd, ticks_per_segment=3)
+    live = SearchAssistanceEngine(cfg, "rt")
+    ref_states = {}
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+        live.step(ev, tw)
+        if (t + 1) % 3 == 0:
+            ref_states[t + 1] = live.state   # jax arrays: immutable copies
+    w.close()
+
+    comp = LogCompactor(logd, {"rt": cfg},
+                        cfg=CompactionConfig(keep_bases=2, chunk_ticks=4))
+    template = SearchAssistanceEngine(cfg, "rt").state
+    for b in range(3, n + 1, 3):
+        stats = comp.compact(upto_tick=b)
+        assert not stats["noop"] and stats["floor"] == b
+        state, tick, info = restore_from_base(logd, "rt", template)
+        assert tick == b and not info["fell_back"]
+        _assert_states_equal(state, ref_states[b])
+    assert comp.n_compactions == n // 3
+
+    # retention swapped to [oldest retained base, head]: the early
+    # segments are gone from the manifest AND from disk
+    r = FirehoseLogReader(logd)
+    assert r.floor_tick() == n
+    assert [int(b["tick"]) for b in r.bases] == [n - 3, n]
+    assert r.first_tick() == n - 3
+    assert all(s.first >= n - 3 for s in r.segments)
+    on_disk = [f for f in os.listdir(logd) if f.endswith(".npz")]
+    assert len(on_disk) == len(r.segments)
+
+    # replay-from-zero through the compacted log: cold engine, no snapshot
+    cold = SearchAssistanceEngine(cfg, "rt")
+    state, tick, _ = restore_from_base(logd, "rt", cold.state)
+    cold.state = state
+    CatchUpController(cold, r, ReplayConfig(chunk_ticks=4)).catch_up()
+    _assert_states_equal(cold.state, live.state)
+
+
+def test_recover_service_replays_from_base_after_trim(tmp_path):
+    """Whole-stack cold recovery (no snapshots at all) over a log whose
+    tail below the floor was trimmed: both engines hop onto their bases
+    and the recovered stack is bit-exact vs an uninterrupted service."""
+    cfg = _cfg()
+    bg = _bg_cfg(cfg)
+    n = 20
+    batches = _batches(n)
+    logd = str(tmp_path / "log")
+    w = FirehoseLogWriter(logd, ticks_per_segment=4)
+    ref = AssistanceService(cfg, alpha=0.7, bg_cfg=bg)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+        ref.step(ev, tw)
+    w.close()
+    comp = LogCompactor(logd, {"rt": cfg, "bg": bg},
+                        cfg=CompactionConfig(keep_bases=2, chunk_ticks=4))
+    comp.compact(upto_tick=8)
+    comp.compact(upto_tick=16)
+    r = FirehoseLogReader(logd)
+    assert r.first_tick() == 8 and r.floor_tick() == 16
+
+    # a cold catch-up that ignored the bases would hit the trimmed gap
+    bare = SearchAssistanceEngine(cfg, "rt")
+    with pytest.raises(ValueError, match="gap"):
+        CatchUpController(bare, r, ReplayConfig(chunk_ticks=4)).catch_up()
+
+    rt_ck = CheckpointManager(str(tmp_path / "rt"))
+    bg_ck = CheckpointManager(str(tmp_path / "bg"))
+    svc, stats = recover_service(cfg, rt_ck, bg_ck, logd,
+                                 ReplayConfig(chunk_ticks=4), bg_cfg=bg,
+                                 alpha=0.7)
+    for part in ("rt", "bg"):
+        assert stats[part]["base"]["base_tick"] == 16
+        assert not stats[part]["base"]["fell_back"]
+        assert stats[part]["n_ticks"] == n - 16
+    _assert_states_equal(svc.rt.state, ref.rt.state)
+    _assert_states_equal(svc.bg.state, ref.bg.state)
+
+
+def test_corrupt_base_falls_back_to_previous_and_is_counted(tmp_path):
+    """A torn newest base degrades to the previous base + a longer replay
+    — exact, and counted on both the restore and the next fold."""
+    cfg = _cfg()
+    n = 18
+    batches = _batches(n)
+    live = SearchAssistanceEngine(cfg, "rt")
+    logd = str(tmp_path / "log")
+    w = FirehoseLogWriter(logd, ticks_per_segment=3)
+    for t, (ev, tw) in enumerate(batches):
+        w.append(t, ev, tw)
+        live.step(ev, tw)
+    w.close()
+    comp = LogCompactor(logd, {"rt": cfg},
+                        cfg=CompactionConfig(keep_bases=2, chunk_ticks=4))
+    comp.compact(upto_tick=6)
+    comp.compact(upto_tick=12)
+    assert [int(b["tick"]) for b in log_bases(logd)] == [6, 12]
+
+    step = corrupt_base(logd, "rt")          # tears the newest (tick 12)
+    assert step == 12
+    eng = SearchAssistanceEngine(cfg, "rt")
+    state, tick, info = restore_from_base(logd, "rt", eng.state)
+    assert tick == 6 and info["fell_back"] and info["requested"] == 12
+    eng.state = state
+    CatchUpController(eng, FirehoseLogReader(logd),
+                      ReplayConfig(chunk_ticks=4)).catch_up()
+    _assert_states_equal(eng.state, live.state)
+
+    # the next fold starts from the older intact base and counts it too
+    assert comp.n_base_fallbacks == 0
+    stats = comp.compact(upto_tick=18)
+    assert stats["engines"]["rt"]["fell_back"]
+    assert stats["engines"]["rt"]["start"] == 6
+    assert comp.n_base_fallbacks == 1
+    # the refold healed the tier: the new base restores clean
+    _, tick, info = restore_from_base(logd, "rt", eng.state)
+    assert tick == 18 and not info["fell_back"]
+
+
+# ---------------------------------------------------------------------------
+# Crash safety + fencing of the compaction cycle
+# ---------------------------------------------------------------------------
+
+def test_compaction_crash_before_swap_is_invisible(tmp_path):
+    """Crash after the fold but before the manifest swap: the floor does
+    not move, the orphan base snapshot is never advertised, and the retried
+    compaction lands cleanly on the same floor."""
+    cfg = _cfg()
+    logd = _write_log(tmp_path, _batches(9))
+    comp = LogCompactor(logd, {"rt": cfg},
+                        cfg=CompactionConfig(keep_bases=2, chunk_ticks=4))
+    man_before = log_bases(logd)
+    orig = comp._check_fence
+    calls = {"n": 0}
+
+    def crashy():
+        doc = orig()
+        calls["n"] += 1
+        if calls["n"] == 2:          # the re-validation right before the swap
+            raise OSError("injected crash between fold and manifest swap")
+        return doc
+
+    comp._check_fence = crashy
+    with pytest.raises(OSError):
+        comp.compact(upto_tick=6)
+    comp._check_fence = orig
+
+    # manifest untouched; the folded snapshot exists but is an inert orphan
+    assert log_bases(logd) == man_before == []
+    assert base_manager(logd, "rt").steps() == [6]
+    assert restore_from_base(logd, "rt",
+                             SearchAssistanceEngine(cfg).state) is None
+    # retry folds onto the same step and advertises it
+    stats = comp.compact(upto_tick=6)
+    assert stats["floor"] == 6 and not stats["noop"]
+    res = restore_from_base(logd, "rt", SearchAssistanceEngine(cfg).state)
+    assert res is not None and res[1] == 6
+
+
+def test_compaction_crash_after_swap_leaves_repairable_debris(tmp_path,
+                                                             monkeypatch):
+    """Crash after the manifest swap but before the old segments were
+    unlinked: readers count the unmanifested files, ``repair()`` removes
+    them, and replay-from-base is unaffected."""
+    cfg = _cfg()
+    logd = _write_log(tmp_path, _batches(12))
+    comp = LogCompactor(logd, {"rt": cfg},
+                        cfg=CompactionConfig(keep_bases=1, chunk_ticks=4))
+    with monkeypatch.context() as m:
+        def no_unlink(path):
+            raise OSError("injected crash during old-segment unlink")
+        m.setattr("repro.streaming.compaction.os.unlink", no_unlink)
+        stats = comp.compact(upto_tick=9)
+    assert stats["floor"] == 9 and stats["n_segments_dropped"] == 3
+    assert stats["n_unlinked"] == 0
+    r = FirehoseLogReader(logd)
+    assert r.first_tick() == 9                # manifest already swapped
+    assert r.n_unmanifested_files == 3        # debris counted, not trusted
+    assert r.repair() == 3
+    r.refresh()
+    assert r.n_unmanifested_files == 0
+    res = restore_from_base(logd, "rt", SearchAssistanceEngine(cfg).state)
+    assert res is not None and res[1] == 9
+
+
+def test_zombie_compactor_is_fenced(tmp_path):
+    """A deposed compactor can neither swap the manifest nor rewind the
+    epoch; re-adopting the current epoch revives it."""
+    cfg = _cfg()
+    logd = _write_log(tmp_path, _batches(9), epoch=0)
+    comp = LogCompactor(logd, {"rt": cfg}, epoch=0,
+                        cfg=CompactionConfig(keep_bases=2, chunk_ticks=4))
+    assert not comp.compact(upto_tick=3)["noop"]
+    bases_before = log_bases(logd)
+
+    # a new leader takes the log; the old compactor is now a zombie
+    FirehoseLogWriter(logd, ticks_per_segment=3).assume_epoch(2)
+    with pytest.raises(WriterFencedError):
+        comp.compact(upto_tick=6)
+    assert log_bases(logd) == bases_before    # swap never happened
+    with pytest.raises(WriterFencedError):
+        comp.compact(upto_tick=6)             # fenced stays fenced
+    with pytest.raises(WriterFencedError):
+        comp.assume_epoch(1)                  # cannot rewind the fence
+    stats = comp.assume_epoch(2).compact(upto_tick=6)
+    assert stats["floor"] == 6
+    assert [int(b["tick"]) for b in log_bases(logd)] == [3, 6]
+
+
+def test_writer_retention_guard_warns_and_keeps_floor_segments(tmp_path):
+    """Blunt keep-N retention must never trim a segment at/after the newest
+    advertised base: it warns and clamps, and replay-from-base survives."""
+    cfg = _cfg()
+    batches = _batches(14)
+    logd = _write_log(tmp_path, batches[:8], ticks_per_segment=2)
+    comp = LogCompactor(logd, {"rt": cfg},
+                        cfg=CompactionConfig(keep_bases=1, chunk_ticks=4))
+    comp.compact(upto_tick=6)                 # floor 6; log tail = [(6,7)]
+
+    w = FirehoseLogWriter(logd, ticks_per_segment=2, keep_segments=1)
+    with pytest.warns(RuntimeWarning, match="compaction base"):
+        for t in range(8, 12):
+            w.append(t, *batches[t])
+    w.close()
+    r = FirehoseLogReader(logd)
+    # nothing at/after the floor was trimmed, keep_segments notwithstanding
+    assert r.first_tick() == 6
+    assert [(s.first, s.last) for s in r.segments] == [(6, 7), (8, 9),
+                                                       (10, 11)]
+    live = SearchAssistanceEngine(cfg, "rt")
+    for t, (ev, tw) in enumerate(batches[:12]):
+        live.step(ev, tw)
+    eng = SearchAssistanceEngine(cfg, "rt")
+    state, tick, _ = restore_from_base(logd, "rt", eng.state)
+    eng.state = state
+    assert tick == 6
+    CatchUpController(eng, r, ReplayConfig(chunk_ticks=4)).catch_up()
+    _assert_states_equal(eng.state, live.state)
+
+
+def test_injectors_compose_with_compactor(tmp_path):
+    """The generic chaos injectors wrap the compaction cycle like any
+    other I/O path: a transient fault surfaces once and the retry
+    succeeds; a slow disk shows up in the measured pause."""
+    cfg = _cfg()
+    logd = _write_log(tmp_path, _batches(6))
+    comp = LogCompactor(logd, {"rt": cfg},
+                        cfg=CompactionConfig(keep_bases=2, chunk_ticks=4))
+    flaky_io(comp, ("compact",), n_failures=1)
+    with pytest.raises(OSError):
+        comp.compact(upto_tick=3)
+    assert log_bases(logd) == []              # the blip landed nothing
+    stats = comp.compact(upto_tick=3)         # retry succeeds
+    assert stats["floor"] == 3
+    comp._flaky_io_undo()
+    slow_io(comp, ("compact",), delay_s=0.05)
+    t0 = time.perf_counter()
+    stats = comp.compact(upto_tick=6)
+    assert stats["floor"] == 6
+    assert time.perf_counter() - t0 >= 0.05   # the slow disk is visible
+    comp._slow_io_undo()

@@ -25,8 +25,8 @@ from repro.core.engine import EngineConfig
 from repro.distributed.fleet import FleetConfig, ServingFleet
 from repro.streaming import (FirehoseLogReader, FirehoseLogWriter,
                              FirehoseWorkload, SpamSpec, SpikeSpec,
-                             WorkloadConfig, WriterFencedError, log_epoch,
-                             slow_io)
+                             WorkloadConfig, WriterFencedError, log_bases,
+                             log_epoch, slow_io)
 
 
 def _cfg(policy="lazy", **kw):
@@ -228,3 +228,82 @@ def test_starved_catchup_budget_keeps_replica_quarantined(tmp_path):
     # ... but it IS making (budgeted) progress behind the gate
     assert int(rep.service.rt.state.tick) > 4
     assert int(rep.service.rt.state.tick) < 15
+
+
+# ---------------------------------------------------------------------------
+# Compaction under chaos (PR 8 acceptance): the leader folds the log into
+# bases on cadence WHILE being killed mid-segment — restarted replicas can
+# only recover via base + tail (no snapshots at all), retention stays
+# bounded, and every replica ends bit-exact vs the uninterrupted reference.
+# ---------------------------------------------------------------------------
+
+def test_fleet_chaos_compaction_concurrent_with_leader_kill(tmp_path):
+    rt_cfg = _cfg()
+    # snapshot_every=0: no persisted snapshots anywhere — cold restarts
+    # MUST ride the compaction tier (the log below the floor is trimmed,
+    # so a from-zero replay without the base hop would hit a hard gap)
+    fcfg = FleetConfig(n_replicas=3, heartbeat_timeout=2, restart_after=1,
+                       snapshot_every=0, ticks_per_segment=4,
+                       compact_every=4, keep_bases=2)
+    fleet = ServingFleet(str(tmp_path), rt_cfg, fcfg)
+    wl = _wl(seed=3)                      # 50x flash crowd from t=6
+    ref = AssistanceService(rt_cfg, alpha=fcfg.alpha, bg_cfg=fleet.bg_cfg)
+    ss = fleet.serverset(timeout_s=0.5, max_retries=1)
+
+    probe = int(wl.fps[0])
+    n_answered = 0
+    torn = None
+    t, n_ticks = 0, 24
+    while t < n_ticks or (t < n_ticks + 16 and not _all_live(fleet)):
+        ev, tw = wl.gen_tick(t)
+        if t == 7:                        # kill the LEADER mid-segment —
+            assert fleet.leader() == 0    # right after the t=3 compaction
+            torn = fleet.kill(0, mid_segment=True)
+        fleet.offer_tick(t, ev, tw)
+        res = ss.request_info(probe)      # raises iff NO live replica answers
+        assert isinstance(res.suggestions, list)
+        n_answered += 1
+        ref.step(ev, tw)
+        t += 1
+
+    assert n_answered == t >= n_ticks
+    assert _all_live(fleet), fleet.metrics()
+    assert torn is not None               # the crash really tore a segment
+
+    m = fleet.metrics()
+    assert m["n_deaths_detected"] == 1 and m["n_recoveries"] == 1
+    # compaction kept running across the failover: cycles landed both at
+    # epoch 0 (t=3) and under the new leader's epoch
+    assert m["n_compactions"] >= 3
+    assert m["n_log_bases"] == fcfg.keep_bases
+    assert m["log_floor_tick"] >= 12
+    epochs = {int(b["epoch"]) for b in log_bases(fleet.log_dir)}
+    assert max(epochs) >= 1               # a post-failover leader compacted
+
+    # bounded retention: the log tail starts at the oldest retained base,
+    # everything below it left the manifest AND the disk — yet the tail is
+    # gap-free from there to the live head
+    fleet._replicas[fleet.leader()].writer.flush()
+    reader = FirehoseLogReader(fleet.log_dir)
+    retain_floor = min(int(b["tick"]) for b in reader.bases)
+    assert retain_floor > 0
+    assert reader.first_tick() == min(s.first for s in reader.segments)
+    assert reader.first_tick() <= retain_floor
+    assert all(s.last >= retain_floor for s in reader.segments)
+    ticks = [tk for tk, _, _ in reader.read_ticks(reader.first_tick())]
+    assert ticks == list(range(reader.first_tick(), t)), \
+        "compacted log tail must stay gap-free up to the head"
+
+    # the restarted ex-leader really recovered through the base tier
+    rec = fleet._replicas[0].last_recovery
+    assert rec["rt"]["base"] is not None and rec["bg"]["base"] is not None
+    assert rec["rt"]["base"]["base_tick"] > 0
+    assert rec["rt"]["restored_step"] is None     # no snapshot existed
+
+    # ... and every replica is bit-exact vs the uninterrupted reference
+    states = fleet.states()
+    assert set(states) == {0, 1, 2}
+    for rid, (rt_state, bg_state) in states.items():
+        _assert_states_equal(ref.rt.state, rt_state)
+        _assert_states_equal(ref.bg.state, bg_state)
+    assert fleet._replicas[0].n_restarts == 1
