@@ -1,0 +1,121 @@
+"""§Autotune — the measured plan vs the blind dispatch, per hot path.
+
+Two claims, both asserted (a regression fails the bench, not just a row):
+
+* **Tuned never loses.** For every hot-path op the tuner picks the
+  measured winner of {kernel, jnp} (+ tile shape for ``score_gate``), so
+  the tuned row must be >= 0.95x the best candidate — by construction the
+  ratio is 1.0; the assert guards the plumbing (a plan that picks the
+  loser, or a dispatch site that ignores the plan, trips it).
+* **The large-batch cliff is dead.** Ingesting a 16384-event tick through
+  one monolithic dispatch collapses throughput (the pre-PR behaviour,
+  reproduced here with ``ingest_quantum=0``). Under quantum slicing + the
+  tuned dispatch-fusion width, batch-16384 events/s must be within 25% of
+  the batch-4096 peak.
+
+Rows land in ``results/BENCH_autotune.json`` via the harness ``--json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.core.engine import EngineConfig, SearchAssistanceEngine
+from repro.data.stream import StreamConfig, SyntheticStream
+from repro.launch.autotune import measure_plan
+
+from .common import Row
+
+# one shape class for the whole bench: big enough that kernel-vs-jnp and
+# the batch cliff are both real, small enough for a CI smoke
+_CFG = EngineConfig(query_capacity=1 << 14, cooc_capacity=1 << 16,
+                    session_capacity=1 << 14, decay_every=0, rank_every=0,
+                    ingest_quantum=4096)
+_CLIFF_ITERS = 3
+
+
+def _tuned_key(plan, op: str) -> str:
+    if plan.uses_kernel(op):
+        return (f"{op}:kernel:blk{plan.score_block_rows}"
+                if op == "score_gate" else f"{op}:kernel")
+    return f"{op}:jnp"
+
+
+def _op_rows(plan, timings: Dict[str, Optional[float]]) -> List[Row]:
+    rows: List[Row] = []
+    rows.append(("autotune_plan", 0.0,
+                 " ".join(f"{k}={v}" for k, v in plan.variants().items())))
+    for op in ("score_gate", "bucket_topk", "region_rank", "chain_find",
+               "decay_prune"):
+        cands = {k: v for k, v in timings.items()
+                 if k.startswith(op + ":") and v is not None}
+        if not cands:
+            continue
+        t_tuned = cands[_tuned_key(plan, op)]
+        best = min(cands.values())
+        ratio = best / t_tuned
+        kern = min((v for k, v in cands.items() if ":kernel" in k),
+                   default=float("nan"))
+        t_jnp = cands.get(f"{op}:jnp", float("nan"))
+        rows.append((f"autotune_{op}", t_tuned,
+                     f"tuned={'kernel' if plan.uses_kernel(op) else 'jnp'} "
+                     f"kernel={kern:.1f}us jnp={t_jnp:.1f}us "
+                     f"vs_best={ratio:.3f} speedup_vs_jnp={t_jnp/t_tuned:.2f}"))
+        assert ratio >= 0.95, (
+            f"{op}: tuned variant {t_tuned:.1f}us is worse than best "
+            f"candidate {best:.1f}us (ratio {ratio:.3f} < 0.95)")
+    fuse = {k: v for k, v in timings.items() if k.startswith("ingest_fuse:")}
+    if fuse:
+        rows.append(("autotune_ingest_fuse", min(fuse.values()),
+                     " ".join(f"{k.split(':')[1]}q={v:.0f}us"
+                              for k, v in sorted(fuse.items()))
+                     + f" -> chunk={plan.ingest_chunk}"))
+    return rows
+
+
+def _throughput(cfg: EngineConfig, batch: int, seed: int = 0) -> float:
+    """Steady-state engine ``step()`` ingest throughput, events/s."""
+    eng = SearchAssistanceEngine(cfg)
+    stream = SyntheticStream(StreamConfig(vocab_size=4096,
+                                          queries_per_tick=batch,
+                                          tweets_per_tick=0), seed=seed)
+    times = []
+    for t in range(2 + _CLIFF_ITERS):       # 2 warm ticks absorb compiles
+        ev, _ = stream.gen_tick(t)
+        t0 = time.perf_counter()
+        eng.step(ev)
+        jax.block_until_ready(eng.state)
+        if t >= 2:
+            times.append(time.perf_counter() - t0)
+    times.sort()
+    return batch / times[len(times) // 2]
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    plan, timings = measure_plan(_CFG, repeats=2)
+    rows += _op_rows(plan, timings)
+
+    tuned = dataclasses.replace(_CFG, plan=plan)
+    ev_s_4096 = _throughput(tuned, 4096)
+    # pre-PR behaviour: the whole tick in ONE dispatch (no quantum cuts)
+    mono = dataclasses.replace(_CFG, ingest_quantum=0)
+    ev_s_mono = _throughput(mono, 16384)
+    ev_s_tuned = _throughput(tuned, 16384)
+    frac = ev_s_tuned / ev_s_4096
+    rows.append(("autotune_ingest_4096", 4096 / ev_s_4096 * 1e6,
+                 f"{ev_s_4096:.0f} ev/s (peak reference)"))
+    rows.append(("autotune_ingest_16384_monolithic",
+                 16384 / ev_s_mono * 1e6,
+                 f"{ev_s_mono:.0f} ev/s (the cliff: one dispatch)"))
+    rows.append(("autotune_ingest_16384_tuned", 16384 / ev_s_tuned * 1e6,
+                 f"{ev_s_tuned:.0f} ev/s = {frac:.2f}x of 4096 peak "
+                 f"(chunk={plan.ingest_chunk})"))
+    assert frac >= 0.75, (
+        f"batch-16384 tuned throughput {ev_s_tuned:.0f} ev/s is "
+        f"{frac:.2f}x of the batch-4096 peak {ev_s_4096:.0f} ev/s "
+        "(must be within 25%)")
+    return rows

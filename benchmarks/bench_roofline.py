@@ -1,9 +1,19 @@
-"""§Roofline summary: reads the dry-run sweep output (results/*.json) and
-prints the per-cell three-term roofline table rows. The dry-run itself is
-run separately (512-device flag must be set before jax init):
+"""§Roofline summary.
 
-  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \\
-      --out results/dryrun_baseline.json
+Two row families:
+
+* dry-run cells: reads the sweep output (results/*.json) and prints the
+  per-cell three-term roofline rows. The dry-run itself is run separately
+  (512-device flag must be set before jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \\
+        --out results/dryrun_baseline.json
+
+* ``roofline_hot:*``: distance-to-roofline for every TUNED engine hot
+  path — the autotuner measures each op under its winning variant and
+  ``roofline.hot_path_roofline`` turns the analytic bytes/flops model
+  (``autotune.hot_path_traffic``) into a fraction-of-memory-ceiling row.
+  Always emitted (no dry-run files needed), both store layouts.
 """
 from __future__ import annotations
 
@@ -19,8 +29,38 @@ RESULTS = [
 ]
 
 
-def run() -> List[Row]:
+def _hot_path_rows() -> List[Row]:
+    import dataclasses
+
+    from repro.core.engine import EngineConfig
+    from repro.launch.autotune import hot_path_traffic, measure_plan
+    from repro.launch.roofline import hot_path_roofline
+
+    from .bench_autotune import _tuned_key
+
     rows: List[Row] = []
+    base = EngineConfig(query_capacity=1 << 13, cooc_capacity=1 << 15,
+                        session_capacity=1 << 13)
+    for layout in ("hash", "region"):
+        cfg = dataclasses.replace(base, cooc_layout=layout)
+        plan, timings = measure_plan(cfg, repeats=2, tune_ingest=False)
+        for op, tf in hot_path_traffic(cfg).items():
+            t_us = timings.get(_tuned_key(plan, op))
+            if t_us is None:
+                continue
+            r = hot_path_roofline(op, bytes_touched=tf["bytes"],
+                                  flops=tf["flops"], measured_us=t_us)
+            rows.append((
+                f"roofline_hot:{layout}:{op}", t_us,
+                f"variant={'kernel' if plan.uses_kernel(op) else 'jnp'} "
+                f"bound={r['bottleneck']} "
+                f"frac={r['roofline_fraction']:.4f} "
+                f"tM={r['t_memory_s']:.2e} tC={r['t_compute_s']:.2e}"))
+    return rows
+
+
+def run() -> List[Row]:
+    rows: List[Row] = _hot_path_rows()
     for tag, path in RESULTS:
         if not os.path.exists(path):
             rows.append((f"roofline_{tag}", 0.0, f"missing {path} (run dryrun)"))

@@ -19,10 +19,13 @@ import traceback
 
 BENCHES = ["churn", "ingest", "latency", "ranking", "recovery", "spelling",
            "store", "memory_coverage", "engine_perf", "roofline", "overload",
-           "fleet", "compaction"]
+           "fleet", "compaction", "autotune"]
 
 
 def main() -> None:
+    # several benches (roofline, autotune cache snapshots) read/write
+    # results/ relative to the repo root — make sure it exists up front
+    os.makedirs("results", exist_ok=True)
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as JSON: name -> "

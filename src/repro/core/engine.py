@@ -57,6 +57,7 @@ from . import ranking, stores
 from .decay import (DecayConfig, prune_sweep, region_decay_sweep,
                     region_prune_sweep, sweep_decay_prune)
 from .hashing import combine_fp_device, split_fp
+from .plan import TunedPlan, default_region_width
 from .ranking import RankConfig, SuggestionTable
 from .stores import HashTable, RegionTable, SessionTable
 
@@ -90,14 +91,32 @@ class EngineConfig:
     session_ttl: int = 360
     decay: DecayConfig = DecayConfig()
     rank: RankConfig = RankConfig()
-    use_kernel: bool = False           # fused Pallas decay/prune + scoring
+    # Legacy kernel override: None (default) defers each hot path to the
+    # tuned ``plan`` below; an explicit bool forces every store/decay hot
+    # path to its kernel (True) or jnp (False) variant regardless of plan.
+    use_kernel: Optional[bool] = None
+    # The measured per-hot-path dispatch plan (``core/plan.TunedPlan``,
+    # built by ``launch/autotune``). None = all-jnp reference dispatch.
+    # Rides snapshot meta so a recovered engine keeps its tuning. Plans are
+    # result-invariant: any two plans produce bit-exact engine states.
+    plan: Optional[TunedPlan] = None
+    # The semantic ingest slice: step()/ingest_many ALWAYS break a query
+    # micro-batch larger than this into sequential quantum-sized slices
+    # (plan-INDEPENDENT, so tuning cannot change results; the plan's
+    # ``ingest_chunk`` only fuses quantum slices into one dispatch). This
+    # is the large-batch-cliff fix: insert_accumulate's conflict-resolve
+    # rounds degrade superlinearly past ~4k events. 0 disables slicing.
+    ingest_quantum: int = 4096
     # cooccurrence-store layout: "hash" = open addressing keyed by the pair
     # fingerprint; "region" = source-major region layout (fixed-width
     # per-source regions, chain directory indexed by qstore slot — see
     # stores.RegionTable). The region layout makes every ranking bucket a
     # pure reshape and drops the four endpoint lanes from the store.
     cooc_layout: str = "hash"
-    region_width: int = 32             # pairs per region (128 on real TPUs)
+    # pairs per region; None derives from cooc capacity via
+    # ``plan.default_region_width`` ({2^16: 16, 2^18: 32, 2^20: 64} — read
+    # it through ``region_w``). Real-TPU deployments want 128.
+    region_width: Optional[int] = None
     region_chain: int = 8              # max spill-chain regions per source
 
     def __post_init__(self):
@@ -105,6 +124,12 @@ class EngineConfig:
             raise ValueError(
                 f"unknown cooc_layout {self.cooc_layout!r} "
                 f"(expected 'hash' or 'region')")
+        # the ranking hot paths read the plan off RankConfig; attach it so
+        # callers only ever set EngineConfig.plan. An explicitly planned
+        # RankConfig wins (it was set on purpose).
+        if self.plan is not None and self.rank.plan is None:
+            object.__setattr__(
+                self, "rank", dataclasses.replace(self.rank, plan=self.plan))
 
     @property
     def lazy_decay(self) -> bool:
@@ -113,6 +138,22 @@ class EngineConfig:
     @property
     def region_cooc(self) -> bool:
         return self.cooc_layout == "region"
+
+    @property
+    def region_w(self) -> int:
+        """Effective region width (explicit override or capacity-derived)."""
+        if self.region_width is not None:
+            return self.region_width
+        return default_region_width(self.cooc_capacity)
+
+    def kernel_on(self, op: str) -> bool:
+        """Kernel-vs-jnp resolution for one hot path: the legacy
+        ``use_kernel`` bool wins; else the tuned plan; else jnp."""
+        if self.use_kernel is not None:
+            return self.use_kernel
+        if self.plan is not None:
+            return self.plan.uses_kernel(op)
+        return False
 
 
 class EngineState(NamedTuple):
@@ -128,7 +169,7 @@ def make_cooc_store(cfg: EngineConfig, capacity: Optional[int] = None):
     cap = capacity if capacity is not None else cfg.cooc_capacity
     if cfg.region_cooc:
         return stores.make_region_table(
-            cap, cfg.region_width, cfg.query_capacity, cfg.region_chain, {
+            cap, cfg.region_w, cfg.query_capacity, cfg.region_chain, {
                 "weight": jnp.float32, "count": jnp.float32,
                 "last_tick": jnp.int32})
     return stores.make_table(cap, {
@@ -170,7 +211,7 @@ def cooc_insert_pairs(cooc, qstore: HashTable, src_hi, src_lo, dst_hi,
             cooc, qstore, src_hi, src_lo, dst_hi, dst_lo,
             {"weight": w_pair, "count": count, "last_tick": lt},
             valid, modes=_R_MODES, probe_rounds=cfg.probe_rounds,
-            use_kernel=cfg.use_kernel, **dkw)
+            use_kernel=cfg.use_kernel, plan=cfg.plan, **dkw)
     p_hi, p_lo = combine_fp_device(src_hi, src_lo, dst_hi, dst_lo)
     return stores.insert_accumulate(
         cooc, p_hi, p_lo,
@@ -214,6 +255,33 @@ def ingest_queries(
                              state.tick, cfg, dkw)
 
     return EngineState(qstore, cooc, sessions, state.tick)
+
+
+def quantum_slices(B: int, quantum: int) -> List[Tuple[int, int]]:
+    """THE statement of where an oversized query micro-batch is cut.
+
+    ``EngineConfig.ingest_quantum`` is semantic: slice boundaries depend
+    only on (B, quantum) — never on the tuned plan — so live ``step()``,
+    the replay scan and every plan produce identical ingest sequences.
+    """
+    if quantum <= 0 or B <= quantum:
+        return [(0, B)]
+    return [(off, min(off + quantum, B)) for off in range(0, B, quantum)]
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ingest_queries_stack(state: EngineState, sess_hi, sess_lo, q_hi, q_lo,
+                         src, valid, *, cfg: EngineConfig) -> EngineState:
+    """K same-tick quantum slices (leading dim K) in ONE device dispatch:
+    a ``lax.scan`` whose body is exactly :func:`ingest_queries`, so the
+    result is bit-identical to K separate dispatches — the plan's
+    ``ingest_chunk`` buys dispatch amortization only."""
+    def body(st, xs):
+        return ingest_queries(st, *xs, cfg=cfg), None
+
+    state, _ = jax.lax.scan(body, state,
+                            (sess_hi, sess_lo, q_hi, q_lo, src, valid))
+    return state
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -264,7 +332,7 @@ def decay_cycle(state: EngineState, dticks: jax.Array, *, cfg: EngineConfig
     faithful) eager "sweep" policy only."""
     qstore, q_live, q_tot = sweep_decay_prune(
         state.qstore, dticks, cfg=cfg.decay, weight_lanes=("weight",),
-        use_kernel=cfg.use_kernel)
+        use_kernel=cfg.kernel_on("decay_prune"))
     stats: Dict[str, jax.Array] = {"q_live": q_live, "q_total_w": q_tot}
     if cfg.region_cooc:
         # region maintenance validates chains against the post-sweep
@@ -276,7 +344,7 @@ def decay_cycle(state: EngineState, dticks: jax.Array, *, cfg: EngineConfig
     else:
         cooc, c_live, c_tot = sweep_decay_prune(
             state.cooc, dticks, cfg=cfg.decay, weight_lanes=("weight",),
-            use_kernel=cfg.use_kernel)
+            use_kernel=cfg.kernel_on("decay_prune"))
     sessions = stores.evict_sessions(state.sessions, state.tick, cfg.session_ttl)
     stats.update({"c_live": c_live, "c_total_w": c_tot})
     return EngineState(qstore, cooc, sessions, state.tick), stats
@@ -447,8 +515,13 @@ def ingest_many(state: EngineState, stack: TickStack, *, cfg: EngineConfig
 
     def body(st: EngineState, xs: TickStack):
         if have_q:
-            st = ingest_queries(st, xs.sess_hi, xs.sess_lo, xs.q_hi, xs.q_lo,
-                                xs.src, xs.q_valid, cfg=cfg)
+            # oversized tick batches cut at the SAME quantum boundaries as
+            # live step() (statically unrolled inside the one scan dispatch)
+            for lo, hi in quantum_slices(stack.q_hi.shape[1],
+                                         cfg.ingest_quantum):
+                st = ingest_queries(st, xs.sess_hi[lo:hi], xs.sess_lo[lo:hi],
+                                    xs.q_hi[lo:hi], xs.q_lo[lo:hi],
+                                    xs.src[lo:hi], xs.q_valid[lo:hi], cfg=cfg)
         if have_t:
             st = ingest_tweets(st, xs.g_hi, xs.g_lo, xs.t_valid, cfg=cfg)
         st = tick_maintenance(st, cfg)
@@ -490,11 +563,11 @@ class SearchAssistanceEngine:
         if query_events is not None:
             s_hi, s_lo = split_fp(query_events.sess_fp)
             q_hi, q_lo = split_fp(query_events.q_fp)
-            self.state = ingest_queries(
-                self.state, jnp.asarray(s_hi), jnp.asarray(s_lo),
+            self._ingest_query_batch(
+                jnp.asarray(s_hi), jnp.asarray(s_lo),
                 jnp.asarray(q_hi), jnp.asarray(q_lo),
                 jnp.asarray(query_events.src, jnp.int32),
-                jnp.asarray(query_events.valid), cfg=self.cfg)
+                jnp.asarray(query_events.valid))
         if tweets is not None:
             g_hi, g_lo = split_fp(tweets.grams)
             self.state = ingest_tweets(
@@ -522,6 +595,37 @@ class SearchAssistanceEngine:
             out = self.run_rank_cycle()
         self.state = advance_tick(self.state)
         return out
+
+    def _ingest_query_batch(self, *arrs) -> None:
+        """Live side of the large-batch-cliff fix: cut the batch at the
+        shared :func:`quantum_slices` boundaries, then fuse up to
+        ``plan.ingest_chunk // quantum`` full slices into one dispatch via
+        :func:`ingest_queries_stack`. The cut points are plan-independent;
+        the fusion width changes dispatch count only, so any two plans
+        leave bit-identical state."""
+        cfg = self.cfg
+        Q = cfg.ingest_quantum
+        cuts = quantum_slices(arrs[2].shape[0], Q)
+        if len(cuts) == 1:
+            self.state = ingest_queries(self.state, *arrs, cfg=cfg)
+            return
+        chunk = cfg.plan.ingest_chunk if cfg.plan is not None else 0
+        k = max(1, chunk // Q) if chunk > 0 else 1
+        i = 0
+        while i < len(cuts):
+            lo, hi = cuts[i]
+            n = 1
+            if k > 1 and hi - lo == Q:
+                while (i + n < len(cuts) and n < k
+                       and cuts[i + n][1] - cuts[i + n][0] == Q):
+                    n += 1
+            if n > 1:
+                sub = tuple(a[lo:lo + n * Q].reshape(n, Q) for a in arrs)
+                self.state = ingest_queries_stack(self.state, *sub, cfg=cfg)
+            else:
+                self.state = ingest_queries(
+                    self.state, *(a[lo:hi] for a in arrs), cfg=cfg)
+            i += n
 
     def run_rank_cycle(self) -> Dict:
         dkw = (dict(decay_cfg=self.cfg.decay, now=self.state.tick)
@@ -571,6 +675,10 @@ class SearchAssistanceEngine:
         tick = int(self.state.tick)
         meta = {"log_tick": tick, "engine": self.name,
                 "layout": self.cfg.cooc_layout}
+        if self.cfg.plan is not None:
+            # the tuned plan rides the snapshot so a recovered engine keeps
+            # its tuning without re-benchmarking (restore re-attaches it)
+            meta["plan"] = self.cfg.plan.to_json()
         if self.last_maintenance:
             meta["maintenance"] = self.last_maintenance
         if extra_meta:
@@ -594,6 +702,11 @@ class SearchAssistanceEngine:
         eng = cls(cfg, name)
         eng.state, step = ckpt.restore(eng.state, step)
         meta = ckpt.manifest(step).get("meta", {})
+        if cfg.plan is None and meta.get("plan"):
+            # re-attach the tuning that rode the snapshot (an explicitly
+            # configured plan wins — the caller may have re-tuned)
+            eng.cfg = dataclasses.replace(
+                cfg, plan=TunedPlan.from_json(meta["plan"]))
         return eng, int(meta.get("log_tick", step))
 
     def state_arrays(self) -> Dict[str, np.ndarray]:

@@ -63,7 +63,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +71,7 @@ import numpy as np
 
 from . import stores
 from .decay import lazy_decayed
+from .plan import TunedPlan
 from .stores import HashTable, RegionTable
 
 
@@ -86,7 +87,13 @@ class RankConfig:
     min_pair_weight: float = 0.25
     min_src_weight: float = 0.5
     min_pair_count: float = 1.0
-    use_kernel: bool = False   # route score/gate + selection through Pallas
+    # Legacy kernel override (None = defer to ``plan``): an explicit bool
+    # forces score/gate + selection through Pallas (True) or jnp (False).
+    use_kernel: Optional[bool] = None
+    # Measured dispatch plan — normally attached from ``EngineConfig.plan``
+    # (its ``__post_init__`` copies it here); standalone ranking callers
+    # can set it directly.
+    plan: Optional[TunedPlan] = None
     # lexsort path only: compact gated rows by argsort before the 3-key
     # lexsort; cuts the globally lowest-scoring pairs on overflow (counted).
     # >= 1.0 disables compaction entirely.
@@ -112,6 +119,15 @@ class RankConfig:
     def source_cap(self, qstore_capacity: int) -> int:
         return (self.max_sources if self.max_sources > 0
                 else qstore_capacity)
+
+    def kernel_on(self, op: str) -> bool:
+        """Kernel-vs-jnp resolution for one ranking hot path: the legacy
+        ``use_kernel`` bool wins; else the tuned plan; else jnp."""
+        if self.use_kernel is not None:
+            return self.use_kernel
+        if self.plan is not None:
+            return self.plan.uses_kernel(op)
+        return False
 
 
 def _xlogx(x):
@@ -199,7 +215,7 @@ def _score_and_gate(cooc: HashTable, qstore: HashTable, cfg: RankConfig,
     total_c = jnp.sum(qstore.lanes["count"])
 
     base_ok = live & src_found & dst_found
-    if cfg.use_kernel:
+    if cfg.kernel_on("score_gate"):
         from ..kernels import ops as kops
         score = kops.score_gate(
             w_ab, c_ab, src_vals["weight"], dst_vals["weight"],
@@ -208,7 +224,9 @@ def _score_and_gate(cooc: HashTable, qstore: HashTable, cfg: RankConfig,
             min_pair_weight=cfg.min_pair_weight,
             min_src_weight=cfg.min_src_weight,
             min_pair_count=cfg.min_pair_count,
-            decay_cfg=decay_cfg, last_tick=cooc.lanes["last_tick"], now=now)
+            decay_cfg=decay_cfg, last_tick=cooc.lanes["last_tick"], now=now,
+            block_rows=(cfg.plan.score_block_rows
+                        if cfg.plan is not None else None))
         ok = score > -jnp.inf
     else:
         if decay_cfg is not None:
@@ -310,7 +328,7 @@ def ranking_cycle(
     cell_orig = sidx[cell_c]
     grid = jnp.where(in_run & (cell_orig < C),
                      score[jnp.clip(cell_orig, 0, C - 1)], -jnp.inf)
-    if cfg.use_kernel:
+    if cfg.kernel_on("bucket_topk"):
         from ..kernels import ops as kops
         vals, args = kops.bucket_topk(grid, K)
     else:
@@ -485,7 +503,7 @@ def ranking_cycle_region(
     # min(K, W) winners and the chain merge below restores K (a source's
     # top-k beyond W can only come from its spill regions).
     K1 = min(K, W)
-    if cfg.use_kernel:
+    if cfg.kernel_on("region_rank"):
         from ..kernels import ops as kops
         vals, args, npass_r = kops.region_rank(
             w_ab2, c_ab2, w_a_b, w_b2, c_a_b, c_b2, base_ok, total_w,

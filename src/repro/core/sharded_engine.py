@@ -240,14 +240,14 @@ def _tick_maintenance(state: ShardedState, base: EngineConfig
     def decay_fn(s: ShardedState) -> ShardedState:
         qstore, _, _ = sweep_decay_prune(
             s.qstore, jnp.int32(base.decay_every), cfg=base.decay,
-            use_kernel=base.use_kernel)
+            use_kernel=base.kernel_on("decay_prune"))
         if base.region_cooc:
             cooc, _, _, _ = region_decay_sweep(
                 s.cooc, qstore, jnp.int32(base.decay_every), cfg=base.decay)
         else:
             cooc, _, _ = sweep_decay_prune(
                 s.cooc, jnp.int32(base.decay_every), cfg=base.decay,
-                use_kernel=base.use_kernel)
+                use_kernel=base.kernel_on("decay_prune"))
         return evict_only(s._replace(qstore=qstore, cooc=cooc))
 
     return maintenance_cadence(state, state.tick, base,
@@ -333,14 +333,14 @@ def make_sharded_decay(cfg: ShardedConfig, mesh: Mesh, axis: str = "shard"):
         else:
             qstore, _, _ = sweep_decay_prune(
                 state.qstore, dticks, cfg=base.decay,
-                use_kernel=base.use_kernel)
+                use_kernel=base.kernel_on("decay_prune"))
             if base.region_cooc:
                 cooc, _, _, _ = region_decay_sweep(
                     state.cooc, qstore, dticks, cfg=base.decay)
             else:
                 cooc, _, _ = sweep_decay_prune(
                     state.cooc, dticks, cfg=base.decay,
-                    use_kernel=base.use_kernel)
+                    use_kernel=base.kernel_on("decay_prune"))
         sessions = stores.evict_sessions(state.sessions, state.tick,
                                          base.session_ttl)
         return ShardedState(qstore, cooc, sessions, state.tick + 0,
@@ -615,7 +615,7 @@ def _fill_cooc_shard(cfg: ShardedConfig, new_n: int, qstore: HashTable,
         tab = stores.region_insert_accumulate(
             tab, qstore, s_hi, s_lo, d_hi, d_lo, upd, valid,
             modes=_SET_PAIR_MODES, probe_rounds=base.probe_rounds,
-            use_kernel=base.use_kernel)
+            use_kernel=base.use_kernel, plan=base.plan)
     else:
         p_hi, p_lo = combine_fp_device(s_hi, s_lo, d_hi, d_lo)
         upd.update({"src_hi": s_hi, "src_lo": s_lo,
@@ -674,7 +674,7 @@ def reshard_sharded_state(cfg: ShardedConfig, state: ShardedState,
     assert new_n >= 1 and new_n & (new_n - 1) == 0, \
         f"new_n must be a power of two, got {new_n}"
     assert base.cooc_capacity % new_n == 0 \
-        and base.cooc_capacity // new_n >= base.region_width, \
+        and base.cooc_capacity // new_n >= base.region_w, \
         "cooc capacity does not divide into new_n region-layout shards"
     assert base.session_capacity % new_n == 0, \
         "session capacity not divisible by new_n"

@@ -58,7 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -871,7 +871,8 @@ def _chain_find_jnp(khi_r, klo_r, regs, dst_hi, dst_lo, active):
 
 
 @partial(jax.jit, static_argnames=("modes", "probe_rounds", "decay_cfg",
-                                   "decay_lanes", "tick_lane", "use_kernel"))
+                                   "decay_lanes", "tick_lane", "use_kernel",
+                                   "plan"))
 def region_insert_accumulate(
     table: RegionTable,
     qstore: HashTable,
@@ -888,7 +889,8 @@ def region_insert_accumulate(
     decay_lanes: Tuple[str, ...] = ("weight",),
     tick_lane: str = "last_tick",
     now=None,
-    use_kernel: bool = False,
+    use_kernel: Optional[bool] = None,
+    plan=None,
 ) -> RegionTable:
     """Batched insert-or-accumulate of (src -> dst) pairs, region layout.
 
@@ -938,6 +940,12 @@ def region_insert_accumulate(
 
     khi_r = table.key_hi.reshape(R, W)
     klo_r = table.key_lo.reshape(R, W)
+    # kernel-vs-jnp for the chain find: legacy bool wins, else the tuned
+    # plan (``core/plan.TunedPlan``), else the jnp reference. Both paths
+    # are bit-exact, so the choice is pure dispatch.
+    if use_kernel is None:
+        use_kernel = plan.uses_kernel("chain_find") if plan is not None \
+            else False
     if use_kernel:
         from ..kernels import ops as kops
         found = kops.chain_find(khi_r, klo_r, regs, a_dst_hi, a_dst_lo,

@@ -1,3 +1,66 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the paper's hot loops, with jnp reference twins.
+
+Execution-mode policy (THE one place it is decided)
+---------------------------------------------------
+
+Every kernel in this package takes ``interpret: bool | None = None`` and
+resolves it through :func:`resolve_interpret` below: ``None`` means
+"compile for real on a native-Pallas backend (TPU), run under the Pallas
+interpreter everywhere else (CPU CI)". The per-file copies of this
+auto-detect were deduplicated here so backend selection is decided — and
+testable — in exactly one place.
+
+The interpreter is a *correctness* vehicle, not an execution strategy: on
+CPU it loses to plain jnp by 10-100x (it re-enters XLA per grid step).
+Production dispatch therefore never trusts a blind flag; it consults a
+measured :class:`repro.core.plan.TunedPlan` built by
+``repro.launch.autotune`` (see below).
+
+Kernel-dispatch table
+---------------------
+
+Hot-path call sites and the ``TunedPlan`` field each one consults::
+
+    call site                                   plan field      candidates
+    ------------------------------------------- --------------- -----------------
+    core/ranking._score_and_gate                score_gate      ops.score_gate | assoc_scores_jnp
+    core/ranking.ranking_cycle (selection)      bucket_topk     ops.bucket_topk | lax.top_k
+    core/ranking.ranking_cycle_region           region_rank     ops.region_rank | jnp score+top_k
+    core/stores.region_insert_accumulate        chain_find      ops.chain_find | _chain_find_jnp
+    core/decay.sweep_decay_prune                decay_prune     ops.decay_prune_table | jnp sweep
+    core/engine step/ingest_many dispatch       ingest_chunk    events fused per device dispatch
+    kernels/topk_select.score_gate tiling       score_block_rows tile rows per grid step
+
+Resolution order at every site: an explicit legacy ``use_kernel`` bool
+(``EngineConfig.use_kernel`` / ``RankConfig.use_kernel``) wins; otherwise
+the attached plan's choice; otherwise the jnp reference path. The
+**shape-class key** for a plan is ``repro.core.plan.shape_class(cfg)``
+(backend + device kind + log2 store capacities + cooc layout + region
+width) and tuned plans are cached on disk under
+``$REPRO_AUTOTUNE_CACHE`` (default ``~/.cache/repro-autotune``), one JSON
+per shape class. Plan choices are *result-invariant* by construction —
+the tuner only picks between paths property-tested to produce bit-exact
+engine states (tuning may change speed, never results).
+"""
+from __future__ import annotations
+
+import jax
+
+# Backends where pl.pallas_call compiles natively. Everywhere else the
+# kernels run under the Pallas interpreter (correct, but slow — see the
+# module docstring; the autotuner measures it and routes around it).
+KERNEL_NATIVE_BACKENDS = ("tpu",)
+
+
+def kernels_native(backend: str | None = None) -> bool:
+    """Is ``backend`` (default: the default jax backend) native Pallas?"""
+    b = backend if backend is not None else jax.default_backend()
+    return b in KERNEL_NATIVE_BACKENDS
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """The ONE interpret-mode auto-detect: ``None`` -> interpret everywhere
+    except a native-Pallas (TPU) backend; an explicit bool is honored."""
+    if interpret is None:
+        return not kernels_native()
+    return bool(interpret)

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import resolve_interpret
 from .decay_prune import LANE, SUBLANE, TILE, ROWS_PER_BLOCK
 
 
@@ -75,15 +76,18 @@ def _make_kernel(coefs: Tuple[float, float, float, float]):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("coefs", "interpret"))
+@functools.partial(jax.jit, static_argnames=("coefs", "interpret",
+                                             "block_rows"))
 def assoc_score(w_ab, c_ab, w_a, w_b, c_a, c_b, total_w, total_c,
                 *, coefs: Tuple[float, float, float, float],
-                interpret: bool = True) -> jax.Array:
+                interpret: bool | None = None,
+                block_rows: int | None = None) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     C = w_ab.shape[0]
     assert C % TILE == 0
     rows = C // TILE
-    blk = min(ROWS_PER_BLOCK, rows)
-    assert rows % blk == 0
+    blk = min(ROWS_PER_BLOCK if block_rows is None else block_rows, rows)
+    assert rows % blk == 0, (rows, blk)
     grid = rows // blk
     shape3 = (rows, SUBLANE, LANE)
 

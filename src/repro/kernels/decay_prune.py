@@ -32,17 +32,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import resolve_interpret
+
 LANE = 128
 SUBLANE = 8
 TILE = LANE * SUBLANE            # 1024 elements per tile
 ROWS_PER_BLOCK = 16              # 16 tiles = 16KiB f32 per lane per block
 
-
-def _resolve_interpret(interpret) -> bool:
-    """None -> interpret everywhere except a real TPU backend."""
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return bool(interpret)
+# Back-compat alias: the auto-detect now lives in kernels/__init__ (the one
+# shared copy); older call sites imported it from here.
+_resolve_interpret = resolve_interpret
 
 
 def _make_kernel(n_w: int, n_aux: int):
@@ -136,7 +135,7 @@ def decay_prune_multi(
             jax.ShapeDtypeStruct((grid,), jnp.float32),
             jax.ShapeDtypeStruct((grid,), jnp.float32),
         ],
-        interpret=_resolve_interpret(interpret),
+        interpret=resolve_interpret(interpret),
     )(f, t, view(key_hi), view(key_lo),
       *[view(w) for w in weight_lanes], *[view(a) for a in aux_lanes])
 

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import resolve_interpret
+
 PAIR_BLOCK = 128
 
 
@@ -104,8 +106,9 @@ def _make_kernel(L: int, first_char_cost: float):
 @functools.partial(jax.jit, static_argnames=("first_char_cost", "interpret"))
 def edit_distance(a_chars, a_len, b_chars, b_len, *,
                   first_char_cost: float = 1.5,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool | None = None) -> jax.Array:
     """Weighted OSA distance per pair. a_chars/b_chars u8[B, L]."""
+    interpret = resolve_interpret(interpret)
     B, L = a_chars.shape
     blk = min(PAIR_BLOCK, B)
     pad = (-B) % blk

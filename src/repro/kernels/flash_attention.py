@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import resolve_interpret
+
 NEG_INF = -1e30
 MIN_LANE = 128
 
@@ -83,8 +85,10 @@ def _make_kernel(*, bq: int, bk: int, nk: int, tq: int, tk: int,
                                     "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     scale: float | None = None, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
     """q: [B, Hq, Tq, D]; k, v: [B, Hkv, Tk, D] -> [B, Hq, Tq, D]."""
+    interpret = resolve_interpret(interpret)
     B, Hq, Tq, D = q.shape
     _, Hkv, Tk, _ = k.shape
     assert Hq % Hkv == 0

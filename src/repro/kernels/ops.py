@@ -1,8 +1,11 @@
 """Public jit'd wrappers for the Pallas kernels, with ref fallbacks.
 
-On this (CPU) container every kernel executes via ``interpret=True``; on a
-real TPU backend set ``interpret=False`` (auto-detected). The wrappers keep
-kernel-vs-oracle selection in ONE place so the engine/models just call ops.
+Execution mode is decided once, in ``kernels.resolve_interpret``: kernels
+compile for real on a native-Pallas backend (TPU) and run under the Pallas
+interpreter elsewhere (CPU CI). Whether a hot path runs its kernel *at
+all* is the ``TunedPlan``'s call (see the package docstring) — these
+wrappers keep kernel-vs-oracle shape handling in ONE place so the
+engine/models just call ops.
 """
 from __future__ import annotations
 
@@ -19,7 +22,8 @@ from . import edit_distance as _ed
 from . import flash_attention as _fa
 from . import topk_select as _tk
 
-_INTERPRET = jax.default_backend() != "tpu"
+# None = let each kernel auto-resolve via kernels.resolve_interpret.
+_INTERPRET = None
 # The blocked sweeps require 1024-multiple capacities.
 _TILE = _dp.TILE
 
@@ -58,6 +62,13 @@ def decay_prune_table(table, dticks, *, cfg, weight_lanes: Tuple[str, ...]):
             lanes[name] = w
         for name, a in zip(aux_1d, a_out):
             lanes[name] = a
+        # Recompute the scalar totals with the same jnp reductions as the
+        # reference sweep (``decay._apply_decay_prune``): the in-kernel
+        # per-block partial sums round differently, and these two scalars
+        # were the ONLY leaves breaking bit-exact kernel-vs-jnp engine
+        # parity. The lanes themselves are exact.
+        live = jnp.sum(keep.astype(jnp.int32))
+        tot = jnp.sum(lanes[primary])
     # multi-dim lanes (none in the engine stores today) still need a mask
     for name, lane in lanes.items():
         if name not in weight_lanes and lane.ndim > 1:
@@ -81,7 +92,8 @@ def score_gate(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, total_w, total_c, *,
                coefs: Tuple[float, float, float, float],
                min_pair_weight: float, min_src_weight: float,
                min_pair_count: float,
-               decay_cfg=None, last_tick=None, now=None):
+               decay_cfg=None, last_tick=None, now=None,
+               block_rows: int | None = None):
     """Fused (lazy decay +) scoring + gating — the elementwise stage of the
     segmented-top-k ranking cycle.
 
@@ -109,7 +121,8 @@ def score_gate(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, total_w, total_c, *,
                           min_pair_weight=float(min_pair_weight),
                           min_src_weight=float(min_src_weight),
                           min_pair_count=float(min_pair_count),
-                          half_life=half_life, interpret=_INTERPRET)
+                          half_life=half_life, interpret=_INTERPRET,
+                          block_rows=block_rows)
 
 
 def bucket_topk(grid, k: int):

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .decay_prune import _resolve_interpret
+from . import resolve_interpret
 
 
 def _find_kernel(W: int):
@@ -75,7 +75,7 @@ def chain_find_depth(key_hi_r: jax.Array, key_lo_r: jax.Array,
         _find_kernel(W),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
-        interpret=_resolve_interpret(interpret),
+        interpret=resolve_interpret(interpret),
     )(region_ids.astype(jnp.int32), key_hi_r, key_lo_r, dst_hi, dst_lo)
 
 

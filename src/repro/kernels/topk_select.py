@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import resolve_interpret
 from .assoc_score import score_body
 from .decay_prune import LANE, SUBLANE, TILE, ROWS_PER_BLOCK
 
@@ -73,25 +74,29 @@ def _make_kernel(coefs: Tuple[float, float, float, float],
 
 @functools.partial(jax.jit, static_argnames=(
     "coefs", "min_pair_weight", "min_src_weight", "min_pair_count",
-    "half_life", "interpret"))
+    "half_life", "interpret", "block_rows"))
 def score_gate(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, last_tick, total_w,
                total_c, now, *, coefs: Tuple[float, float, float, float],
                min_pair_weight: float, min_src_weight: float,
                min_pair_count: float, half_life: Optional[float] = None,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None,
+               block_rows: int | None = None) -> jax.Array:
     """Fused lazy-decay + association-scoring + gating over full lanes.
 
     ``half_life`` (static) enables in-kernel exponential read-time decay of
     ``w_ab`` from ``last_tick`` to ``now``; pass None when the caller
     already holds the effective pair weight (eager policy, or a non-exp
     decay pre-applied in jnp). Returns the gated combined score, ``-inf``
-    where any evidence gate fails.
+    where any evidence gate fails. ``block_rows`` overrides the tile rows
+    per grid step (a ``TunedPlan.score_block_rows`` knob — in interpret
+    mode fewer, larger blocks amortize per-step interpreter overhead).
     """
+    interpret = resolve_interpret(interpret)
     C = w_ab.shape[0]
     assert C % TILE == 0
     rows = C // TILE
-    blk = min(ROWS_PER_BLOCK, rows)
-    assert rows % blk == 0
+    blk = min(ROWS_PER_BLOCK if block_rows is None else block_rows, rows)
+    assert rows % blk == 0, (rows, blk)
     grid = rows // blk
     shape3 = (rows, SUBLANE, LANE)
 
@@ -142,7 +147,7 @@ def _make_bucket_kernel(K: int, Lp: int, Kp: int):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def bucket_topk(grid: jax.Array, k: int, *, interpret: bool = True
+def bucket_topk(grid: jax.Array, k: int, *, interpret: bool | None = None
                 ) -> Tuple[jax.Array, jax.Array]:
     """Top-k of each bucket row of ``grid`` [R, L] by K rounds of masked
     argmax — each block of bucket rows stays in VMEM for all K rounds.
@@ -151,6 +156,7 @@ def bucket_topk(grid: jax.Array, k: int, *, interpret: bool = True
     Returns (vals f32[R, k], args i32[R, k]); exhausted rounds yield
     ``-inf`` vals and the sentinel column ``Lp`` (the padded width).
     """
+    interpret = resolve_interpret(interpret)
     R, L = grid.shape
     Lp = ((max(L, 1) + LANE - 1) // LANE) * LANE
     Kp = ((max(k, 1) + LANE - 1) // LANE) * LANE
@@ -232,7 +238,7 @@ def region_rank(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, last_tick, total_w,
                 coefs: Tuple[float, float, float, float],
                 min_pair_weight: float, min_src_weight: float,
                 min_pair_count: float, half_life: Optional[float] = None,
-                interpret: bool = True
+                interpret: bool | None = None
                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Fused score+gate+top-k over the region grid: all inputs ``[R, W]``
     (source marginals pre-broadcast along W by the caller — XLA fuses the
@@ -241,6 +247,7 @@ def region_rank(w_ab, c_ab, w_a, w_b, c_a, c_b, ok, last_tick, total_w,
     npass i32[R] — gate-passing slots per region, the caller's overflow
     accounting, so no second jnp gate pass over the store is needed);
     exhausted rounds yield ``-inf`` and the padded-width sentinel."""
+    interpret = resolve_interpret(interpret)
     R, W = w_ab.shape
     Wp = ((max(W, 1) + LANE - 1) // LANE) * LANE
     Kp = ((max(k, 1) + LANE - 1) // LANE) * LANE

@@ -207,3 +207,34 @@ def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
         peak_flops=peak or PEAK_FLOPS_BF16, hbm_bw=hbm or HBM_BW,
         link_bw=link or ICI_BW_PER_LINK,
         memory_per_device=mem)
+
+
+def hot_path_roofline(name: str, *, bytes_touched: float, flops: float,
+                      measured_us: float, peak=None, hbm=None) -> Dict:
+    """Distance-to-roofline row for ONE measured hot-path op.
+
+    The tuned engine ops (``autotune.hot_path_traffic`` supplies the
+    analytic bytes/flops) are table sweeps: the hardware ceiling for each
+    is ``max(bytes/HBM_BW, flops/peak)`` — no collectives, one device.
+    ``roofline_fraction`` is ceiling-time over measured-time (1.0 = the op
+    runs as fast as the memory system allows; CPU-interpret numbers are
+    honest and small). Mirrors :meth:`Roofline.row` field names so both
+    row kinds land in the same reports.
+    """
+    from .mesh import HBM_BW, PEAK_FLOPS_BF16
+    peak = peak or PEAK_FLOPS_BF16
+    hbm = hbm or HBM_BW
+    t_mem = bytes_touched / hbm
+    t_comp = flops / peak
+    t_ceiling = max(t_mem, t_comp, 1e-30)
+    t_meas = measured_us * 1e-6
+    return {
+        "op": name,
+        "bytes_touched": bytes_touched,
+        "model_flops": flops,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_measured_s": t_meas,
+        "bottleneck": "memory" if t_mem >= t_comp else "compute",
+        "roofline_fraction": t_ceiling / max(t_meas, 1e-30),
+    }

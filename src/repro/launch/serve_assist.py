@@ -141,7 +141,13 @@ def main() -> None:
     ap.add_argument("--full-every", type=int, default=4,
                     help="state-snapshot chain: one full every N snapshots, "
                          "deltas (changed slots only) in between")
-    ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="legacy: force ALL hot paths through Pallas "
+                         "(overrides --autotune's measured plan)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure kernel-vs-jnp per hot path at startup "
+                         "(cached per backend/shape class) and run the "
+                         "winning plan")
     ap.add_argument("--slo-ms", type=float, default=0.0,
                     help="enable overload control with this per-tick step "
                          "latency SLO (0 = legacy per-tick path)")
@@ -182,9 +188,16 @@ def main() -> None:
         stream = SyntheticStream(scfg, seed=0)
         gen_tick, tok = stream.gen_tick, stream.tok
         head, head_t0 = "steve jobs", event.t_start
+    # use_kernel stays None unless the legacy flag is given — a bool here
+    # force-overrides the tuned plan at every dispatch site.
     ecfg = EngineConfig(query_capacity=1 << 14, cooc_capacity=1 << 17,
                         session_capacity=1 << 14, decay_every=6,
-                        rank_every=12, use_kernel=args.use_kernel)
+                        rank_every=12,
+                        use_kernel=True if args.use_kernel else None)
+    if args.autotune:
+        from .autotune import tune_engine_config
+        ecfg = tune_engine_config(ecfg)
+        print("[assist] tuned plan:", ecfg.plan.variants())
     if args.fleet > 0:
         _run_fleet(args, ecfg, gen_tick, head, head_t0)
         return
@@ -303,6 +316,8 @@ def main() -> None:
                 done = int(svc.rt.state.tick) - 1   # stats watermark
                 meta = {"layout": svc.rt.cfg.cooc_layout,
                         "overload": svc.overload.stats_snapshot()}
+                if svc.rt.cfg.plan is not None:   # tuned variants -> metrics
+                    meta["plan"] = svc.rt.cfg.plan.to_json()
                 if ranked:
                     meta["tick"] = done             # last reflected tick
                 elif svc.rt.last_rank_tick >= 0:
@@ -337,6 +352,8 @@ def main() -> None:
                     meta = {"tick": t, "layout": eng.cfg.cooc_layout}
                     if eng.last_maintenance:  # freelist pressure -> frontends
                         meta["maintenance"] = eng.last_maintenance
+                    if eng.cfg.plan is not None:  # tuned variants -> metrics
+                        meta["plan"] = eng.cfg.plan.to_json()
                     wrote = rt_group.persist(
                         rid, t, pack_suggestions(eng.suggestions), meta)
                     if wrote:

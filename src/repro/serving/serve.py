@@ -195,6 +195,19 @@ class SuggestFrontend:
             "store_layout": meta.get("layout"),
             "store": meta.get("maintenance"),
         }
+        # tuned kernel-dispatch plan (launch.autotune): which variant each
+        # hot path runs on the backend. Rides the snapshot meta, so a
+        # recovered backend reports the plan it actually executes;
+        # ``None`` for an untuned backend (all-jnp defaults).
+        plan = meta.get("plan")
+        out["tuned_plan"] = plan
+        out["tuned_variants"] = None
+        if plan:
+            from ..core.plan import TunedPlan
+            try:
+                out["tuned_variants"] = TunedPlan.from_json(plan).variants()
+            except (TypeError, ValueError):
+                pass                        # unknown future plan schema
         # backend overload state (streaming.overload): the controller's
         # stats ride in the snapshot meta. Surface the SLO-facing subset
         # flat (step-latency percentiles, degradation level, shed

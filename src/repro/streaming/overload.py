@@ -340,7 +340,7 @@ class OverloadController:
         fr = eng.last_maintenance.get("c_free_regions")
         if fr is None:
             return None
-        total = max(eng.cfg.cooc_capacity // eng.cfg.region_width, 1)
+        total = max(eng.cfg.cooc_capacity // eng.cfg.region_w, 1)
         return float(fr) / total
 
     # -- the live path --
